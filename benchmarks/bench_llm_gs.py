@@ -1,0 +1,95 @@
+"""Beyond-paper: the framework's own G/S hot paths through the same lens.
+
+Measures the three LLM indexed-access families (DESIGN.md §3) with the
+paper's methodology — bandwidth of useful bytes, min-of-K:
+
+  * embedding lookup (vocab-table row gather)  - xla vs pallas-interpret
+  * MoE dispatch/combine (sort-based scatter/gather)
+  * paged KV decode gather (Pallas flash-decode, interpret)
+
+And the jaxpr-trace report (paper §2 Table 1 analogue) for a smoke model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.zoo import Model
+from .harness import emit, time_fn
+
+RNG = np.random.default_rng(0)
+
+
+def bench_embedding(runs: int = 5):
+    v, d, n = 8192, 256, 4096
+    table = jnp.asarray(RNG.standard_normal((v, d)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, v, n), jnp.int32)
+    from repro.core import backends as B
+    for backend in ("xla", "onehot"):
+        fn = jax.jit(lambda t, i, b=backend: B.gather(t, i, backend=b))
+        t = time_fn(fn, table, idx, runs=runs)
+        gbs = n * d * 4 / t / 1e9
+        emit(f"llm_gs/embedding/{backend}", t * 1e6, f"{gbs:.2f}GB/s")
+    # pallas interpret: correctness-mode timing (not perf-representative)
+    from repro.kernels.gather_rows import ops as gops
+    t = time_fn(lambda: gops.gather_rows(table, idx), runs=2)
+    emit("llm_gs/embedding/pallas_interpret", t * 1e6,
+         "correctness-mode (TPU perf via roofline model)")
+
+
+def bench_moe_dispatch(runs: int = 3):
+    cfg = dataclasses.replace(get_smoke_config("deepseek-v2-236b"),
+                              dtype="float32")
+    from repro.models.moe import moe_apply, moe_defs
+    from repro.models.common import init_tree
+    p = init_tree(jax.random.PRNGKey(0), moe_defs(cfg), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((8, 64, cfg.d_model)), jnp.float32)
+    fn = jax.jit(lambda p, x: moe_apply(cfg, p, x)[0])
+    t = time_fn(fn, p, x, runs=runs)
+    tokens = 8 * 64
+    emit("llm_gs/moe_dispatch", t * 1e6,
+         f"{tokens / t:.0f} tok/s E={cfg.n_experts} k={cfg.top_k}")
+
+
+def bench_paged_decode(runs: int = 3):
+    from repro.kernels.paged_decode import ops as pops
+    b, kvh, g, dh, pages, page, pps = 4, 2, 4, 64, 64, 16, 16
+    q = jnp.asarray(RNG.standard_normal((b, kvh, g, dh)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((kvh, pages, page, dh)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((kvh, pages, page, dh)), jnp.float32)
+    pt = jnp.asarray(RNG.integers(0, pages, (b, pps)), jnp.int32)
+    ln = jnp.full((b,), page * pps, jnp.int32)
+    t = time_fn(lambda: pops.paged_decode_attention(q, kp, vp, pt, ln),
+                runs=2)
+    kv_bytes = b * kvh * pps * page * dh * 2 * 4
+    emit("llm_gs/paged_decode_interpret", t * 1e6,
+         f"gathers {kv_bytes/1e6:.1f}MB KV per step (interpret mode)")
+
+
+def bench_trace_report():
+    from repro.core import trace_gs
+    from repro.models import transformer as T
+    cfg = dataclasses.replace(get_smoke_config("deepseek-v2-236b"),
+                              dtype="float32")
+    model = Model(cfg)
+    params = model.abstract_params(jnp.float32)
+    rep = trace_gs(lambda p, t: T.forward(cfg, p, t)[0], params,
+                   jax.ShapeDtypeStruct((2, 32), jnp.int32))
+    emit("llm_gs/trace/deepseek_smoke", 0.0,
+         f"gathers={len(rep.gathers())} scatters={len(rep.scatters())} "
+         f"gs_fraction={rep.gs_fraction:.2f} (Table 1 analogue)")
+
+
+def run(runs: int = 3):
+    bench_embedding(runs)
+    bench_moe_dispatch(runs)
+    bench_paged_decode(runs)
+    bench_trace_report()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Roofline-terms bench: reads the dry-run cell JSONs (deliverable g).
+
+Emits one CSV row per (arch x shape) cell on the single-pod mesh with the
+three roofline terms and the dominant bottleneck — the `derived` column is
+the §Roofline table in benchmark form.  Requires the dry-run sweep to have
+run (experiments/dryrun/*.json); emits a pointer row if absent.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .harness import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(runs: int = 0):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__16x16.json")))
+    if not files:
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    for fn in files:
+        with open(fn) as f:
+            j = json.load(f)
+        r = j["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             max(r["t_compute_s"], r["t_memory_s"],
+                 r["t_collective_s"]) * 1e6,
+             f"comp={r['t_compute_s']:.2f}s mem={r['t_memory_s']:.2f}s "
+             f"coll={r['t_collective_s']:.2f}s dom={r['dominant']} "
+             f"frac={100*r['roofline_fraction']:.1f}% "
+             f"useful={r['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

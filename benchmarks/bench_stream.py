@@ -1,0 +1,34 @@
+"""STREAM baseline (copy/scale/add/triad) — paper Table 3's reference
+column, used by bench_app_patterns for the Table 4 Pearson correlation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .harness import emit, time_fn
+
+N = 1 << 22
+
+
+def run(runs: int = 5) -> dict:
+    a = jnp.asarray(np.random.default_rng(0).standard_normal(N), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(N), jnp.float32)
+    scalar = jnp.float32(3.0)
+    kernels = {
+        "copy": (jax.jit(lambda a, b: a + 0), 2),
+        "scale": (jax.jit(lambda a, b: scalar * a), 2),
+        "add": (jax.jit(lambda a, b: a + b), 3),
+        "triad": (jax.jit(lambda a, b: a + scalar * b), 3),
+    }
+    out = {}
+    for name, (fn, streams) in kernels.items():
+        t = time_fn(fn, a, b, runs=runs)
+        gbs = streams * N * 4 / t / 1e9
+        emit(f"stream/{name}", t * 1e6, f"{gbs:.2f}GB/s")
+        out[name] = gbs
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Paper Fig 3 / Fig 5: uniform-stride gather & scatter bandwidth sweep.
+
+Strides 1..128 (doubling), gather and scatter, measured on CPU-XLA
+(methodology reproduction) + modeled v5e via the tile model (DESIGN.md §2).
+Paper-claim check: bandwidth halves per stride doubling until the
+line/tile is exhausted (CPU cache line = 8 doubles; TPU tile = 1024 f32).
+"""
+from __future__ import annotations
+
+from repro.core import GSEngine, make_pattern
+from .harness import emit
+
+STRIDES = [1, 2, 4, 8, 16, 32, 64, 128]
+COUNT = 1 << 14
+IDX_LEN = 16       # paper §4: CPU index buffer = 16 (2-4x vector length)
+
+
+def run(runs: int = 5):
+    rows = []
+    for kind in ("gather", "scatter"):
+        for s in STRIDES:
+            p = make_pattern(f"UNIFORM:{IDX_LEN}:{s}", kind=kind,
+                             delta=IDX_LEN * s, count=COUNT,
+                             name=f"{kind}-stride-{s}")
+            r = GSEngine(p, backend="xla").run(runs=runs)
+            emit(f"uniform_stride/{kind}/s{s}", r.time_s * 1e6,
+                 f"cpu={r.measured_gbs:.2f}GB/s v5e_model="
+                 f"{r.modeled_gbs:.1f}GB/s tile_eff={r.tile_efficiency:.4f}")
+            rows.append((kind, s, r))
+    # paper-claim: halving per stride-doubling in the modeled v5e curve
+    g = {s: r.modeled_gbs for k, s, r in rows if k == "gather"}
+    for s in (1, 2, 4):
+        ratio = g[s] / max(g[2 * s], 1e-9)
+        emit(f"uniform_stride/claim/halving_s{s}_to_s{2*s}", 0.0,
+             f"ratio={ratio:.2f} (paper predicts ~2)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

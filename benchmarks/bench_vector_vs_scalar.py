@@ -1,0 +1,42 @@
+"""Paper Fig 6: % improvement of vectorized G/S over the scalar backend.
+
+The paper compares compiler-vectorized OpenMP against `#pragma novec`;
+here the vector backends are "xla" (compiler) and "onehot" (MXU matmul —
+TPU-only trick) against the fori_loop "scalar" baseline (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from repro.core import GSEngine, make_pattern
+from .harness import emit
+
+STRIDES = [1, 4, 16, 64]
+COUNT = 1 << 10       # scalar loop is slow; keep the sweep honest but small
+ONEHOT_COUNT = 128    # one-hot materializes (N, footprint); keep it small
+
+
+def run(runs: int = 3):
+    out = []
+    for kind in ("gather", "scatter"):
+        for s in STRIDES:
+            res = {}
+            for backend in ("scalar", "xla", "onehot"):
+                count = ONEHOT_COUNT if backend == "onehot" else COUNT
+                p = make_pattern(f"UNIFORM:16:{s}", kind=kind,
+                                 delta=16 * s, count=count,
+                                 name=f"vs-{kind}-s{s}")
+                try:
+                    res[backend] = GSEngine(p, backend=backend).run(
+                        runs=runs).measured_gbs
+                except ValueError:
+                    res[backend] = float("nan")
+            for vec in ("xla", "onehot"):
+                imp = 100.0 * (res[vec] - res["scalar"]) / res["scalar"]
+                emit(f"vector_vs_scalar/{kind}/{vec}/s{s}", 0.0,
+                     f"improvement={imp:+.0f}% "
+                     f"({res[vec]:.2f} vs {res['scalar']:.2f} GB/s)")
+            out.append((kind, s, res))
+    return out
+
+
+if __name__ == "__main__":
+    run()

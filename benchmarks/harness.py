@@ -1,0 +1,25 @@
+"""Shared benchmark harness: paper-style timing + CSV emission."""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+
+def time_fn(fn, *args, runs: int = 10, warmup: int = 1) -> float:
+    """Paper §3.5: minimum time over ``runs`` executions (seconds)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """One CSV row: name,us_per_call,derived  (benchmarks/run.py contract)."""
+    print(f"{name},{us_per_call:.2f},{derived}")
+    sys.stdout.flush()

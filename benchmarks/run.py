@@ -1,0 +1,53 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §7):
+    Fig 3/5  -> bench_uniform_stride     Table 4 -> bench_app_patterns
+    Fig 4    -> bench_prefetch           Table 3 STREAM -> bench_stream
+    Fig 6    -> bench_vector_vs_scalar   beyond-paper   -> bench_llm_gs
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing repetitions")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench by name")
+    args = ap.parse_args()
+    runs = 3 if args.quick else 5
+
+    from . import (bench_app_patterns, bench_llm_gs, bench_prefetch,
+                   bench_roofline, bench_stream, bench_uniform_stride,
+                   bench_vector_vs_scalar)
+    benches = {
+        "stream": lambda: bench_stream.run(runs=runs),
+        "uniform_stride": lambda: bench_uniform_stride.run(runs=runs),
+        "prefetch": lambda: bench_prefetch.run(runs=runs),
+        "vector_vs_scalar": lambda: bench_vector_vs_scalar.run(runs=runs),
+        "app_patterns": lambda: bench_app_patterns.run(runs=runs),
+        "llm_gs": lambda: bench_llm_gs.run(runs=runs),
+        "roofline": lambda: bench_roofline.run(runs=runs),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:      # report, keep the suite running
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

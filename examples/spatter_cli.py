@@ -1,0 +1,64 @@
+"""The paper's CLI, reproduced (§3.4):
+
+    ./spatter -k Gather -p UNIFORM:8:1 -d 8 -l $((2**24))
+becomes
+    PYTHONPATH=src python examples/spatter_cli.py -k Gather -p UNIFORM:8:1 \
+        -d 8 -l 65536 [-b xla|onehot|scalar|pallas] [--json suites/x.json]
+
+Prints the paper's outputs (min-time bandwidth) plus the TPU-model columns
+(modeled v5e GB/s, tile efficiency, reuse factor).
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core import GSEngine, load_suite, make_pattern, run_suite
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("-k", "--kernel", default="Gather",
+                    choices=["Gather", "Scatter", "gather", "scatter"])
+    ap.add_argument("-p", "--pattern", default="UNIFORM:8:1",
+                    help="UNIFORM:N:S | MS1:N:B:G | LAPLACIAN:D:L:S | "
+                         "BROADCAST:N:R | i0,i1,...")
+    ap.add_argument("-d", "--delta", type=int, default=8)
+    ap.add_argument("-l", "--count", type=int, default=1 << 16)
+    ap.add_argument("-b", "--backend", default="xla",
+                    choices=["xla", "onehot", "scalar", "pallas"])
+    ap.add_argument("-r", "--runs", type=int, default=10,
+                    help="min-of-K timing (paper §3.5, default 10)")
+    ap.add_argument("--row-width", type=int, default=1,
+                    help="TPU row granularity (1 = paper's scalar element)")
+    ap.add_argument("--json", default=None,
+                    help="run a JSON suite file instead (paper §3.3)")
+    args = ap.parse_args()
+
+    if args.json:
+        stats = run_suite(load_suite(args.json), backend=args.backend,
+                          runs=args.runs, row_width=args.row_width)
+        print(f"{'name':24s} {'type':16s} {'cpu GB/s':>9s} {'v5e GB/s':>9s} "
+              f"{'tile_eff':>8s}")
+        for r in stats.results:
+            print(f"{r.pattern.name:24s} {r.pattern.classify():16s} "
+                  f"{r.measured_gbs:9.2f} {r.modeled_gbs:9.1f} "
+                  f"{r.tile_efficiency:8.3f}")
+        print(f"\nsuite: min {stats.min_gbs:.2f}  max {stats.max_gbs:.2f}  "
+              f"harmonic-mean {stats.hmean_gbs:.2f} GB/s   (paper §3.5)")
+        return
+
+    p = make_pattern(args.pattern, kind=args.kernel.lower(),
+                     delta=args.delta, count=args.count)
+    print(f"pattern  : {list(p.index)}")
+    print(f"type     : {p.classify()}   delta={p.delta}  count={p.count}")
+    print(f"footprint: {p.footprint()} elems   reuse={p.reuse_factor():.2f}x")
+    r = GSEngine(p, backend=args.backend,
+                 row_width=args.row_width).run(runs=args.runs)
+    print(f"time     : {r.time_s*1e6:.1f} us (min of {args.runs})")
+    print(f"bandwidth: {r.measured_gbs:.2f} GB/s measured(cpu)   "
+          f"{r.modeled_gbs:.1f} GB/s modeled(v5e)   "
+          f"tile_eff={r.tile_efficiency:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Extract Spatter patterns from a real model — the paper's §2 for JAX.
+
+The paper traced DoE mini-apps through an instrumented QEMU to harvest
+gather/scatter patterns (Table 5).  Here we trace an LLM's jaxpr instead:
+every gather/scatter/dynamic-slice primitive is harvested with its byte
+volume (Table 1's "G/S MB (%)" column) and distilled into replayable
+patterns.
+
+    PYTHONPATH=src python examples/trace_model_patterns.py [arch]
+"""
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import dump_suite, run_suite, trace_gs
+from repro.models import transformer as T
+from repro.models.zoo import Model
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "deepseek-v2-236b"
+cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+model = Model(cfg)
+params = model.abstract_params(jnp.float32)
+
+print(f"=== tracing {cfg.arch_id} (reduced config) forward pass ===")
+report = trace_gs(lambda p, t: T.forward(cfg, p, t)[0],
+                  params, jax.ShapeDtypeStruct((2, 64), jnp.int32))
+print(report.summary())
+
+print("\n=== distilled Spatter patterns (replayable) ===")
+patterns = report.to_patterns()[:6]
+print(dump_suite(patterns))
+
+print("\n=== replaying them through the engine ===")
+stats = run_suite(patterns, runs=2)
+for r in stats.results:
+    print(f"{r.pattern.name:24s} rows={r.pattern.count:<8} "
+          f"row_elems={r.pattern.index_len:<6} {r.measured_gbs:6.2f} GB/s")

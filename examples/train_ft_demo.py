@@ -1,0 +1,66 @@
+"""Fault-tolerance demo: train, checkpoint, crash, resume — end to end.
+
+    PYTHONPATH=src python examples/train_ft_demo.py
+
+Trains a tiny llama3-family LM on the synthetic pipeline, simulates a node
+failure mid-run (a raised exception), and shows the supervisor restoring
+from the latest async checkpoint and continuing to a lower loss.
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import TokenPipeline
+from repro.models.zoo import Model
+from repro.optim import AdamWConfig, init_opt_state, warmup_cosine
+from repro.runtime.supervisor import SupervisorConfig, TrainSupervisor
+from repro.runtime.train import make_train_step
+
+STEPS = 60
+cfg = dataclasses.replace(get_smoke_config("llama3-8b"), dtype="float32",
+                          remat="none")
+model = Model(cfg)
+pipe = TokenPipeline(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+opt_cfg = AdamWConfig(lr=warmup_cosine(3e-3, warmup=5, total=STEPS),
+                      weight_decay=0.0)
+core = jax.jit(make_train_step(model, opt_cfg))
+crash = {"armed": True}
+
+
+def build(ckpt):
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    start = ckpt.latest_step() or 0
+    if start:
+        like = {"params": params, "opt": opt}
+        restored = ckpt.restore(start, like)
+        params, opt = restored["params"], restored["opt"]
+        print(f"--- restored from checkpoint step {start} ---")
+
+    def step_fn(state, i):
+        if i == 25 and crash["armed"]:
+            crash["armed"] = False
+            raise RuntimeError("simulated node failure at step 25")
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+        p, o, m = core(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, m
+
+    return {"params": params, "opt": opt}, step_fn, start
+
+
+with tempfile.TemporaryDirectory() as d:
+    sup = TrainSupervisor(SupervisorConfig(ckpt_dir=d, ckpt_every=10,
+                                           max_restarts=2))
+    sup.run(build, STEPS)
+    losses = [s.loss for s in sup.stats]
+    print(f"\nfirst-5 loss {np.mean(losses[:5]):.3f} -> "
+          f"last-5 loss {np.mean(losses[-5:]):.3f} "
+          f"(crash + restore happened mid-run; stragglers logged: "
+          f"{len(sup.straggler_events)})")
+    sup.ckpt.close()
+assert np.mean(losses[-5:]) < np.mean(losses[:5]), "did not learn"
+print("FT demo OK")

@@ -1,0 +1,7 @@
+"""Spatter-JAX: gather/scatter-centric training & serving framework for TPU.
+
+Reproduction of "Spatter: A Tool for Evaluating Gather / Scatter
+Performance" (Lavin et al.), adapted to TPU and integrated as the indexed-
+access substrate of a multi-pod LLM training/serving framework.
+"""
+__version__ = "0.1.0"

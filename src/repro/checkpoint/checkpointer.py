@@ -1,0 +1,188 @@
+"""Fault-tolerant checkpointing: atomic, async, topology-agnostic.
+
+Design (DESIGN.md §5):
+  * device-agnostic layout: every leaf is saved as a host numpy array under
+    a stable tree path — restore works on a *different* mesh shape (elastic
+    restart) because shardings are re-derived from logical rules at load.
+  * atomic: write to step_NNNNNN.tmp/, fsync, rename — a crash mid-save
+    never corrupts the latest checkpoint.
+  * async: a writer thread snapshots (device_get) synchronously (cheap on
+    host RAM) and writes in the background, overlapping I/O with compute.
+  * retention: keep_n newest checkpoints are kept, older ones pruned.
+
+The format is a directory of .npy files + a JSON manifest of tree paths —
+no pickle, no framework lock-in, greppable on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't cast to/from ml_dtypes types it didn't create; store them as
+# same-width unsigned views and reconstruct via the manifest dtype.
+_VIEW_SAVE = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+              "float8_e5m2": np.uint8}
+_VIEW_LOAD = {"bfloat16": ml_dtypes.bfloat16,
+              "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+              "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class Checkpointer:
+    """Synchronous core: save/restore one pytree atomically."""
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def save(self, step: int, tree) -> str:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {}
+        for key, leaf in _flatten_with_paths(tree):
+            arr = np.asarray(jax.device_get(leaf))
+            dtype_name = str(arr.dtype)
+            if dtype_name in _VIEW_SAVE:
+                arr = arr.view(_VIEW_SAVE[dtype_name])
+            fname = f"{len(manifest):06d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest[key] = {"file": fname, "shape": list(arr.shape),
+                             "dtype": dtype_name}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f, indent=2)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic on POSIX
+        return final
+
+    def latest_step(self) -> int | None:
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    steps.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return max(steps) if steps else None
+
+    def restore(self, step: int, like_tree, shardings=None):
+        """Restore into the structure of ``like_tree``.
+
+        ``shardings``: optional matching tree of NamedShardings — leaves are
+        device_put with them (this is what makes restore elastic: the target
+        mesh can differ from the mesh that saved).
+        """
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)["leaves"]
+        flat_like = _flatten_with_paths(like_tree)
+        leaves = []
+        for key, like_leaf in flat_like:
+            if key not in manifest:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = np.load(os.path.join(d, manifest[key]["file"]))
+            saved_dtype = manifest[key]["dtype"]
+            if saved_dtype in _VIEW_LOAD:
+                arr = arr.view(_VIEW_LOAD[saved_dtype])
+            if tuple(arr.shape) != tuple(like_leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"model {like_leaf.shape}")
+            leaves.append(arr.astype(like_leaf.dtype))
+        treedef = jax.tree.structure(like_tree)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+    def prune(self, keep_n: int):
+        steps = sorted(s for s in (self.latest_step(),) if s is not None)
+        all_steps = sorted(
+            int(d[5:]) for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in all_steps[:-keep_n]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+
+class CheckpointManager:
+    """Async wrapper: snapshot on the caller thread, write on a worker."""
+
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.ckpt = Checkpointer(directory)
+        self.keep_n = keep_n
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._err: Exception | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                self.ckpt.save(step, tree)
+                self.ckpt.prune(self.keep_n)
+            except Exception as e:      # surfaced on next save()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save_async(self, step: int, tree):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+        # snapshot now (device_get) so training can mutate donated buffers
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10)
+
+    # passthroughs
+    def latest_step(self):
+        return self.ckpt.latest_step()
+
+    def restore(self, step, like_tree, shardings=None):
+        return self.ckpt.restore(step, like_tree, shardings)

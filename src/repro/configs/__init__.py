@@ -1,0 +1,11 @@
+"""Architecture configs. One module per assigned architecture.
+
+``get_config(arch_id)`` returns the full published config;
+``get_smoke_config(arch_id)`` returns a reduced same-family config for
+CPU smoke tests (small layers/width/experts/vocab).
+"""
+from .base import ModelConfig, SHAPES, ShapeConfig, get_config, \
+    get_smoke_config, ARCH_IDS, shape_skips
+
+__all__ = ["ModelConfig", "SHAPES", "ShapeConfig", "get_config",
+           "get_smoke_config", "ARCH_IDS", "shape_skips"]

@@ -1,0 +1,29 @@
+"""repro.core — Spatter's contribution as a composable JAX module.
+
+Public API:
+    Pattern, make_pattern, generate_index, load_suite   (pattern language)
+    GSEngine, RunResult                                 (executable patterns)
+    run_suite, stream_reference, harmonic_mean, pearson_r
+    gather, scatter                                     (backend dispatch)
+    trace_gs                                            (jaxpr G/S extraction)
+    appdb                                               (paper Table 5)
+"""
+from .pattern import (Pattern, make_pattern, generate_index, load_suite,
+                      dump_suite, uniform, ms1, laplacian, broadcast)
+from .backends import gather, scatter, BACKENDS
+from .engine import GSEngine, RunResult
+from .suite import run_suite, run_suite_file, stream_reference, \
+    harmonic_mean, pearson_r, SuiteStats
+from .tracing import trace_gs, TraceReport, TracedAccess
+from . import appdb, bandwidth
+
+__all__ = [
+    "Pattern", "make_pattern", "generate_index", "load_suite", "dump_suite",
+    "uniform", "ms1", "laplacian", "broadcast",
+    "gather", "scatter", "BACKENDS",
+    "GSEngine", "RunResult",
+    "run_suite", "run_suite_file", "stream_reference", "harmonic_mean",
+    "pearson_r", "SuiteStats",
+    "trace_gs", "TraceReport", "TracedAccess",
+    "appdb", "bandwidth",
+]

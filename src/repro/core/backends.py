@@ -1,0 +1,186 @@
+"""Gather / scatter backends — the TPU adaptation of Spatter's backend set.
+
+Paper backends -> this repo (DESIGN.md §2):
+
+    OpenMP (compiler-vectorized)  ->  "xla"     jnp.take / .at[] — XLA's native
+                                               gather/scatter lowering, i.e. what
+                                               "the compiler" does with the access.
+    CUDA (shared-mem index buf)   ->  "pallas"  explicit scalar-prefetch DMA kernel
+                                               (index buffer in SMEM drives the DMA).
+    Scalar (#pragma novec)        ->  "scalar"  lax.fori_loop of dynamic_slice,
+                                               one row per step — the no-vector
+                                               baseline.
+    (no analogue on CPU/GPU)      ->  "onehot"  gather as one-hot MXU matmul — the
+                                               TPU-only trick of turning data
+                                               movement into dense compute.
+
+All backends share one contract:
+
+    gather(src, idx)            src: (F, R) table, idx: (N,) int32 -> (N, R)
+    scatter(dst, idx, vals)     vals: (N, R) -> dst' (F, R); mode "store"|"add"
+
+The *row* (R) is the TPU element unit (DESIGN.md §2): Spatter's 8-byte double
+becomes a lane-aligned row here.  R=1 recovers the paper's scalar semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+BACKENDS = ("xla", "onehot", "scalar", "pallas")
+
+# Guard for the one-hot backend: a (N, F) one-hot with F beyond this is a
+# mistake, not a benchmark (it would build a >2^31-element intermediate).
+_ONEHOT_MAX_FOOTPRINT = 1 << 22
+
+
+# ---------------------------------------------------------------------------
+# Gather
+# ---------------------------------------------------------------------------
+
+def gather_xla(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """XLA-native gather — what the compiler emits for indexed loads."""
+    return jnp.take(src, idx, axis=0)
+
+
+def gather_onehot(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather as one-hot matmul: out = onehot(idx) @ src.  MXU-resident on TPU."""
+    f = src.shape[0]
+    if f > _ONEHOT_MAX_FOOTPRINT:
+        raise ValueError(f"onehot backend: footprint {f} too large")
+    oh = jax.nn.one_hot(idx, f, dtype=src.dtype)
+    return oh @ src
+
+
+def gather_scalar(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """One row per loop step — the paper's non-vectorized Scalar backend."""
+    n = idx.shape[0]
+    r = src.shape[1]
+    out = jnp.zeros((n, r), dtype=src.dtype)
+
+    def body(i, out):
+        row = lax.dynamic_slice(src, (idx[i], 0), (1, r))
+        return lax.dynamic_update_slice(out, row, (i, 0))
+
+    return lax.fori_loop(0, n, body, out)
+
+
+def gather_pallas(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """Scalar-prefetch DMA gather (Pallas TPU kernel, interpret=True on CPU)."""
+    from repro.kernels.gather_rows import ops as gather_ops
+    return gather_ops.gather_rows(src, idx)
+
+
+# ---------------------------------------------------------------------------
+# Scatter
+# ---------------------------------------------------------------------------
+
+def _dedup_keep_last(idx: jax.Array, vals: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mask out all but the last occurrence of each duplicate index.
+
+    Gives deterministic last-write-wins store semantics on every backend
+    (the paper's parallel scatter leaves duplicate order unspecified; we pin
+    it down so backends are cross-checkable).
+    """
+    n = idx.shape[0]
+    positions = jnp.arange(n, dtype=jnp.int32)
+    # last position at which each index value occurs
+    last_pos = jnp.full((n,), -1, dtype=jnp.int32)
+    # segment_max over idx as segment ids is unbounded; instead compare pairwise
+    # via sort: sort by (idx, pos); the last element of each run wins.
+    order = jnp.lexsort((positions, idx))
+    sidx = idx[order]
+    is_last = jnp.concatenate([sidx[1:] != sidx[:-1], jnp.ones((1,), bool)])
+    keep = jnp.zeros((n,), bool).at[order].set(is_last)
+    del last_pos
+    return keep, order
+
+
+def scatter_xla(dst: jax.Array, idx: jax.Array, vals: jax.Array,
+                mode: str = "store") -> jax.Array:
+    if mode == "add":
+        return dst.at[idx].add(vals)
+    keep, _ = _dedup_keep_last(idx, vals)
+    # route dropped writes to a scratch row one past the end
+    f = dst.shape[0]
+    padded = jnp.concatenate([dst, jnp.zeros((1, dst.shape[1]), dst.dtype)])
+    safe_idx = jnp.where(keep, idx, f)
+    return padded.at[safe_idx].set(vals)[:f]
+
+
+def scatter_onehot(dst: jax.Array, idx: jax.Array, vals: jax.Array,
+                   mode: str = "store") -> jax.Array:
+    f = dst.shape[0]
+    if f > _ONEHOT_MAX_FOOTPRINT:
+        raise ValueError(f"onehot backend: footprint {f} too large")
+    if mode == "add":
+        oh = jax.nn.one_hot(idx, f, dtype=vals.dtype)      # (N, F)
+        return dst + oh.T @ vals
+    keep, _ = _dedup_keep_last(idx, vals)
+    oh = jax.nn.one_hot(idx, f, dtype=vals.dtype) * keep[:, None].astype(vals.dtype)
+    covered = jnp.clip(oh.sum(axis=0), 0, 1)[:, None]      # (F, 1) in {0,1}
+    return dst * (1 - covered) + oh.T @ vals
+
+
+def scatter_scalar(dst: jax.Array, idx: jax.Array, vals: jax.Array,
+                   mode: str = "store") -> jax.Array:
+    n = idx.shape[0]
+    r = dst.shape[1]
+
+    def body(i, dst):
+        row = lax.dynamic_slice(vals, (i, 0), (1, r))
+        if mode == "add":
+            cur = lax.dynamic_slice(dst, (idx[i], 0), (1, r))
+            row = row + cur
+        return lax.dynamic_update_slice(dst, row, (idx[i], 0))
+
+    return lax.fori_loop(0, n, body, dst)
+
+
+def scatter_pallas(dst: jax.Array, idx: jax.Array, vals: jax.Array,
+                   mode: str = "store") -> jax.Array:
+    from repro.kernels.scatter_rows import ops as scatter_ops
+    if mode == "add":
+        return dst + scatter_ops.scatter_add_rows(idx, vals, dst.shape[0])
+    # store semantics: dedup then delegate to the add kernel on a zero base,
+    # masking covered rows.
+    keep, _ = _dedup_keep_last(idx, vals)
+    zeros = jnp.zeros_like(vals)
+    masked_vals = jnp.where(keep[:, None], vals, zeros)
+    written = scatter_ops.scatter_add_rows(idx, masked_vals, dst.shape[0])
+    ones = jnp.where(keep[:, None], jnp.ones_like(vals[:, :1]), zeros[:, :1])
+    covered = jnp.clip(
+        scatter_ops.scatter_add_rows(idx, ones, dst.shape[0]), 0, 1)
+    return dst * (1 - covered) + written
+
+
+# ---------------------------------------------------------------------------
+# Dispatch tables
+# ---------------------------------------------------------------------------
+
+GATHER_FNS: dict[str, Callable] = {
+    "xla": gather_xla,
+    "onehot": gather_onehot,
+    "scalar": gather_scalar,
+    "pallas": gather_pallas,
+}
+
+SCATTER_FNS: dict[str, Callable] = {
+    "xla": scatter_xla,
+    "onehot": scatter_onehot,
+    "scalar": scatter_scalar,
+    "pallas": scatter_pallas,
+}
+
+
+def gather(src: jax.Array, idx: jax.Array, *, backend: str = "xla") -> jax.Array:
+    return GATHER_FNS[backend](src, idx)
+
+
+def scatter(dst: jax.Array, idx: jax.Array, vals: jax.Array, *,
+            mode: str = "store", backend: str = "xla") -> jax.Array:
+    return SCATTER_FNS[backend](dst, idx, vals, mode)

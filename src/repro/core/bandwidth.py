@@ -1,0 +1,124 @@
+"""Bandwidth accounting — the paper's §3.5 formula plus a TPU tile model.
+
+Paper formula (useful-bytes rate; cache reuse allowed):
+
+    BW = sizeof(elem) * len(index) * count / time
+
+On this CPU-only container we report two numbers for every run and label
+them explicitly (DESIGN.md §9):
+
+  * ``measured(cpu)``  — the paper formula over measured XLA-CPU wall time.
+  * ``modeled(v5e)``   — the paper formula over *modeled* TPU time from the
+    tile-traffic model below.  The TPU moves HBM<->VMEM in (8,128) tiles, so
+    a 1D element buffer is fetched in runs of ``tile_bytes`` contiguous
+    bytes; "tile efficiency" (useful/fetched) plays the cache-line-
+    utilization role of paper Fig 3, and a VMEM-capacity LRU plays the role
+    of the L2/L3 cache that lets app patterns beat STREAM (paper Table 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+from .pattern import Pattern
+
+# --- TPU v5e hardware constants (also used by launch/roofline.py) ----------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+VMEM_BYTES = 64 * 1024 * 1024     # usable VMEM working set (model parameter)
+VMEM_BW = 11e12                   # VMEM streaming bandwidth (model parameter)
+TILE_BYTES = 8 * 128 * 4          # one (8,128) f32 tile = 4 KiB
+
+
+def useful_bytes(p: Pattern, elem_bytes: int) -> int:
+    """Paper §3.5 numerator: data actually requested."""
+    return p.index_len * p.count * elem_bytes
+
+
+def paper_bandwidth(p: Pattern, time_s: float, elem_bytes: int) -> float:
+    """The paper's bandwidth formula, in bytes/s."""
+    return useful_bytes(p, elem_bytes) / time_s
+
+
+@dataclasses.dataclass(frozen=True)
+class TileModelResult:
+    useful_bytes: int
+    fetched_bytes: int            # HBM traffic after VMEM-LRU filtering
+    tile_efficiency: float        # useful / fetched (<= 1 unless reuse)
+    hbm_time_s: float
+    vmem_time_s: float
+    modeled_time_s: float         # max of the two (simple roofline)
+    modeled_gbs: float            # paper-formula bandwidth over modeled time
+
+
+def tpu_tile_model(p: Pattern, elem_bytes: int, *, sim_ops: int = 256,
+                   tile_bytes: int = TILE_BYTES,
+                   vmem_bytes: int = VMEM_BYTES) -> TileModelResult:
+    """Count HBM tile traffic for a pattern under a VMEM-capacity LRU.
+
+    Simulates ``min(count, sim_ops)`` consecutive G/S ops exactly and
+    extrapolates linearly (patterns are periodic in the base address, so the
+    steady-state per-op traffic converges within a few ops).
+    """
+    elems_per_tile = max(1, tile_bytes // elem_bytes)
+    n_sim = min(p.count, sim_ops)
+    idx = np.asarray(p.index, dtype=np.int64)
+
+    cache: OrderedDict[int, None] = OrderedDict()
+    capacity = max(1, vmem_bytes // tile_bytes)
+    fetched_tiles = 0
+    # warm-up ops are simulated too; steady state dominates for big counts
+    for i in range(n_sim):
+        tiles = np.unique((p.delta * i + idx) // elems_per_tile)
+        for t in tiles.tolist():
+            if t in cache:
+                cache.move_to_end(t)
+            else:
+                fetched_tiles += 1
+                cache[t] = None
+                if len(cache) > capacity:
+                    cache.popitem(last=False)
+
+    per_op = fetched_tiles / n_sim
+    total_fetched = int(per_op * p.count) * tile_bytes
+    useful = useful_bytes(p, elem_bytes)
+    hbm_t = total_fetched / HBM_BW
+    vmem_t = useful / VMEM_BW
+    modeled_t = max(hbm_t, vmem_t, 1e-30)
+    return TileModelResult(
+        useful_bytes=useful,
+        fetched_bytes=total_fetched,
+        tile_efficiency=useful / max(1, total_fetched),
+        hbm_time_s=hbm_t,
+        vmem_time_s=vmem_t,
+        modeled_time_s=modeled_t,
+        modeled_gbs=useful / modeled_t / 1e9,
+    )
+
+
+def pipeline_model(p: Pattern, elem_bytes: int, *, buffers: int = 2,
+                   dma_latency_s: float = 2e-6) -> dict:
+    """Paper Fig 4 analogue: Pallas pipeline multi-buffering on/off.
+
+    With ``buffers>=2`` DMA issue overlaps compute/copy (prefetch ON); with
+    ``buffers==1`` every block waits out the full DMA latency (prefetch
+    OFF).  Returns modeled times for both the bandwidth and latency terms.
+    """
+    tm = tpu_tile_model(p, elem_bytes)
+    n_blocks = p.count                      # one G/S op per grid step
+    bw_time = tm.hbm_time_s
+    lat_time = n_blocks * dma_latency_s
+    if buffers >= 2:
+        total = max(bw_time, tm.vmem_time_s) + dma_latency_s  # overlapped
+    else:
+        total = bw_time + lat_time + tm.vmem_time_s           # serialized
+    return {
+        "buffers": buffers,
+        "modeled_time_s": total,
+        "modeled_gbs": tm.useful_bytes / total / 1e9,
+        "bw_time_s": bw_time,
+        "latency_time_s": lat_time if buffers < 2 else dma_latency_s,
+    }

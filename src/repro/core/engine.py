@@ -1,0 +1,180 @@
+"""GSEngine — pattern -> executable gather/scatter, with paper-style timing.
+
+The engine materializes a Pattern's absolute indices, builds the requested
+backend's jitted callable, and times it the way the paper does: minimum
+over K runs (§3.5), reporting the paper's useful-bytes bandwidth alongside
+the modeled v5e number (bandwidth.py).
+
+Sharding: the count dimension is the paper's OpenMP-thread / CUDA-block
+dimension; ``sharded()`` splits it over a mesh axis with shard_map, each
+shard gathering into its own output block (no false sharing by
+construction — paper §3.1's per-thread dst buffers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import backends as B
+from . import bandwidth as bw
+from .pattern import Pattern
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    pattern: Pattern
+    backend: str
+    elem_bytes: int
+    row_width: int
+    runs: int
+    time_s: float                 # min over runs (paper §3.5)
+    measured_gbs: float           # paper formula over measured CPU time
+    modeled_gbs: float            # paper formula over modeled v5e time
+    tile_efficiency: float
+
+    def row(self) -> dict:
+        return {
+            "name": self.pattern.name,
+            "kind": self.pattern.kind,
+            "type": self.pattern.classify(),
+            "backend": self.backend,
+            "delta": self.pattern.delta,
+            "idx_len": self.pattern.index_len,
+            "count": self.pattern.count,
+            "time_s": self.time_s,
+            "measured_cpu_gbs": self.measured_gbs,
+            "modeled_v5e_gbs": self.modeled_gbs,
+            "tile_eff": self.tile_efficiency,
+        }
+
+
+class GSEngine:
+    """Executable form of one Spatter pattern."""
+
+    def __init__(self, pattern: Pattern, *, backend: str = "xla",
+                 dtype=jnp.float32, row_width: int = 1, seed: int = 0):
+        if backend not in B.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        self.pattern = pattern
+        self.backend = backend
+        self.dtype = jnp.dtype(dtype)
+        self.row_width = row_width
+        self._rng = np.random.default_rng(seed)
+        self._abs_idx = pattern.absolute_indices().reshape(-1)   # (count*L,)
+        self._built = None
+
+    # -- buffers -------------------------------------------------------------
+    @property
+    def elem_bytes(self) -> int:
+        return self.dtype.itemsize * self.row_width
+
+    def footprint_shape(self) -> tuple[int, int]:
+        return (self.pattern.footprint(), self.row_width)
+
+    def make_buffers(self):
+        f, r = self.footprint_shape()
+        n = self._abs_idx.shape[0]
+        src = jnp.asarray(
+            self._rng.standard_normal((f, r), dtype=np.float32), self.dtype)
+        idx = jnp.asarray(self._abs_idx, jnp.int32)
+        if self.pattern.kind == "gather":
+            return src, idx, None
+        vals = jnp.asarray(
+            self._rng.standard_normal((n, r), dtype=np.float32), self.dtype)
+        dst = jnp.zeros((f, r), self.dtype)
+        return dst, idx, vals
+
+    # -- executables ---------------------------------------------------------
+    def build(self):
+        """Returns (fn, args) where fn(*args) performs the whole pattern."""
+        if self._built is not None:
+            return self._built
+        backend = self.backend
+        if self.pattern.kind == "gather":
+            src, idx, _ = self.make_buffers()
+
+            @jax.jit
+            def fn(src, idx):
+                return B.gather(src, idx, backend=backend)
+
+            self._built = (fn, (src, idx))
+        else:
+            dst, idx, vals = self.make_buffers()
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def fn(dst, idx, vals):
+                return B.scatter(dst, idx, vals, mode="store", backend=backend)
+
+            self._built = (fn, (dst, idx, vals))
+        return self._built
+
+    def sharded(self, mesh: Mesh, axis: str = "data"):
+        """Shard the count dimension over ``axis`` (paper's thread dim)."""
+        fn, args = self.build()
+        n_shards = mesh.shape[axis]
+        total = self._abs_idx.shape[0]
+        if total % n_shards:
+            raise ValueError(f"count*index_len={total} not divisible by "
+                             f"{n_shards} shards")
+        if self.pattern.kind == "gather":
+            in_shardings = (NamedSharding(mesh, P()),          # src replicated
+                            NamedSharding(mesh, P(axis)))      # idx sharded
+            out_shardings = NamedSharding(mesh, P(axis))
+        else:
+            in_shardings = (NamedSharding(mesh, P()),          # dst
+                            NamedSharding(mesh, P(axis)),      # idx
+                            NamedSharding(mesh, P(axis)))      # vals
+            out_shardings = NamedSharding(mesh, P())
+        backend = self.backend
+        if self.pattern.kind == "gather":
+            def raw(src, idx):
+                return B.gather(src, idx, backend=backend)
+        else:
+            def raw(dst, idx, vals):
+                return B.scatter(dst, idx, vals, mode="add", backend=backend)
+        sharded_fn = jax.jit(raw, in_shardings=in_shardings,
+                             out_shardings=out_shardings)
+        return sharded_fn, args
+
+    # -- paper-style timing ---------------------------------------------------
+    def run(self, runs: int = 10) -> RunResult:
+        fn, args = self.build()
+        if self.pattern.kind == "scatter":
+            # donation consumes dst; rebuild per run
+            dst, idx, vals = args
+            out = fn(dst, idx, vals)
+            jax.block_until_ready(out)          # compile & warm
+            times = []
+            for _ in range(runs):
+                d = jnp.zeros_like(out)
+                jax.block_until_ready(d)
+                t0 = time.perf_counter()
+                out = fn(d, idx, vals)
+                jax.block_until_ready(out)
+                times.append(time.perf_counter() - t0)
+        else:
+            out = fn(*args)
+            jax.block_until_ready(out)
+            times = []
+            for _ in range(runs):
+                t0 = time.perf_counter()
+                out = fn(*args)
+                jax.block_until_ready(out)
+                times.append(time.perf_counter() - t0)
+        t = min(times)                           # paper §3.5: min of K
+        tm = bw.tpu_tile_model(self.pattern, self.elem_bytes)
+        return RunResult(
+            pattern=self.pattern, backend=self.backend,
+            elem_bytes=self.elem_bytes, row_width=self.row_width,
+            runs=runs, time_s=t,
+            measured_gbs=bw.paper_bandwidth(self.pattern, t,
+                                            self.elem_bytes) / 1e9,
+            modeled_gbs=tm.modeled_gbs,
+            tile_efficiency=tm.tile_efficiency,
+        )

@@ -1,0 +1,72 @@
+"""Multi-pattern suite runner — the paper's JSON-input mode (§3.3, §3.5).
+
+Runs many patterns through GSEngine, then reports the aggregate stats the
+paper reports: per-pattern bandwidths, suite min/max, harmonic mean, and
+Pearson's R against a STREAM-like reference (paper Eq. 1 / Table 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .engine import GSEngine, RunResult
+from .pattern import Pattern, load_suite, make_pattern
+
+
+@dataclasses.dataclass
+class SuiteStats:
+    results: list[RunResult]
+    min_gbs: float
+    max_gbs: float
+    hmean_gbs: float
+
+    def table(self, metric: str = "measured_cpu_gbs") -> list[dict]:
+        return [r.row() for r in self.results]
+
+
+def harmonic_mean(xs) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return 0.0
+    return len(xs) / sum(1.0 / x for x in xs)
+
+
+def pearson_r(xs, ys) -> float:
+    """Paper Eq. (1): R = cov(X, STREAM) / (std(X)·std(STREAM))."""
+    x, y = np.asarray(xs, float), np.asarray(ys, float)
+    if x.size < 2 or x.std() == 0 or y.std() == 0:
+        return float("nan")
+    return float(np.corrcoef(x, y)[0, 1])
+
+
+def run_suite(patterns: list[Pattern], *, backend: str = "xla",
+              dtype=None, row_width: int = 1, runs: int = 10,
+              metric: str = "measured") -> SuiteStats:
+    import jax.numpy as jnp
+    dtype = dtype or jnp.float32
+    results = []
+    for p in patterns:
+        eng = GSEngine(p, backend=backend, dtype=dtype, row_width=row_width)
+        results.append(eng.run(runs=runs))
+    key = (lambda r: r.measured_gbs) if metric == "measured" \
+        else (lambda r: r.modeled_gbs)
+    vals = [key(r) for r in results]
+    return SuiteStats(
+        results=results,
+        min_gbs=min(vals), max_gbs=max(vals),
+        hmean_gbs=harmonic_mean(vals),
+    )
+
+
+def run_suite_file(path: str, **kw) -> SuiteStats:
+    return run_suite(load_suite(path), **kw)
+
+
+def stream_reference(*, n: int = 2 ** 22, runs: int = 10,
+                     backend: str = "xla") -> RunResult:
+    """STREAM-copy analogue (paper §3.4): UNIFORM:8:1 with delta 8."""
+    p = make_pattern("UNIFORM:8:1", kind="gather", delta=8, count=n // 8,
+                     name="STREAM-like")
+    return GSEngine(p, backend=backend).run(runs=runs)

@@ -1,0 +1,182 @@
+"""jaxpr gather/scatter trace extraction — the paper's §2 for JAX programs.
+
+The paper extracts G/S patterns from DoE mini-apps with an instrumented QEMU
+(SVE traces) and distills them into (index buffer, delta) pairs.  The JAX
+analogue: walk a computation's jaxpr (recursing through pjit/scan/while/
+cond), harvest every indexed-access primitive, and report
+
+  * per-primitive byte counts (Table 1's "G/S MB (%)" column), and
+  * concrete Spatter patterns where the access geometry is static.
+
+Usage:
+    report = trace_gs(lambda p, x: model.apply(p, x), params, tokens)
+    print(report.summary())
+    suite = report.to_patterns()     # replayable through GSEngine
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from .pattern import Pattern
+
+_GS_PRIMS = {
+    "gather": "gather",
+    "scatter": "scatter",
+    "scatter-add": "scatter",
+    "scatter_add": "scatter",
+    "scatter-mul": "scatter",
+    "dynamic_slice": "gather",
+    "dynamic_update_slice": "scatter",
+    "take_along_axis": "gather",
+}
+
+
+@dataclasses.dataclass
+class TracedAccess:
+    primitive: str
+    kind: str                      # gather | scatter
+    operand_shape: tuple
+    out_shape: tuple
+    index_shape: tuple
+    moved_bytes: int               # bytes delivered by this access
+    slice_elems: int               # elements per indexed lookup (row width)
+    n_lookups: int                 # number of indexed lookups
+    eqn_str: str = ""
+
+    def to_pattern(self) -> Pattern | None:
+        """Static proxy: a UNIFORM row pattern with runtime (unknown) indices
+        is modeled as stride-`slice_elems` over `n_lookups` ops (the geometry
+        Spatter can replay; the *values* of runtime indices need runtime
+        tracing, which the dry-run container cannot observe)."""
+        if self.n_lookups < 1:
+            return None
+        return Pattern(
+            name=f"traced-{self.primitive}",
+            kind=self.kind,
+            index=tuple(range(max(1, self.slice_elems))),
+            delta=max(1, self.slice_elems),
+            count=self.n_lookups,
+            source="jaxpr-trace",
+        )
+
+
+@dataclasses.dataclass
+class TraceReport:
+    accesses: list[TracedAccess]
+    total_bytes: int               # all array outputs in the jaxpr
+
+    @property
+    def gs_bytes(self) -> int:
+        return sum(a.moved_bytes for a in self.accesses)
+
+    @property
+    def gs_fraction(self) -> float:
+        """Table 1's G/S share of data motion."""
+        return self.gs_bytes / max(1, self.total_bytes)
+
+    def gathers(self) -> list[TracedAccess]:
+        return [a for a in self.accesses if a.kind == "gather"]
+
+    def scatters(self) -> list[TracedAccess]:
+        return [a for a in self.accesses if a.kind == "scatter"]
+
+    def to_patterns(self) -> list[Pattern]:
+        out = []
+        for a in self.accesses:
+            p = a.to_pattern()
+            if p is not None:
+                out.append(p)
+        return out
+
+    def summary(self) -> str:
+        lines = [
+            f"traced {len(self.accesses)} G/S accesses "
+            f"({len(self.gathers())} gathers / {len(self.scatters())} scatters)",
+            f"G/S bytes: {self.gs_bytes / 1e6:.1f} MB of "
+            f"{self.total_bytes / 1e6:.1f} MB total "
+            f"({100 * self.gs_fraction:.1f}%)   [paper Table 1 analogue]",
+        ]
+        for a in sorted(self.accesses, key=lambda a: -a.moved_bytes)[:12]:
+            lines.append(
+                f"  {a.primitive:<22} {str(a.operand_shape):<20} "
+                f"rows={a.n_lookups:<10} row_elems={a.slice_elems:<8} "
+                f"{a.moved_bytes / 1e6:9.2f} MB")
+        return "\n".join(lines)
+
+
+def _array_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _harvest(jaxpr, accesses: list[TracedAccess], totals: list[int],
+             weight: int = 1) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        # recurse into sub-jaxprs (scan multiplies by trip count)
+        for param, val in eqn.params.items():
+            sub = None
+            if hasattr(val, "jaxpr"):
+                sub = val.jaxpr if hasattr(val.jaxpr, "eqns") else None
+            if param in ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr"):
+                sub = getattr(val, "jaxpr", val)
+            if sub is not None and hasattr(sub, "eqns"):
+                w = weight
+                if name == "scan":
+                    w *= int(eqn.params.get("length", 1))
+                _harvest(sub, accesses, totals, w)
+            elif param == "branches":
+                for br in val:
+                    _harvest(br.jaxpr, accesses, totals, weight)
+        for outvar in eqn.outvars:
+            if hasattr(outvar, "aval"):
+                totals[0] += weight * _array_bytes(outvar.aval)
+        if name not in _GS_PRIMS:
+            continue
+        kind = _GS_PRIMS[name]
+        op_aval = eqn.invars[0].aval
+        out_aval = eqn.outvars[0].aval
+        moved = weight * _array_bytes(out_aval if kind == "gather"
+                                      else eqn.invars[-1].aval)
+        idx_shape, slice_elems, n_lookups = (), 1, 1
+        if name == "gather":
+            dn = eqn.params["dimension_numbers"]
+            slice_sizes = eqn.params["slice_sizes"]
+            idx_aval = eqn.invars[1].aval
+            idx_shape = tuple(idx_aval.shape)
+            slice_elems = int(np.prod(slice_sizes))
+            n_lookups = int(np.prod(idx_shape[:-1])) if idx_shape else 1
+        elif name.startswith("scatter"):
+            idx_aval = eqn.invars[1].aval
+            upd_aval = eqn.invars[2].aval
+            idx_shape = tuple(idx_aval.shape)
+            n_lookups = int(np.prod(idx_shape[:-1])) if idx_shape else 1
+            slice_elems = int(np.prod(upd_aval.shape)) // max(1, n_lookups)
+        elif name in ("dynamic_slice", "dynamic_update_slice"):
+            slice_elems = int(np.prod(out_aval.shape))
+            n_lookups = 1
+        accesses.append(TracedAccess(
+            primitive=name, kind=kind,
+            operand_shape=tuple(op_aval.shape),
+            out_shape=tuple(out_aval.shape),
+            index_shape=idx_shape,
+            moved_bytes=moved,
+            slice_elems=slice_elems,
+            n_lookups=weight * n_lookups,
+            eqn_str=str(eqn)[:120],
+        ))
+
+
+def trace_gs(fn: Callable, *args: Any, **kwargs: Any) -> TraceReport:
+    """Extract all gather/scatter accesses from ``fn(*args)``'s jaxpr."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    accesses: list[TracedAccess] = []
+    totals = [0]
+    _harvest(closed.jaxpr, accesses, totals)
+    return TraceReport(accesses=accesses, total_bytes=totals[0])

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the gather/scatter hot paths.
+
+Each kernel package has:
+    kernel.py  -- pl.pallas_call + BlockSpec (the TPU kernel proper)
+    ops.py     -- jit'd public wrapper (padding, mode selection, interpret)
+    ref.py     -- pure-jnp oracle used by tests
+
+All kernels are validated on CPU with interpret=True against ref.py across
+shape/dtype sweeps (tests/test_kernels_*.py).
+"""

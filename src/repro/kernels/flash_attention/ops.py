@@ -1,0 +1,70 @@
+"""Public wrapper: fused attention with recompute-based backward.
+
+Forward runs the Pallas kernel; backward recomputes through the reference
+(jax.checkpoint-style custom_vjp would add a bwd kernel — the fwd kernel is
+what removes the score HBM round-trips that dominate the measured memory
+term; see EXPERIMENTS.md §Perf iteration 3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+from .ref import flash_attention_ref
+
+
+def _should_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, scale, causal, window, softcap, block_q, block_k,
+           interpret):
+    return kernel.flash_attention_fwd(
+        q, k, v, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _fwd(q, k, v, scale, causal, window, softcap, block_q, block_k,
+         interpret):
+    out = _flash(q, k, v, scale, causal, window, softcap, block_q, block_k,
+                 interpret)
+    return out, (q, k, v)
+
+
+def _bwd(scale, causal, window, softcap, block_q, block_k, interpret,
+         res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: flash_attention_ref(
+            q, k, v, scale=scale, causal=causal, window=window,
+            softcap=softcap), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float | None = None, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Fused attention. q (B,KVH,G,S,dh); k/v (B,KVH,T,dh)."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    s, t = q.shape[3], k.shape[2]
+    bq = min(block_q, s)
+    while s % bq:
+        bq //= 2
+    bk = min(block_k, t)
+    while t % bk:
+        bk //= 2
+    return _flash(q, k, v, float(scale), causal, window, float(softcap),
+                  max(1, bq), max(1, bk), _should_interpret(interpret))

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                        window: int = 0, softcap: float = 0.0) -> jax.Array:
+    """q (B,KVH,G,S,dh); k/v (B,KVH,T,dh) -> (B,KVH,G,S,dh)."""
+    s_len, t_len = q.shape[3], k.shape[2]
+    s = jnp.einsum("bhgqd,bhtd->bhgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(s_len)[:, None]
+    k_pos = jnp.arange(t_len)[None, :]
+    mask = jnp.ones((s_len, t_len), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqt,bhtd->bhgqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,87 @@
+"""Scalar-prefetch DMA row gather — the TPU-native Spatter gather kernel.
+
+Two regimes, mirroring the paper's cache-resident vs memory-resident split
+(DESIGN.md §2):
+
+  * ``dma``  — the table stays in HBM; the index buffer is scalar-prefetched
+    into SMEM and drives the input ``BlockSpec.index_map``, so the *DMA
+    engine itself* performs the gather, one (1, block_d) row-slice per grid
+    step.  Pallas double-buffers these DMAs (the TPU analogue of the HW
+    prefetcher studied in paper Fig 4).
+  * ``vmem`` — small tables are staged whole into VMEM and gathered with an
+    in-register ``take`` over ``block_n`` rows per step (the "cache-resident"
+    regime: once the table is in VMEM, arbitrary reuse is free).
+
+The CUDA backend's trick of staging the index buffer in shared memory (paper
+§3.2) maps exactly onto scalar prefetch: indices live in SMEM for the whole
+kernel invocation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_row_kernel(idx_ref, table_blk, out_blk):
+    # The gather already happened in the DMA (index_map read idx_ref);
+    # the kernel body is a pure VMEM->VMEM tile copy.
+    del idx_ref
+    out_blk[...] = table_blk[...]
+
+
+def gather_rows_dma(table: jax.Array, idx: jax.Array, *,
+                    block_d: int, interpret: bool) -> jax.Array:
+    """HBM-resident gather: grid (N, D/block_d), one table row-slice per step."""
+    n = idx.shape[0]
+    v, d = table.shape
+    assert d % block_d == 0, (d, block_d)
+    grid = (n, d // block_d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j, idx_ref: (idx_ref[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j, idx_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        _copy_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+
+
+def _vmem_take_kernel(block_n: int, idx_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    rows = idx_ref[pl.ds(i * block_n, block_n)]
+    out_ref[...] = jnp.take(table_ref[...], rows, axis=0)
+
+
+def gather_rows_vmem(table: jax.Array, idx: jax.Array, *,
+                     block_n: int, interpret: bool) -> jax.Array:
+    """VMEM-resident gather: whole table in VMEM, block_n rows per step.
+
+    Caller guarantees n % block_n == 0 (ops.py pads).
+    """
+    n = idx.shape[0]
+    v, d = table.shape
+    assert n % block_n == 0, (n, block_n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((v, d), lambda i, idx_ref: (0, 0))],
+        out_specs=pl.BlockSpec((block_n, d), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_vmem_take_kernel, block_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)

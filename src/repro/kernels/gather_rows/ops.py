@@ -1,0 +1,70 @@
+"""Public jit'd wrapper for the row-gather kernel.
+
+Picks the VMEM-resident regime for small tables and the DMA regime
+otherwise, pads ragged shapes, and defaults to interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+# VMEM on v5e is ~128 MiB/core but the pipeline needs headroom; stage tables
+# whole only when they take at most this many bytes.
+_VMEM_TABLE_BYTES = 4 * 1024 * 1024
+_DEFAULT_BLOCK_N = 8
+
+
+def _should_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_n", "block_d", "interpret"))
+def _gather_rows(table, idx, mode: str, block_n: int, block_d: int,
+                 interpret: bool):
+    n = idx.shape[0]
+    v, d = table.shape
+    idx = idx.astype(jnp.int32)
+    if mode == "vmem":
+        pad = (-n) % block_n
+        if pad:
+            idx_p = jnp.concatenate([idx, jnp.zeros((pad,), jnp.int32)])
+        else:
+            idx_p = idx
+        out = kernel.gather_rows_vmem(table, idx_p, block_n=block_n,
+                                      interpret=interpret)
+        return out[:n]
+    # dma mode: pad D up to a block_d multiple
+    pad_d = (-d) % block_d
+    if pad_d:
+        table = jnp.pad(table, ((0, 0), (0, pad_d)))
+    out = kernel.gather_rows_dma(table, idx, block_d=block_d,
+                                 interpret=interpret)
+    return out[:, :d]
+
+
+def gather_rows(table: jax.Array, idx: jax.Array, *, mode: str = "auto",
+                block_n: int = _DEFAULT_BLOCK_N, block_d: int | None = None,
+                interpret: bool | None = None) -> jax.Array:
+    """Gather rows of ``table`` (V, D) at positions ``idx`` (N,) -> (N, D)."""
+    if table.ndim != 2 or idx.ndim != 1:
+        raise ValueError(f"expected (V,D) table and (N,) idx, got "
+                         f"{table.shape} / {idx.shape}")
+    interp = _should_interpret(interpret)
+    if mode == "auto":
+        table_bytes = table.size * table.dtype.itemsize
+        mode = "vmem" if table_bytes <= _VMEM_TABLE_BYTES else "dma"
+    if block_d is None:
+        d = table.shape[1]
+        block_d = d if d <= 512 else 512
+        while table.shape[1] % block_d:
+            block_d //= 2
+            if block_d == 0:
+                block_d = table.shape[1]
+                break
+    return _gather_rows(table, idx, mode, block_n, block_d, interp)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the row gather kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i, :] = table[idx[i], :]"""
+    return jnp.take(table, idx, axis=0)

@@ -1,0 +1,1 @@
+from .ops import paged_decode_attention  # noqa: F401

@@ -1,0 +1,102 @@
+"""Paged-KV decode attention — Spatter's gather fused into flash-decode.
+
+Serving-time decode is the single largest *indexed-access* workload in an
+LLM (DESIGN.md §3): every step gathers the whole KV cache through a page
+table.  Instead of gathering pages to a contiguous buffer and then running
+attention (two HBM round-trips), this kernel lets the page-table drive the
+K/V ``BlockSpec.index_map`` directly — the Spatter scalar-prefetch gather —
+and consumes each page immediately with an online-softmax update.
+
+Layout:  q            (B, KVH, G, Dh)      G = query heads per KV head (GQA)
+         k_pages      (KVH, P, page, Dh)   P = physical page pool
+         v_pages      (KVH, P, page, Dh)
+         page_table   (B, pages_per_seq)   int32, scalar-prefetched
+         lengths      (B,)                 valid KV length per sequence
+
+Grid (B, KVH, pages_per_seq); the (m, l, acc) running state lives in VMEM
+scratch and the output block is written once on the final page.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(page_size: int, scale: float,
+                   page_table_ref, lengths_ref,
+                   q_blk, k_blk, v_blk,
+                   out_blk,
+                   m_scr, l_scr, acc_scr):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_blk[0, 0].astype(jnp.float32)                    # (G, Dh)
+    k = k_blk[0, 0].astype(jnp.float32)                    # (page, Dh)
+    v = v_blk[0, 0].astype(jnp.float32)                    # (page, Dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # mask out positions past the sequence length
+    pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < lengths_ref[b], s, _NEG_INF)
+
+    m_prev = m_scr[...]                                    # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    e = jnp.exp(s - m_new)                                 # (G, page)
+    l_scr[...] = l_scr[...] * corr + e.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+        e, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        out_blk[0, 0] = (acc_scr[...] / denom).astype(out_blk.dtype)
+
+
+def paged_decode_kernel(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array, *,
+                        scale: float, interpret: bool) -> jax.Array:
+    b, kvh, g, dh = q.shape
+    _, p_total, page_size, _ = k_pages.shape
+    pages_per_seq = page_table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,   # page_table, lengths
+        grid=(b, kvh, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh),
+                         lambda b, h, p, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dh),
+                         lambda b, h, p, pt, ln: (h, pt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dh),
+                         lambda b, h, p, pt, ln: (h, pt[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda b, h, p, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, page_size, scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

@@ -1,0 +1,39 @@
+"""Public jit'd wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def _should_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _paged_decode(q, k_pages, v_pages, page_table, lengths, scale, interpret):
+    return kernel.paged_decode_kernel(
+        q, k_pages, v_pages, page_table.astype(jnp.int32),
+        lengths.astype(jnp.int32), scale=scale, interpret=interpret)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *, scale: float | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """Flash-decode over a paged KV cache.
+
+    q (B, KVH, G, Dh); k_pages/v_pages (KVH, P, page, Dh);
+    page_table (B, pages_per_seq); lengths (B,) -> (B, KVH, G, Dh).
+    """
+    if q.ndim != 4 or k_pages.ndim != 4:
+        raise ValueError(f"bad shapes q={q.shape} k={k_pages.shape}")
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    return _paged_decode(q, k_pages, v_pages, page_table, lengths,
+                         float(scale), _should_interpret(interpret))

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention."""
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                               scale: float) -> jax.Array:
+    """Dense reference: materialize each sequence's KV then do softmax attention.
+
+    q          (B, KVH, G, Dh)
+    k_pages    (KVH, P, page, Dh)
+    page_table (B, pages_per_seq)
+    lengths    (B,)
+    """
+    b, kvh, g, dh = q.shape
+    _, _, page_size, _ = k_pages.shape
+    pages_per_seq = page_table.shape[1]
+    seq = pages_per_seq * page_size
+
+    # gather pages: (B, KVH, pages_per_seq, page, Dh)
+    k = jnp.take(k_pages, page_table, axis=1)           # (KVH, B, pp, page, Dh)
+    v = jnp.take(v_pages, page_table, axis=1)
+    k = jnp.moveaxis(k, 1, 0).reshape(b, kvh, seq, dh)
+    v = jnp.moveaxis(v, 1, 0).reshape(b, kvh, seq, dh)
+
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(seq)[None, None, None, :]
+    s = jnp.where(pos < lengths[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

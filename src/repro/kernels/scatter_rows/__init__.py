@@ -1,0 +1,1 @@
+from .ops import scatter_add_rows  # noqa: F401

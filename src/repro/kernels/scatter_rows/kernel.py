@@ -1,0 +1,68 @@
+"""MXU one-hot scatter-add — the TPU-native Spatter scatter kernel.
+
+CPU/GPU scatter relies on hardware write combining / atomics; the TPU has
+neither at kernel level.  The TPU-native reformulation (DESIGN.md §2) turns
+scatter-add into dense compute: for each chunk of ``block_n`` (index, row)
+pairs, build a (block_v, block_n) one-hot membership matrix for the output
+tile and contract it with the chunk's rows on the MXU:
+
+    out[vb] += onehot(idx_chunk in vb) @ vals_chunk
+
+The output tile revisits are *consecutive* (chunk is the innermost grid
+dim), so the accumulator stays resident in VMEM across the whole sweep —
+the analogue of keeping the scatter target cache-resident in the paper's
+CPU backend.  Duplicate indices are handled by construction (they just add).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_add_kernel(block_v: int, block_n: int,
+                        idx_ref, vals_blk, out_blk):
+    vb = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        out_blk[...] = jnp.zeros_like(out_blk)
+
+    chunk = idx_ref[pl.ds(c * block_n, block_n)]          # (block_n,)
+    local = chunk - vb * block_v                           # relative to tile
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_v, block_n), 0)
+    onehot = (rows == local[None, :]).astype(vals_blk.dtype)
+    out_blk[...] += jax.lax.dot(
+        onehot, vals_blk[...], precision=jax.lax.Precision.DEFAULT,
+        preferred_element_type=out_blk.dtype)
+
+
+def scatter_add_rows_kernel(idx: jax.Array, vals: jax.Array, v_padded: int, *,
+                            block_v: int, block_n: int,
+                            interpret: bool) -> jax.Array:
+    """sum-scatter ``vals`` (N, D) into a zeroed (v_padded, D) table.
+
+    Caller guarantees: N % block_n == 0, v_padded % block_v == 0, and padded
+    entries of ``idx`` point outside [0, v_padded) so they are dropped.
+    """
+    n, d = vals.shape
+    grid = (v_padded // block_v, n // block_n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda vb, c, idx_ref: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_v, d), lambda vb, c, idx_ref: (vb, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_add_kernel, block_v, block_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((v_padded, d), vals.dtype),
+        interpret=interpret,
+    )(idx, vals)

@@ -1,0 +1,53 @@
+"""Public jit'd wrapper for the MXU scatter-add kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+_DEFAULT_BLOCK_V = 128
+_DEFAULT_BLOCK_N = 128
+
+
+def _should_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("v", "block_v", "block_n", "interpret"))
+def _scatter_add(idx, vals, v: int, block_v: int, block_n: int,
+                 interpret: bool):
+    n, d = vals.shape
+    idx = idx.astype(jnp.int32)
+    pad_n = (-n) % block_n
+    if pad_n:
+        # padded entries point past every tile -> dropped by the one-hot
+        idx = jnp.concatenate(
+            [idx, jnp.full((pad_n,), jnp.iinfo(jnp.int32).max, jnp.int32)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad_n, d), vals.dtype)])
+    v_padded = v + ((-v) % block_v)
+    out = kernel.scatter_add_rows_kernel(
+        idx, vals, v_padded, block_v=block_v, block_n=block_n,
+        interpret=interpret)
+    return out[:v]
+
+
+def scatter_add_rows(idx: jax.Array, vals: jax.Array, v: int, *,
+                     block_v: int = _DEFAULT_BLOCK_V,
+                     block_n: int = _DEFAULT_BLOCK_N,
+                     interpret: bool | None = None) -> jax.Array:
+    """Scatter-add ``vals`` (N, D) at row indices ``idx`` (N,) into (V, D).
+
+    Out-of-range indices are dropped (matching ``.at[].add(mode="drop")``).
+    """
+    if vals.ndim != 2 or idx.ndim != 1 or idx.shape[0] != vals.shape[0]:
+        raise ValueError(f"bad shapes idx={idx.shape} vals={vals.shape}")
+    block_v = min(block_v, max(8, v))
+    block_n = min(block_n, max(8, idx.shape[0]))
+    return _scatter_add(idx, vals, v, block_v, block_n,
+                        _should_interpret(interpret))

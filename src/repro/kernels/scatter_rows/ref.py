@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the scatter-add kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def scatter_add_rows_ref(idx: jax.Array, vals: jax.Array, v: int) -> jax.Array:
+    """out = zeros(V, D); out[idx[i]] += vals[i]"""
+    out = jnp.zeros((v, vals.shape[1]), dtype=vals.dtype)
+    return out.at[idx].add(vals, mode="drop")

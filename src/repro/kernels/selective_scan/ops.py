@@ -1,0 +1,30 @@
+"""Public wrapper for the fused selective scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+from .ref import selective_scan_ref
+
+
+def _should_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def selective_scan(u: jax.Array, dt: jax.Array, b_in: jax.Array,
+                   c_in: jax.Array, a: jax.Array, d_skip: jax.Array, *,
+                   block_l: int = 256, interpret: bool | None = None):
+    """Fused Mamba scan. u,dt (B,L,D); b_in,c_in (B,L,N); a (N,D) (<0);
+    d_skip (1,D). Returns (y (B,L,D), h_final (B,N,D))."""
+    l = u.shape[1]
+    bl = min(block_l, l)
+    while l % bl:
+        bl //= 2
+    return kernel.selective_scan_fwd(u, dt, b_in, c_in, a, d_skip,
+                                     block_l=max(1, bl),
+                                     interpret=_should_interpret(interpret))

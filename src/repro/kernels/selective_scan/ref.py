@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the selective scan (mirrors models/ssm.py math)."""
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, b_in, c_in, a, d_skip):
+    """u, dt (B,L,D); b_in, c_in (B,L,N); a (N,D) negative; d_skip (1,D).
+
+    Returns (y (B,L,D), h_final (B,N,D)).
+    """
+    bsz, l, d = u.shape
+    n = b_in.shape[2]
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        da = jnp.exp(dt_t[:, None, :] * a[None])             # (B,N,D)
+        h = h * da + (dt_t * u_t)[:, None, :] * b_t[:, :, None]
+        y = jnp.einsum("bnd,bn->bd", h, c_t) + d_skip[0] * u_t
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b_in, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c_in, 1, 0).astype(jnp.float32))
+    h0 = jnp.zeros((bsz, n, d), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(u.dtype), h

@@ -1,0 +1,253 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The FIRST two lines below must run before ANY other import (jax locks the
+device count on first init): they give this CPU-only container 512
+placeholder devices so jax.make_mesh can build the production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all        # every live cell, subprocess-isolated
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, parsed roofline terms, and the collective
+schedule — EXPERIMENTS.md §Dry-run and §Roofline are generated from these.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_skips
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rl
+from repro.models.zoo import Model, model_flops
+from repro.optim import AdamWConfig
+from repro.runtime.sharding import use_mesh, logical_to_spec
+from repro.runtime.train import (assemble_train, batch_specs,
+                                 shardings_from_axes, _AXES_LEAF)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _local_bytes(tree, shardings) -> float:
+    """Exact per-device bytes of sharded abstract args (params/opt/cache)."""
+    total = 0.0
+    for av, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        shape = av.shape
+        spec = sh.spec if isinstance(sh, NamedSharding) else ()
+        n = 1
+        for i, d in enumerate(shape):
+            s = spec[i] if i < len(spec) else None
+            div = 1
+            if s is not None:
+                for ax in (s if isinstance(s, tuple) else (s,)):
+                    div *= sh.mesh.shape[ax]
+            n *= -(-d // div)
+        total += n * av.dtype.itemsize
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Lower + compile one cell. Returns (lowered, compiled, mesh, model)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    skip = shape_skips(cfg, shape)
+    if skip:
+        raise SystemExit(f"SKIP: {skip}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    specs = model.input_specs(shape)
+
+    analytic = {}
+    if shape.kind == "train":
+        fn, (aparams, aopt), (p_sh, o_sh) = assemble_train(
+            model, mesh, AdamWConfig(), abstract_batch=specs)
+        analytic = {
+            "params_gb": _local_bytes(aparams, p_sh) / 1e9,
+            "opt_state_gb": (_local_bytes(aopt["m"], o_sh["m"])
+                             + _local_bytes(aopt["v"], o_sh["v"])) / 1e9,
+        }
+        lowered = fn.lower(aparams, aopt, specs)
+    elif shape.kind == "prefill":
+        aparams = model.abstract_params()
+        p_sh = shardings_from_axes(model.param_axes(), aparams, mesh)
+        b_sh = batch_specs({k: v for k, v in specs.items()
+                            if hasattr(v, "shape")}, mesh)
+
+        def prefill(params, batch):
+            with use_mesh(mesh):
+                return model.prefill(params, dict(batch, **(
+                    {"max_len": shape.seq_len} if model.cfg.family == "audio"
+                    else {})))
+
+        analytic = {"params_gb": _local_bytes(aparams, p_sh) / 1e9}
+        lowered = jax.jit(prefill, in_shardings=(p_sh, b_sh)).lower(
+            aparams, {k: v for k, v in specs.items() if hasattr(v, "shape")})
+    else:  # decode
+        aparams = model.abstract_params()
+        p_sh = shardings_from_axes(model.param_axes(), aparams, mesh)
+        acache = specs["cache"]
+        c_axes = model.cache_axes()
+        c_sh = jax.tree.map(
+            lambda ax, av: NamedSharding(
+                mesh, logical_to_spec(ax, av.shape, mesh, None)),
+            c_axes, acache, is_leaf=_AXES_LEAF)
+        tok_sh = batch_specs({"t": specs["tokens"]}, mesh)["t"]
+
+        def serve_step(params, cache, tokens, pos):
+            with use_mesh(mesh):
+                return model.decode_step(params, cache, tokens, pos)
+
+        analytic = {
+            "params_gb": _local_bytes(aparams, p_sh) / 1e9,
+            "kv_cache_gb": _local_bytes(acache, c_sh) / 1e9,
+        }
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+            donate_argnums=(1,),
+        ).lower(aparams, acache, specs["tokens"], specs["pos"])
+
+    compiled = lowered.compile()
+    return lowered, compiled, mesh, model, analytic
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    t0 = time.time()
+    lowered, compiled, mesh, model, analytic = lower_cell(
+        arch, shape_name, multi_pod, overrides)
+    n_chips = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    mod_cost = rl.analyze_module(hlo, world=n_chips)
+    shape = SHAPES[shape_name]
+    mflops = model_flops(model.cfg, shape)
+
+    per_device_hbm = float(
+        getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "temp_size_in_bytes", 0))
+    roof = rl.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=mod_cost.flops, hlo_bytes=mod_cost.bytes_accessed,
+        coll_bytes=mod_cost.collective_bytes, model_flops=mflops,
+        per_device_hbm=per_device_hbm)
+
+    coll_summary = {}
+    for c in mod_cost.collectives:
+        key = f"{c.kind}(g={c.group_size})"
+        coll_summary.setdefault(key, {"count": 0.0, "gbytes": 0.0})
+        coll_summary[key]["count"] += c.count
+        coll_summary[key]["gbytes"] += c.ring_bytes() / 1e9
+
+    result = {
+        "cell": {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": n_chips},
+        "compile_s": time.time() - t0,
+        "memory_analysis": {
+            "argument_size_gb": getattr(mem, "argument_size_in_bytes", 0) / 1e9,
+            "temp_size_gb": getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+            "output_size_gb": getattr(mem, "output_size_in_bytes", 0) / 1e9,
+            # CPU-backend caveat: XLA:CPU promotes bf16 dot operands to f32
+            # and may materialize whole stacked-weight converts; TPU executes
+            # bf16 natively, so temp_size over-reports vs the TPU target.
+            "analytic_per_device": analytic,
+        },
+        "xla_cost_analysis": {
+            "flops_per_chip_while_body_once": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "roofline": roof.row(),
+        "collectives": coll_summary,
+    }
+    if overrides:
+        result["overrides"] = {k: str(v) for k, v in overrides.items()}
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fn = os.path.join(out_dir,
+                      f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(fn, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[dryrun] {arch} {shape_name} {mesh_name}: compile "
+          f"{result['compile_s']:.1f}s  dominant={roof.dominant}  "
+          f"hbm/dev={per_device_hbm/1e9:.2f} GB")
+    print(f"  memory_analysis: {mem}")
+    return result
+
+
+def live_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if shape_skips(cfg, shape):
+                continue
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every live cell (subprocess isolated)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--moe-impl", default=None,
+                    choices=["gspmd_sort", "ep_shardmap"],
+                    help="override cfg.moe_impl (perf variants)")
+    ap.add_argument("--tag", default="", help="suffix for the output JSON")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch, shape_name in live_cells():
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                out = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                if os.path.exists(out):
+                    print(f"[dryrun] cached: {out}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--out", args.out] + (["--multi-pod"] if mp else [])
+                r = subprocess.run(cmd, env=dict(
+                    os.environ, PYTHONPATH=os.environ.get("PYTHONPATH", "src")))
+                if r.returncode != 0:
+                    failures.append((arch, shape_name, mesh_name))
+        if failures:
+            print("FAILED CELLS:", failures)
+            sys.exit(1)
+        print("all cells compiled OK")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    overrides = {"moe_impl": args.moe_impl} if args.moe_impl else None
+    run_cell(args.arch, args.shape, args.multi_pod, args.out,
+             overrides=overrides, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from cell JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_skips
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(d: str) -> dict:
+    cells = {}
+    for fn in glob.glob(os.path.join(d, "*.json")):
+        with open(fn) as f:
+            j = json.load(f)
+        c = j["cell"]
+        cells[(c["arch"], c["shape"], c["mesh"])] = j
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(cells: dict, mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | t_comp | t_mem | t_coll | dominant | "
+            "MODEL/HLO flops | roofline frac | HBM/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname in SHAPE_ORDER:
+            skip = shape_skips(cfg, SHAPES[sname])
+            if skip:
+                rows.append(f"| {arch} | {sname} | — | — | — | "
+                            f"SKIP (full-attention @524k) | — | — | — |")
+                continue
+            j = cells.get((arch, sname, mesh))
+            if not j:
+                rows.append(f"| {arch} | {sname} | MISSING | | | | | | |")
+                continue
+            r = j["roofline"]
+            an = j["memory_analysis"].get("analytic_per_device", {})
+            hbm = sum(v for v in an.values()) if an else \
+                r["per_device_hbm_gb"]
+            rows.append(
+                f"| {arch} | {sname} | {fmt_s(r['t_compute_s'])} | "
+                f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+                f"{r['roofline_fraction']*100:.1f}% | {hbm:.1f} GB |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells: dict) -> str:
+    rows = ["| arch | shape | mesh | chips | compile | HLO GF/chip | "
+            "coll GB/chip | top collectives | args+temp GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, sname, mesh) in sorted(cells):
+        j = cells[(arch, sname, mesh)]
+        r = j["roofline"]
+        m = j["memory_analysis"]
+        colls = sorted(j["collectives"].items(),
+                       key=lambda kv: -kv[1]["gbytes"])[:2]
+        cstr = "; ".join(f"{k}x{int(v['count'])}:{v['gbytes']:.1f}GB"
+                         for k, v in colls) or "none"
+        rows.append(
+            f"| {arch} | {sname} | {mesh} | {j['cell']['chips']} | "
+            f"{j['compile_s']:.0f}s | {r['hlo_gflops_per_chip']:.0f} | "
+            f"{r['coll_gbytes_per_chip']:.1f} | {cstr} | "
+            f"{m['argument_size_gb']:.1f}+{m['temp_size_gb']:.1f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells: dict, mesh: str = "16x16") -> list[tuple]:
+    """Worst roofline fraction, most collective-bound, most paper-central."""
+    live = [(k, v) for k, v in cells.items() if k[2] == mesh]
+    worst = min(live, key=lambda kv: kv[1]["roofline"]["roofline_fraction"])
+    coll = max(live, key=lambda kv: (
+        kv[1]["roofline"]["t_collective_s"]
+        / max(1e-12, kv[1]["roofline"]["step_time"]
+              if "step_time" in kv[1]["roofline"] else
+              max(kv[1]["roofline"]["t_compute_s"],
+                  kv[1]["roofline"]["t_memory_s"],
+                  kv[1]["roofline"]["t_collective_s"]))))
+    return [worst[0], coll[0]]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print(f"loaded {len(cells)} cells\n")
+    print("## Roofline (single-pod 16x16, 256 chips)\n")
+    print(roofline_table(cells, "16x16"))
+    print("\n## Dry-run (all cells, both meshes)\n")
+    print(dryrun_table(cells))
+    print("\nhillclimb candidates:", pick_hillclimb(cells))
+
+
+if __name__ == "__main__":
+    main()

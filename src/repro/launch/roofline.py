@@ -1,0 +1,361 @@
+"""Roofline analysis from compiled HLO (DESIGN.md §8).
+
+XLA's HloCostAnalysis counts a while-loop body ONCE, but every model here
+scans over layer groups — so naive ``compiled.cost_analysis()`` undercounts
+FLOPs by ~n_layers.  This module parses the optimized HLO text, walks the
+computation graph (while bodies multiplied by parsed trip counts, fusion
+and call bodies recursed), and accumulates:
+
+  * dot FLOPs            (matmul-only, the standard MFU numerator)
+  * op bytes             (operands + outputs of non-trivial ops — the
+                          HloCostAnalysis "bytes accessed" convention)
+  * collective traffic   (ring-model per-chip bytes by op kind/group size)
+
+Hardware constants are TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "broadcast", "reshape", "transpose",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# op line:  %name = <type> opcode(operands...), attrs...
+# <type> may be a tuple type with layouts and /*index=N*/ comments; the
+# opcode is the last lowercase identifier before the first argument paren.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class HloOp:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    raw_operands: str = ""
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    out_bytes: int
+    group_size: int
+    count: float          # multiplier (loop trip products)
+
+    def ring_bytes(self) -> float:
+        """Per-chip link traffic under a ring schedule."""
+        g = max(2, self.group_size)
+        b = self.out_bytes
+        if self.kind == "all-reduce":
+            return 2 * b * (g - 1) / g * self.count
+        if self.kind == "all-gather":
+            return b * (g - 1) / g * self.count
+        if self.kind == "reduce-scatter":
+            return b * (g - 1) * self.count     # out is shard-sized
+        if self.kind == "all-to-all":
+            return b * (g - 1) / g * self.count
+        return b * self.count                    # collective-permute
+
+
+def parse_computations(hlo: str) -> dict[str, list[HloOp]]:
+    comps: dict[str, list[HloOp]] = {}
+    current = None
+    for line in hlo.splitlines():
+        if current is None:
+            # computation headers sit at column 0 and open a brace:
+            #   %name (params...) -> type {      /  ENTRY %main (...) -> ... {
+            s = line.rstrip()
+            if s.endswith("{") and not s.startswith(("HloModule", "//")):
+                m = _COMP_RE.match(s)
+                if m:
+                    current = m.group(1)
+                    comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # split operands from attrs at the matching close paren
+        depth, cut = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    cut = i
+                    break
+        operand_str, attrs = rest[:cut], rest[cut + 1:]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        comps[current].append(HloOp(name, type_str.strip(), opcode,
+                                    operands, attrs, operand_str))
+    return comps
+
+
+def _attr_comp(attrs: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Max integer constant in the loop condition — the LT/LE bound.
+
+    XLA canonicalizes counted loops to (i = 0; i < N; ++i); the bound N is
+    the largest integer constant in the condition computation.
+    """
+    best = 1
+    for op in comps.get(cond_name, []):
+        if op.opcode == "constant":
+            m = re.match(r"\s*(\d+)\s*$", op.raw_operands)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: HloOp, shapes: dict[str, str]) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.type_str):
+        out_elems *= d
+    lhs = shapes.get(op.operands[0]) if op.operands else None
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    k = 1
+    if lhs and cdims and cdims.group(1):
+        dims = _shape_dims(lhs)
+        for ci in cdims.group(1).split(","):
+            ci = int(ci)
+            if ci < len(dims):
+                k *= dims[ci]
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: list = dataclasses.field(default_factory=list)
+    bytes_by_op: dict = dataclasses.field(default_factory=dict)
+    flops_by_op: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c.ring_bytes() for c in self.collectives)
+
+    def top_bytes(self, n: int = 12) -> list[tuple[str, float]]:
+        return sorted(self.bytes_by_op.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _group_size(attrs: str, world: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:                      # iota form [groups, group_size]
+        return int(m.group(2))
+    return world
+
+
+def analyze_module(hlo: str, world: int = 1,
+                   entry: str | None = None) -> ModuleCost:
+    comps = parse_computations(hlo)
+    if not comps:
+        return ModuleCost()
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry = m.group(1) if m else next(iter(comps))
+
+    cost = ModuleCost()
+    visiting: set[str] = set()
+
+    def walk(comp: str, mult: float):
+        if comp not in comps or comp in visiting:
+            return
+        visiting.add(comp)
+        shapes = {op.name: op.type_str for op in comps[comp]}
+        for op in comps[comp]:
+            oc = op.opcode
+            if oc == "while":
+                body = _attr_comp(op.attrs, "body")
+                cond = _attr_comp(op.attrs, "condition")
+                m = _TRIP_RE.search(op.attrs)   # XLA's own loop analysis
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    walk(body, mult * max(1, trips))
+                continue
+            if oc in ("call", "async-start"):
+                tgt = _attr_comp(op.attrs, "to_apply") or \
+                    _attr_comp(op.attrs, "calls")
+                if tgt:
+                    walk(tgt, mult)
+            if oc == "conditional":
+                for b in re.findall(r"%([\w.\-]+)", op.attrs):
+                    if b in comps:
+                        walk(b, mult)
+                continue
+            if oc == "fusion":
+                tgt = _attr_comp(op.attrs, "calls")
+                if tgt:
+                    # only count dots inside fusions (fusion IO counted below)
+                    inner_shapes = {o.name: o.type_str
+                                    for o in comps.get(tgt, [])}
+                    for o in comps.get(tgt, []):
+                        if o.opcode == "dot":
+                            f = mult * _dot_flops(o, inner_shapes)
+                            cost.flops += f
+                            cost.flops_by_op["fused-dot"] = \
+                                cost.flops_by_op.get("fused-dot", 0.0) + f
+            if oc == "dot":
+                f = mult * _dot_flops(op, shapes)
+                cost.flops += f
+                cost.flops_by_op["dot"] = \
+                    cost.flops_by_op.get("dot", 0.0) + f
+            for ckind in _COLLECTIVES:
+                if oc == ckind or oc == ckind + "-start":
+                    cost.collectives.append(Collective(
+                        kind=ckind,
+                        out_bytes=_shape_bytes(op.type_str),
+                        group_size=_group_size(op.attrs, world),
+                        count=mult))
+                    break
+            if oc in _SKIP_OPS:
+                continue
+            b = _shape_bytes(op.type_str)
+            for o in op.operands:
+                if o in shapes:
+                    b += _shape_bytes(shapes[o])
+            cost.bytes_accessed += mult * b
+            # attribute bytes to the op's jax-level name for hillclimbing
+            m2 = re.search(r'op_name="jit\([\w.\-]+\)/([^"]*)"', op.attrs)
+            tag = m2.group(1).split(" ")[0] if m2 else oc
+            # strip trace prefixes to the semantic tail
+            tag = tag.split("/")[-1][:60]
+            cost.bytes_by_op[tag] = cost.bytes_by_op.get(tag, 0.0) + mult * b
+        visiting.discard(comp)
+
+    walk(entry, 1.0)
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float              # per-chip
+    hlo_bytes: float              # per-chip
+    coll_bytes: float             # per-chip ring-model link traffic
+    model_flops: float            # 6·N·D global
+    per_device_hbm: float         # memory_analysis args+temps
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Perfect-overlap model: the dominant term IS the step time."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (per-chip HLO flops × chips)."""
+        total_hlo = self.hlo_flops * self.n_chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of peak at the modeled step time (MFU
+        upper bound given this lowering)."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / self.n_chips) / (t * PEAK_FLOPS)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.n_chips,
+            "hlo_gflops_per_chip": self.hlo_flops / 1e9,
+            "hlo_gbytes_per_chip": self.hlo_bytes / 1e9,
+            "coll_gbytes_per_chip": self.coll_bytes / 1e9,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "per_device_hbm_gb": self.per_device_hbm / 1e9,
+        }

@@ -1,0 +1,1 @@
+"""Model zoo substrate: pure-JAX, pjit-ready, scan-over-layers."""

@@ -1,0 +1,252 @@
+"""Attention blocks: GQA (full / local / softcapped) and MLA (deepseek-v2).
+
+Each block exposes:
+    defs(cfg, ...)                      -> ParamDef tree
+    apply(cfg, p, x, positions, ...)    -> y                    (train/prefill)
+    decode(cfg, p, x, pos, cache)       -> (y, new_cache)       (serve_step)
+    init_cache(cfg, batch, max_len)     -> cache ShapeDtypeStructs/zeros
+
+KV caches are the framework's paged/contiguous gather targets (DESIGN.md §3):
+decode attention is a Spatter broadcast-gather over the cache, and the
+optimized serving path runs it through kernels/paged_decode.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from .common import (ParamDef, apply_rope, chunked_attention, rms_norm,
+                     rms_norm_def, softcap)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg) -> dict:
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    return {
+        "wq": ParamDef((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, kvh, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, kvh, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _qkv(cfg, p, x, positions, rope_mode):
+    kvh = cfg.n_kv_heads
+    g = cfg.n_heads // kvh
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta, rope_mode)
+    k = apply_rope(k, positions, cfg.rope_theta, rope_mode)
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, kvh, g, cfg.dh)
+    q = constrain(q, ("batch", "seq", "kv_heads", None, "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def gqa_kv(cfg, p: dict, src: jax.Array, positions: jax.Array):
+    """K/V from an external source sequence (cross-attention)."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    k = jnp.einsum("bsd,dhe->bshe", src, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", src, p["wv"])
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope)
+    return k, v
+
+
+def gqa_apply(cfg, p: dict, x: jax.Array, positions: jax.Array, *,
+              window: int = 0, return_kv: bool = False, causal: bool = True,
+              kv: tuple | None = None):
+    """Training / prefill attention. x (B,S,d); positions (S,) or (B,S).
+
+    ``kv`` overrides the self-attention K/V with externally computed ones
+    (cross-attention: whisper decoder attending to encoder states).
+    """
+    rope_mode = cfg.rope
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    q, k, v = _qkv(cfg, p, x, positions, rope_mode)
+    if kv is not None:
+        k, v = kv
+    o = chunked_attention(q, k, v, chunk=cfg.attn_chunk, causal=causal,
+                          window=window, attn_softcap=cfg.attn_softcap)
+    b, s = x.shape[:2]
+    o = o.reshape(b, s, cfg.n_heads, cfg.dh)
+    y = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    y = constrain(y, ("batch", "seq", "embed"))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_init_cache(cfg, batch: int, max_len: int, dtype, *, window: int = 0):
+    s = min(max_len, window) if window > 0 else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_cache_axes():
+    return {"k": ("batch", None, "kv_heads", "head_dim"),
+            "v": ("batch", None, "kv_heads", "head_dim")}
+
+
+def gqa_decode(cfg, p: dict, x: jax.Array, pos: jax.Array, cache: dict, *,
+               window: int = 0):
+    """Single-token decode. x (B,1,d); pos scalar int32; cache {k,v}.
+
+    The attention over the cache is the Spatter gather workload: every step
+    reads the whole (B, S, KVH, dh) cache once — pure memory traffic.
+    """
+    b = x.shape[0]
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(cfg, p, x, positions, cfg.rope)
+    s_max = cache["k"].shape[1]
+    slot = pos % s_max if window > 0 else pos      # ring buffer for local attn
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+
+    scale = 1.0 / math.sqrt(cfg.dh)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    kv_pos = jnp.arange(s_max)
+    if window > 0:
+        # ring buffer of size == window: once pos >= s_max every slot holds
+        # one of the last `window` positions, so all slots are valid; before
+        # that only slots <= pos have been written.
+        valid = (kv_pos <= pos) | (pos >= s_max)
+    else:
+        valid = kv_pos <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    prob = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", prob, v.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.n_heads, cfg.dh).astype(x.dtype)
+    y = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": ParamDef((d, r_q), ("embed", "qk_rank")),
+        "q_norm": rms_norm_def(r_q),
+        "w_uq": ParamDef((r_q, h, dn + dr), ("qk_rank", "heads", "head_dim")),
+        "w_dkv": ParamDef((d, r_kv), ("embed", "kv_rank")),
+        "kv_norm": rms_norm_def(r_kv),
+        "w_kr": ParamDef((d, dr), ("embed", "head_dim")),
+        "w_uk": ParamDef((r_kv, h, dn), ("kv_rank", "heads", "head_dim")),
+        "w_uv": ParamDef((r_kv, h, dv), ("kv_rank", "heads", "head_dim")),
+        "wo": ParamDef((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mla_q(cfg, p, x, positions):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(p["q_norm"], x @ p["w_dq"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])          # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta, "full")
+    return q_nope, q_rope
+
+
+def _mla_ckv(cfg, p, x, positions):
+    c_kv = rms_norm(p["kv_norm"], x @ p["w_dkv"], cfg.norm_eps)   # (B,S,r_kv)
+    k_pe = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                      cfg.rope_theta, "full")[:, :, 0]            # (B,S,dr)
+    return c_kv, k_pe
+
+
+def mla_apply(cfg, p: dict, x: jax.Array, positions: jax.Array):
+    """Training/prefill MLA: materialize per-head K/V from the latent."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    b, s, _ = x.shape
+    h, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_kv, k_pe = _mla_ckv(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"])
+    # append rope part to both q and k; treat heads as KVH groups of 1
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    # (B,S,H,1,dn+dr): every MLA head has its own K, so KVH=H and G=1
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_pe[:, :, None, :], (b, s, h, cfg.qk_rope_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(dn + cfg.qk_rope_dim)
+    o = chunked_attention(q, k, v, chunk=cfg.attn_chunk, causal=True,
+                          scale=scale, pin_heads=True)
+    o = o.reshape(b, s, h, dv)
+    y = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+def mla_apply_cache(cfg, p: dict, x: jax.Array, positions: jax.Array):
+    """Prefill variant of mla_apply that also returns the compressed cache."""
+    if positions.ndim == 1:
+        pos2 = positions[None, :]
+    else:
+        pos2 = positions
+    y = mla_apply(cfg, p, x, positions)
+    c_kv, k_pe = _mla_ckv(cfg, p, x, pos2)
+    return y, {"c_kv": c_kv, "k_pe": k_pe}
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_cache_axes():
+    return {"c_kv": ("batch", None, "kv_rank"),
+            "k_pe": ("batch", None, None)}
+
+
+def mla_decode(cfg, p: dict, x: jax.Array, pos: jax.Array, cache: dict):
+    """Absorbed-matrix MLA decode (the paper-relevant optimization):
+
+    Instead of re-materializing per-head K from the latent cache each step
+    (a (S, H, dn) blow-up gather), fold W_uk into the query — scores are an
+    inner product in the *compressed* space, so the gather over the cache
+    touches only r_kv + dr bytes per position: ~9x less memory traffic for
+    deepseek-v2 (512+64 vs 128·128).  Recorded in EXPERIMENTS.md §Perf.
+    """
+    b = x.shape[0]
+    h, dn, dv, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim, cfg.qk_rope_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)          # (B,1,H,*)
+    c_new, kpe_new = _mla_ckv(cfg, p, x, positions)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, pos, 0))
+    k_pe = jax.lax.dynamic_update_slice(cache["k_pe"], kpe_new, (0, pos, 0))
+
+    # absorb: q_c[b,1,h,r] = q_nope · W_uk^T
+    q_c = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])
+    scores = (jnp.einsum("bshr,btr->bhst", q_c.astype(jnp.float32),
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bshe,bte->bhst", q_rope.astype(jnp.float32),
+                           k_pe.astype(jnp.float32)))
+    scores *= 1.0 / math.sqrt(dn + dr)
+    t = c_kv.shape[1]
+    valid = jnp.arange(t) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    prob = jax.nn.softmax(scores, axis=-1)
+    # o_c[b,h,1,r] then expand through W_uv
+    o_c = jnp.einsum("bhst,btr->bshr", prob, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhe->bshe", o_c.astype(x.dtype), p["w_uv"])
+    y = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return y, {"c_kv": c_kv, "k_pe": k_pe}

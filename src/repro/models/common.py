@@ -1,0 +1,229 @@
+"""Shared model machinery: declarative params, norms, RoPE, MLPs, attention.
+
+Parameters are described declaratively with ParamDef (shape + logical axes +
+init), so the same tree yields:  real arrays (init), ShapeDtypeStructs
+(dry-run — no allocation), and PartitionSpecs (runtime/sharding.py rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# Declarative parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names per dim
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float | None = None            # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    return shape[0] if len(shape) > 1 else max(1, shape[0])
+
+
+def init_tree(key: jax.Array, defs, dtype) -> dict:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(
+                _fan_in(d.shape))
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_tree(defs, dtype) -> dict:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def axes_tree(defs) -> dict:
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers") -> dict:
+    """Prepend a scan dimension of length n to every ParamDef."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes,
+                           d.init, d.scale),
+        defs, is_leaf=is_def)
+
+
+def tree_bytes(defs, dtype) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    itemsize = jnp.dtype(dtype).itemsize
+    return sum(int(np.prod(d.shape)) * itemsize for d in leaves)
+
+
+def tree_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / MLPs
+# ---------------------------------------------------------------------------
+
+def rms_norm_def(d: int) -> dict:
+    return {"scale": ParamDef((d,), ("embed",), init="ones")}
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_def(cfg, d_in: int, d_ff: int, expert: bool = False) -> dict:
+    mlp_ax = "expert_mlp" if expert else "mlp"
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "wi": ParamDef((d_in, d_ff), ("embed", mlp_ax)),
+            "wg": ParamDef((d_in, d_ff), ("embed", mlp_ax)),
+            "wo": ParamDef((d_ff, d_in), (mlp_ax, "embed")),
+        }
+    return {   # plain gelu
+        "wi": ParamDef((d_in, d_ff), ("embed", mlp_ax)),
+        "wo": ParamDef((d_ff, d_in), (mlp_ax, "embed")),
+    }
+
+
+def mlp_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    h = x @ p["wi"]
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif cfg.mlp_kind == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mode: str = "full") -> jax.Array:
+    """x (..., S, H, dh); positions (..., S). mode: full | 2d (half-dim) | none."""
+    if mode == "none":
+        return x
+    dh = x.shape[-1]
+    rot = dh if mode == "full" else dh // 2
+    freqs = rope_freqs(rot, theta)                          # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                              axis=-1).astype(x.dtype)
+    if rot == dh:
+        return rotated
+    return jnp.concatenate([rotated, x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure lax, pjit-friendly
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      chunk: int, causal: bool = True, window: int = 0,
+                      attn_softcap: float = 0.0, q_offset: int = 0,
+                      scale: float | None = None,
+                      pin_heads: bool = False) -> jax.Array:
+    """Query-chunked attention.
+
+    q (B, S, KVH, G, dh); k/v (B, T, KVH, dh).  Chunking the query dim keeps
+    the score tensor at (B, KVH, G, chunk, T) instead of (…, S, T) — the
+    standard memory-capping trick for long sequences without a fused kernel.
+    """
+    b, s, kvh, g, dh = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]                   # may differ from dh (MLA)
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # ragged: fall back to single chunk
+    n_chunks = s // chunk
+
+    kv_pos = jnp.arange(t)
+
+    # remat each chunk: without this, XLA saves every chunk's (chunk, T)
+    # softmax probabilities as backward residuals — the classic quadratic
+    # attention-memory blow-up (measured: 59 GB/device temp on llama3-8b
+    # train_4k; 8.9 GB with chunk remat — EXPERIMENTS.md §Perf).
+    @jax.checkpoint
+    def one_chunk(ci, q_chunk):
+        q0 = ci * chunk + q_offset
+        scores = jnp.einsum("bqkgd,btkd->bkgqt",
+                            q_chunk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        scores = softcap(scores, attn_softcap)
+        q_pos = q0 + jnp.arange(chunk)
+        mask = jnp.ones((chunk, t), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bkgqt,btkd->bqkgd", p,
+                          v.astype(jnp.float32)).astype(q_chunk.dtype)
+
+    if n_chunks == 1:
+        return one_chunk(0, q)
+    qc = q.reshape(b, n_chunks, chunk, kvh, g, dh)
+    qc = jnp.moveaxis(qc, 1, 0)                         # (n, B, chunk, ...)
+    # pin the stacked-chunk sharding only for MLA-style attention
+    # (pin_heads=True, kvh == n_heads): there it kills a ~6 GB f32
+    # all-gather per layer pass on deepseek.  For GQA the pin is neutral
+    # (gemma2 kvh=16) or actively harmful (llama3 kvh=8 would force
+    # replication, 7x the memory term) — §Perf iterations 2/4.
+    if pin_heads:
+        from repro.runtime.sharding import constrain_if_sharded
+        qc = constrain_if_sharded(
+            qc, (None, "batch", None, "kv_heads", None, "head_dim"), 3)
+    out = jax.lax.map(lambda args: one_chunk(args[0], args[1]),
+                      (jnp.arange(n_chunks), qc))
+    if pin_heads:
+        from repro.runtime.sharding import constrain_if_sharded
+        out = constrain_if_sharded(
+            out, (None, "batch", None, "kv_heads", None, "head_dim"), 3)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, kvh, g, dv)

@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_a x_t)        (recurrence gate)
+    i_t = sigmoid(W_x x_t)        (input gate)
+    a_t = a ** (c * r_t),  a = sigmoid(lambda)   [elementwise, c = 8]
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in Griffin's recurrent block: conv1d(4) on the input branch, GeLU
+gate branch, output projection.  Sequential lax.scan with (B, width) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from .common import ParamDef
+
+_C = 8.0
+
+
+def rglru_defs(cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "in_x": ParamDef((d, w), ("embed", "rnn_width")),
+        "in_gate": ParamDef((d, w), ("embed", "rnn_width")),
+        "conv_w": ParamDef((4, w), ("conv", "rnn_width")),
+        "conv_b": ParamDef((w,), ("rnn_width",), init="zeros"),
+        "w_a": ParamDef((w, w), ("rnn_width", None)),
+        "b_a": ParamDef((w,), ("rnn_width",), init="zeros"),
+        "w_i": ParamDef((w, w), ("rnn_width", None)),
+        "b_i": ParamDef((w,), ("rnn_width",), init="zeros"),
+        "lam": ParamDef((w,), ("rnn_width",), init="ones"),
+        "out_proj": ParamDef((w, d), ("rnn_width", "embed")),
+    }
+
+
+def _conv4(p, x, conv_state=None):
+    dc = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(dc))
+    return y + p["conv_b"], xp[:, -(dc - 1):]
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(x @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(x @ p["w_i"] + p["b_i"])
+    log_a_base = -jax.nn.softplus(p["lam"]).astype(jnp.float32)  # log sigmoid
+    log_a = _C * r.astype(jnp.float32) * log_a_base
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12))
+    return a, beta, i
+
+
+def _step(carry, inp):
+    h = carry
+    a_t, beta_t, gated_x = inp
+    h = a_t * h + beta_t * gated_x
+    return h, h
+
+
+def rglru_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """x (B,S,d) -> (B,S,d)."""
+    b, s, _ = x.shape
+    xb = x @ p["in_x"]
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    xb = constrain(xb, ("batch", "seq", "rnn_width"))
+    xb, _ = _conv4(p, xb)
+    a, beta, i = _gates(p, xb)
+    gx = (i * xb).astype(jnp.float32)
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(beta, 1, 0),
+          jnp.moveaxis(gx, 1, 0))
+    h0 = jnp.zeros((b, cfg.lru_width), jnp.float32)
+    _, hs = jax.lax.scan(_step, h0, xs)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype) * gate
+    return y @ p["out_proj"]
+
+
+def rglru_init_cache(cfg, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, 3, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_cache_axes():
+    return {"conv": ("batch", "conv", "rnn_width"),
+            "h": ("batch", "rnn_width")}
+
+
+def rglru_decode(cfg, p: dict, x: jax.Array, cache: dict):
+    """Single-token update — O(1) state, runs the long_500k cell."""
+    xb = x @ p["in_x"]
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    xb, conv_state = _conv4(p, xb, cache["conv"])
+    a, beta, i = _gates(p, xb)
+    gx = (i * xb).astype(jnp.float32)
+    h, _ = _step(cache["h"], (a[:, 0], beta[:, 0], gx[:, 0]))
+    y = h[:, None].astype(x.dtype) * gate
+    return y @ p["out_proj"], {"conv": conv_state, "h": h}

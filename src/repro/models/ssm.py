@@ -1,0 +1,141 @@
+"""Mamba-1 selective-state-space block (falcon-mamba-7b).
+
+Attention-free: the paper's G/S technique applies only to the embedding/
+logit layers of this family (DESIGN.md §6 arch-applicability).  The
+selective scan is a sequential lax.scan carrying (B, d_inner, N) state —
+the TPU-friendly constant-memory form (no (B, L, D, N) blow-up).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from .common import ParamDef
+
+
+def _d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm_dt_rank or (cfg.d_model + 15) // 16
+
+
+def mamba_defs(cfg) -> dict:
+    d, di, n, r, dc = (cfg.d_model, _d_inner(cfg), cfg.ssm_state,
+                       _dt_rank(cfg), cfg.ssm_conv)
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "rnn_width")),
+        "conv_w": ParamDef((dc, di), ("conv", "rnn_width")),
+        "conv_b": ParamDef((di,), ("rnn_width",), init="zeros"),
+        "x_proj": ParamDef((di, r + 2 * n), ("rnn_width", None)),
+        "dt_proj": ParamDef((r, di), (None, "rnn_width")),
+        "dt_bias": ParamDef((di,), ("rnn_width",), init="zeros"),
+        "a_log": ParamDef((di, n), ("rnn_width", "state"), init="zeros"),
+        "d_skip": ParamDef((di,), ("rnn_width",), init="ones"),
+        "out_proj": ParamDef((di, d), ("rnn_width", "embed")),
+    }
+
+
+def _ssm_inputs(cfg, p, u):
+    """u (B,S,di) -> (dt, B_mat, C_mat) for the selective scan."""
+    n, r = cfg.ssm_state, _dt_rank(cfg)
+    xdbc = u @ p["x_proj"]                                  # (B,S,r+2n)
+    dt_r, b_mat, c_mat = jnp.split(xdbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    return dt, b_mat, c_mat
+
+
+def _conv_causal(cfg, p, x, conv_state=None):
+    """Depthwise causal conv1d. x (B,S,di). Returns (y, new_state)."""
+    dc = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B,S+dc-1,di)
+    y = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(dc))
+    y = y + p["conv_b"]
+    new_state = xp[:, -(dc - 1):] if dc > 1 else pad
+    return y, new_state
+
+
+def _scan_step(a_log, d_skip, carry, inp):
+    """h' = exp(dt*A) h + dt*B*u ; y = C·h + D*u   (single timestep)."""
+    h = carry                                               # (B, di, N)
+    u_t, dt_t, b_t, c_t = inp   # (B,di) (B,di) (B,N) (B,N)
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (di, N)
+    da = jnp.exp(dt_t[..., None] * a)                       # (B,di,N)
+    h = h * da + (dt_t * u_t)[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + d_skip * u_t
+    return h, y
+
+
+def mamba_apply(cfg, p: dict, x: jax.Array, *,
+                use_scan_kernel: bool = False) -> jax.Array:
+    """Full-sequence selective scan. x (B,S,d) -> (B,S,d).
+
+    ``use_scan_kernel`` routes the recurrence through the fused Pallas
+    kernel (kernels/selective_scan) — on TPU this removes the per-timestep
+    HBM round-trips that dominate the XLA lax.scan lowering (§Perf
+    iteration, falcon-mamba train_4k).  The XLA path remains the portable
+    default (and what the CPU dry-run lowers).
+    """
+    b, s, _ = x.shape
+    di, n = _d_inner(cfg), cfg.ssm_state
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                        # (B,S,di) each
+    u = constrain(u, ("batch", "seq", "rnn_width"))
+    u, _ = _conv_causal(cfg, p, u)
+    u = jax.nn.silu(u)
+    dt, b_mat, c_mat = _ssm_inputs(cfg, p, u)
+
+    if use_scan_kernel:
+        from repro.kernels.selective_scan import selective_scan
+        a = -jnp.exp(p["a_log"].astype(jnp.float32)).T      # (N, di)
+        ys, _ = selective_scan(u, dt, b_mat, c_mat, a,
+                               p["d_skip"][None].astype(jnp.float32))
+        y = ys.astype(x.dtype)
+    else:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+        xs = (jnp.moveaxis(u, 1, 0).astype(jnp.float32),
+              jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+              jnp.moveaxis(b_mat, 1, 0).astype(jnp.float32),
+              jnp.moveaxis(c_mat, 1, 0).astype(jnp.float32))
+        _, ys = jax.lax.scan(
+            lambda c, i: _scan_step(p["a_log"], p["d_skip"], c, i), h0, xs)
+        y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)          # (B,S,di)
+    y = y * jax.nn.silu(z)
+    return (y @ p["out_proj"]).astype(x.dtype)
+
+
+def mamba_init_cache(cfg, batch: int, dtype):
+    di = _d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_cache_axes():
+    return {"conv": ("batch", "conv", "rnn_width"),
+            "ssm": ("batch", "rnn_width", "state")}
+
+
+def mamba_decode(cfg, p: dict, x: jax.Array, cache: dict):
+    """Single-token state update: O(1) in context length — this is why the
+    ssm family runs the long_500k cell."""
+    xz = x @ p["in_proj"]                                   # (B,1,2di)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _conv_causal(cfg, p, u, cache["conv"])
+    u = jax.nn.silu(u)
+    dt, b_mat, c_mat = _ssm_inputs(cfg, p, u)
+    h, y = _scan_step(p["a_log"], p["d_skip"], cache["ssm"],
+                      (u[:, 0].astype(jnp.float32),
+                       dt[:, 0].astype(jnp.float32),
+                       b_mat[:, 0].astype(jnp.float32),
+                       c_mat[:, 0].astype(jnp.float32)))
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": conv_state, "ssm": h}

@@ -1,0 +1,380 @@
+"""Decoder-LM assembly: embedding (Spatter gather), block groups, loss, decode.
+
+Layer stacks are scanned (jax.lax.scan over stacked params) in homogeneous
+*groups* so heterogeneous archs stay scannable:
+
+    dense family:      [(L, ("dense",))]
+    gemma2:            [(L/2, ("local", "global"))]
+    moe (deepseek):    [(n_dense, ("dense",)), (L-n_dense, ("moe",))]
+    ssm:               [(L, ("mamba",))]
+    recurrentgemma:    [(12, ("rec","rec","attn_local")), (1, ("rec","rec"))]
+
+Scan keeps the lowered HLO one-block-sized — this is what makes 61-layer ×
+512-device dry-run compiles tractable, and it is also the production-grade
+choice (constant compile time in depth).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backends as gs_backends
+from repro.runtime.sharding import constrain
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import (ParamDef, abstract_tree, axes_tree, init_tree, mlp_apply,
+                     mlp_def, rms_norm, rms_norm_def, softcap, stack_defs)
+
+# ---------------------------------------------------------------------------
+# Embedding — the Spatter gather (vocab tables up to 256k rows)
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg) -> dict:
+    d = {"table": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           scale=1.0)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return d
+
+
+def embed_lookup(cfg, p: dict, tokens: jax.Array,
+                 backend: str = "xla") -> jax.Array:
+    """(B,S) int32 -> (B,S,d).  A row gather over the vocab table — the
+    framework's highest-volume Spatter pattern (BROADCAST class when tokens
+    repeat).  backend switches between core.backends implementations."""
+    b, s = tokens.shape
+    flat = gs_backends.gather(p["table"], tokens.reshape(-1), backend=backend)
+    x = flat.reshape(b, s, cfg.d_model)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def unembed_logits(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["table"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+    logits = softcap(logits, cfg.logit_softcap)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Block registry
+# ---------------------------------------------------------------------------
+
+def _mixer_defs(cfg, kind: str) -> dict:
+    if kind in ("dense", "local", "global", "attn_local"):
+        return attn.mla_defs(cfg) if cfg.attn_kind == "mla" else attn.gqa_defs(cfg)
+    if kind == "moe":
+        return attn.mla_defs(cfg) if cfg.attn_kind == "mla" else attn.gqa_defs(cfg)
+    if kind == "mamba":
+        return ssm_mod.mamba_defs(cfg)
+    if kind == "rec":
+        return rglru_mod.rglru_defs(cfg)
+    raise ValueError(kind)
+
+
+def block_defs(cfg, kind: str) -> dict:
+    d = {"ln1": rms_norm_def(cfg.d_model),
+         "mixer": _mixer_defs(cfg, kind)}
+    if kind == "mamba":
+        return d    # mamba block has no separate channel-MLP
+    d["ln2"] = rms_norm_def(cfg.d_model)
+    if kind == "moe":
+        d["mlp"] = moe_mod.moe_defs(cfg)
+    elif kind == "dense" and cfg.n_dense_layers and cfg.d_ff_dense:
+        d["mlp"] = mlp_def(cfg, cfg.d_model, cfg.d_ff_dense)
+    else:
+        d["mlp"] = mlp_def(cfg, cfg.d_model, cfg.d_ff)
+    return d
+
+
+def _block_window(cfg, kind: str) -> int:
+    if kind in ("local", "attn_local"):
+        return cfg.window
+    return 0
+
+
+def block_apply(cfg, kind: str, p: dict, x: jax.Array,
+                positions: jax.Array, collect_cache: bool = False):
+    """Returns (x', aux_loss, cache_entry_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    cache = None
+    if kind == "mamba":
+        y = ssm_mod.mamba_apply(cfg, p["mixer"], h)
+        return x + y, aux, None
+    if kind == "rec":
+        y = rglru_mod.rglru_apply(cfg, p["mixer"], h)
+    elif cfg.attn_kind == "mla":
+        if collect_cache:
+            y, cache = attn.mla_apply_cache(cfg, p["mixer"], h, positions)
+        else:
+            y = attn.mla_apply(cfg, p["mixer"], h, positions)
+    else:
+        w = _block_window(cfg, kind)
+        out = attn.gqa_apply(cfg, p["mixer"], h, positions, window=w,
+                             return_kv=collect_cache)
+        if collect_cache:
+            y, (k, v) = out
+            if w > 0:   # keep only the trailing window for local layers
+                k, v = k[:, -w:], v[:, -w:]
+            cache = {"k": k, "v": v}
+        else:
+            y = out
+    x = x + y
+    h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y2, aux = moe_mod.moe_apply(cfg, p["mlp"], h2)
+    else:
+        y2 = mlp_apply(cfg, p["mlp"], h2)
+    return x + y2, aux, cache
+
+
+def block_decode(cfg, kind: str, p: dict, x: jax.Array, pos: jax.Array,
+                 cache: Any):
+    """Single-token decode through one block. Returns (x', cache')."""
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    if kind == "mamba":
+        y, cache = ssm_mod.mamba_decode(cfg, p["mixer"], h, cache)
+        return x + y, cache
+    if kind == "rec":
+        y, cache = rglru_mod.rglru_decode(cfg, p["mixer"], h, cache)
+    elif cfg.attn_kind == "mla":
+        y, cache = attn.mla_decode(cfg, p["mixer"], h, pos, cache)
+    else:
+        w = _block_window(cfg, kind)
+        y, cache = attn.gqa_decode(cfg, p["mixer"], h, pos, cache, window=w)
+    x = x + y
+    h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y2, _ = moe_mod.moe_apply(cfg, p["mlp"], h2)
+    else:
+        y2 = mlp_apply(cfg, p["mlp"], h2)
+    return x + y2, cache
+
+
+def block_init_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind == "mamba":
+        return ssm_mod.mamba_init_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return rglru_mod.rglru_init_cache(cfg, batch, dtype)
+    if cfg.attn_kind == "mla":
+        return attn.mla_init_cache(cfg, batch, max_len, dtype)
+    w = _block_window(cfg, kind)
+    return attn.gqa_init_cache(cfg, batch, max_len, dtype, window=w)
+
+
+def block_cache_axes(cfg, kind: str):
+    if kind == "mamba":
+        return ssm_mod.mamba_cache_axes()
+    if kind == "rec":
+        return rglru_mod.rglru_cache_axes()
+    if cfg.attn_kind == "mla":
+        return attn.mla_cache_axes()
+    return attn.gqa_cache_axes()
+
+
+# ---------------------------------------------------------------------------
+# Stage (group) layout per architecture family
+# ---------------------------------------------------------------------------
+
+def stage_layout(cfg) -> list[tuple[int, tuple[str, ...]]]:
+    """[(n_groups, kinds_per_group), ...] — total layers must match."""
+    fam = cfg.family
+    if fam == "ssm":
+        return [(cfg.n_layers, ("mamba",))]
+    if fam == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        pat = tuple("attn_local" if k == "attn" else k for k in pat)
+        full = cfg.n_layers // len(pat)
+        rem = cfg.n_layers - full * len(pat)
+        out = [(full, pat)]
+        if rem:
+            out.append((1, pat[:rem]))
+        return out
+    if fam == "moe":
+        out = []
+        if cfg.n_dense_layers:
+            out.append((cfg.n_dense_layers, ("dense",)))
+        out.append((cfg.n_layers - cfg.n_dense_layers, ("moe",)))
+        return out
+    if cfg.attn_kind == "local_global":
+        assert cfg.n_layers % 2 == 0, "local/global alternation needs even L"
+        return [(cfg.n_layers // 2, ("local", "global"))]
+    return [(cfg.n_layers, ("dense",))]
+
+
+def stack_stage_defs(cfg) -> dict:
+    """ParamDef tree: {"stages": [{kind_i: stacked defs}], "embed", "ln_f"}.
+
+    Every stage is scan-stacked (even count==1) so forward/decode handle all
+    stages uniformly with lax.scan.
+    """
+    stages = []
+    for count, kinds in stage_layout(cfg):
+        group = {f"b{i}_{k}": block_defs(cfg, k) for i, k in enumerate(kinds)}
+        stages.append(stack_defs(group, count))
+    return {
+        "embed": embed_defs(cfg),
+        "stages": stages,
+        "ln_f": rms_norm_def(cfg.d_model),
+    }
+
+
+def _stage_scan(cfg, kinds, stacked_params, x, positions, collect_cache):
+    """Scan one homogeneous stage; optionally emit per-group caches."""
+    def body(carry, group_params):
+        x, aux = carry
+        caches = {}
+        for i, kind in enumerate(kinds):
+            key = f"b{i}_{kind}"
+            x, a, c = block_apply(cfg, kind, group_params[key], x, positions,
+                                  collect_cache)
+            # sequence-parallel residual stream: the block boundary value is
+            # what scan saves for backward — shard its seq dim over "model"
+            x = constrain(x, ("batch", "seq_resid", "embed"))
+            if cfg.remat == "block":
+                from jax.ad_checkpoint import checkpoint_name
+                x = checkpoint_name(x, "block_out")
+            aux = aux + a
+            if collect_cache:
+                caches[key] = c
+        return (x, aux), (caches if collect_cache else None)
+
+    if cfg.remat in ("block", "full"):
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable
+                              if cfg.remat == "full" else
+                              jax.checkpoint_policies.save_only_these_names(
+                                  "block_out"))
+    aux0 = (x.ravel()[0] * 0.0).astype(jnp.float32)   # vma-matched zero
+    (x, aux), caches = jax.lax.scan(body, (x, aux0), stacked_params)
+    return x, aux, caches
+
+
+def forward(cfg, params: dict, tokens: jax.Array, *,
+            img_embeds: jax.Array | None = None,
+            collect_cache: bool = False, gs_backend: str = "xla"):
+    """tokens (B,S) -> hidden (B,S,d) [+ caches]; aux loss accumulated."""
+    x = embed_lookup(cfg, params["embed"], tokens, backend=gs_backend)
+    if cfg.family == "vlm" and img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    x = x * math.sqrt(cfg.d_model)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+    all_caches = []
+    for stage_params, (count, kinds) in zip(params["stages"],
+                                            stage_layout(cfg)):
+        x, aux, caches = _stage_scan(cfg, kinds, stage_params, x,
+                                     positions, collect_cache)
+        aux_total = aux_total + aux
+        all_caches.append(caches)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    x = constrain(x, ("batch", "seq", "embed"))
+    if collect_cache:
+        return x, aux_total, all_caches
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy: no (B,S,V) materialization)
+# ---------------------------------------------------------------------------
+
+def chunked_xent(cfg, params: dict, hidden: jax.Array, labels: jax.Array,
+                 chunk: int = 512) -> jax.Array:
+    """Mean token cross-entropy, scanning seq chunks of the unembedding."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    n = s // chunk
+    hc = jnp.moveaxis(hidden.reshape(b, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+
+    # remat: recompute each chunk's logits in backward instead of saving the
+    # (B, chunk, V) f32 stack (2.1 GB x n_chunks on llama3 train_4k)
+    @jax.checkpoint
+    def one(carry, xs):
+        h, l = xs
+        logits = unembed_logits(cfg, params["embed"], h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    # derive the carry zero from the data so its varying-axes type matches
+    # under shard_map (vma system): a literal zeros(()) is axis-invariant
+    zero = (hc.ravel()[0] * 0.0).astype(jnp.float32)
+    total, _ = jax.lax.scan(one, zero, (hc, lc))
+    return total / (b * s)
+
+
+def lm_loss(cfg, params: dict, batch: dict, *, aux_weight: float = 0.01,
+            gs_backend: str = "xla") -> jax.Array:
+    img = batch.get("img_embeds")
+    hidden, aux = forward(cfg, params, batch["tokens"], img_embeds=img,
+                          gs_backend=gs_backend)
+    if cfg.family == "vlm" and img is not None:
+        hidden = hidden[:, img.shape[1]:]      # loss over text positions only
+    loss = chunked_xent(cfg, params, hidden, batch["labels"])
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> list:
+    caches = []
+    for count, kinds in stage_layout(cfg):
+        group = {}
+        for i, kind in enumerate(kinds):
+            one = block_init_cache(cfg, kind, batch, max_len, dtype)
+            group[f"b{i}_{kind}"] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), one)
+        caches.append(group)
+    return caches
+
+
+def cache_axes(cfg) -> list:
+    out = []
+    for count, kinds in stage_layout(cfg):
+        group = {}
+        for i, kind in enumerate(kinds):
+            ax = block_cache_axes(cfg, kind)
+            group[f"b{i}_{kind}"] = jax.tree.map(
+                lambda a: (None,) + a,
+                ax, is_leaf=lambda v: isinstance(v, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in v))
+        out.append(group)
+    return out
+
+
+def decode_step(cfg, params: dict, caches: list, tokens: jax.Array,
+                pos: jax.Array, *, gs_backend: str = "xla"):
+    """One decode step: tokens (B,1) + caches -> (logits (B,V), caches')."""
+    x = embed_lookup(cfg, params["embed"], tokens, backend=gs_backend)
+    x = x * math.sqrt(cfg.d_model)
+    new_caches = []
+    for stage_params, stage_cache, (count, kinds) in zip(
+            params["stages"], caches, stage_layout(cfg)):
+        def body(x, xs):
+            gp, gc = xs
+            new_gc = {}
+            for i, kind in enumerate(kinds):
+                key = f"b{i}_{kind}"
+                x, c = block_decode(cfg, kind, gp[key], x, pos, gc[key])
+                new_gc[key] = c
+            return x, new_gc
+        x, gc = jax.lax.scan(body, x, (stage_params, stage_cache))
+        new_caches.append(gc)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed_logits(cfg, params["embed"], x)[:, 0]
+    return logits, new_caches

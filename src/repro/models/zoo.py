@@ -1,0 +1,188 @@
+"""Model zoo: one uniform interface over all 10 assigned architectures.
+
+    model = Model(get_config("llama3-8b"))
+    params = model.init(key)                       # real arrays
+    aparams = model.abstract_params()              # ShapeDtypeStructs (dry-run)
+    loss = model.loss(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+    specs = model.input_specs(SHAPES["train_4k"])  # ShapeDtypeStruct stand-ins
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec, transformer
+from .common import abstract_tree, axes_tree, init_tree, is_def, tree_params
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family == "audio":
+            self.defs = encdec.encdec_defs(cfg)
+        else:
+            self.defs = transformer.stack_stage_defs(cfg)
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key: jax.Array, dtype=None):
+        return init_tree(key, self.defs, dtype or _dtype(self.cfg))
+
+    def abstract_params(self, dtype=None):
+        return abstract_tree(self.defs, dtype or _dtype(self.cfg))
+
+    def param_axes(self):
+        return axes_tree(self.defs)
+
+    # -- steps ------------------------------------------------------------------
+    def loss(self, params, batch: dict) -> jax.Array:
+        if self.cfg.family == "audio":
+            return encdec.encdec_loss(self.cfg, params, batch)
+        return transformer.lm_loss(self.cfg, params, batch)
+
+    def forward(self, params, tokens, **kw):
+        return transformer.forward(self.cfg, params, tokens, **kw)
+
+    def prefill(self, params, batch: dict):
+        """Prefill: returns (last-position logits or None, caches)."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            b = batch["frames"].shape[0]
+            cache = encdec.encdec_init_cache(
+                cfg, b, batch["max_len"], _dtype(cfg),
+                batch["frames"].shape[1])
+            cache = encdec.encdec_prefill_cross(cfg, params, batch["frames"],
+                                                cache)
+            return None, cache
+        hidden, _, caches = transformer.forward(
+            cfg, params, batch["tokens"],
+            img_embeds=batch.get("img_embeds"), collect_cache=True)
+        last = transformer.unembed_logits(cfg, params["embed"],
+                                          hidden[:, -1:])[:, 0]
+        return last, caches
+
+    def init_cache(self, batch: int, max_len: int, dtype=None,
+                   n_frames: int = 0):
+        cfg = self.cfg
+        dtype = dtype or _dtype(cfg)
+        if cfg.family == "audio":
+            return encdec.encdec_init_cache(cfg, batch, max_len, dtype,
+                                            n_frames)
+        return transformer.init_cache(cfg, batch, max_len, dtype)
+
+    def cache_axes(self):
+        if self.cfg.family == "audio":
+            return encdec.encdec_cache_axes()
+        return transformer.cache_axes(self.cfg)
+
+    def decode_step(self, params, cache, tokens, pos):
+        if self.cfg.family == "audio":
+            return encdec.encdec_decode_step(self.cfg, params, cache, tokens,
+                                             pos)
+        return transformer.decode_step(self.cfg, params, cache, tokens, pos)
+
+    # -- shape stand-ins (dry run; no allocation) -------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = _dtype(cfg)
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "train":
+            specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct(
+                (b, s), jnp.int32)}
+            if cfg.family == "audio":
+                f = s // cfg.frame_ratio
+                specs["frames"] = jax.ShapeDtypeStruct((b, f, cfg.d_model), dt)
+            if cfg.family == "vlm":
+                specs["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_img_tokens, cfg.d_model), dt)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": tok}
+            if cfg.family == "audio":
+                f = s // cfg.frame_ratio
+                specs = {"frames": jax.ShapeDtypeStruct((b, f, cfg.d_model),
+                                                        dt),
+                         "max_len": s}
+            if cfg.family == "vlm":
+                specs["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_img_tokens, cfg.d_model), dt)
+            return specs
+        # decode: one new token against a seq_len KV cache
+        max_len = s + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+        n_frames = s // cfg.frame_ratio if cfg.family == "audio" else 0
+        cache = jax.eval_shape(
+            lambda: self.init_cache(b, max_len, n_frames=n_frames))
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "cache": cache,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def _count(defs, path=()) -> tuple[int, int, int]:
+    """returns (total, routed_expert, embed_table) param counts."""
+    if is_def(defs):
+        n = int(np.prod(defs.shape))
+        routed = n if any(p == "experts" for p in path) else 0
+        table = n if path and path[-1] == "table" else 0
+        return n, routed, table
+    total = routed = table = 0
+    if isinstance(defs, dict):
+        items = defs.items()
+    elif isinstance(defs, (list, tuple)):
+        items = enumerate(defs)
+    else:
+        return 0, 0, 0
+    for k, v in items:
+        t, r, e = _count(v, path + (str(k),))
+        total, routed, table = total + t, routed + r, table + e
+    return total, routed, table
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    m = Model(cfg)
+    total, routed, _ = _count(m.defs)
+    if active_only and cfg.n_experts:
+        active_routed = routed * cfg.top_k / cfg.n_experts
+        return int(total - routed + active_routed)
+    return total
+
+
+def matmul_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Params participating in matmuls (excludes the embed *lookup* table,
+    which moves bytes, not FLOPs — unless tied, where it is also the
+    unembedding projection)."""
+    m = Model(cfg)
+    total, routed, table = _count(m.defs)
+    n = total if cfg.tie_embeddings else total - table
+    if active_only and cfg.n_experts:
+        n = n - routed + int(routed * cfg.top_k / cfg.n_experts)
+    return n
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (fwd-only), N active for MoE."""
+    n = matmul_params(cfg, active_only=True)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch * 1          # decode: one token per sequence
+    return 2.0 * n * d

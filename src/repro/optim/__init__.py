@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, init_opt_state, adamw_update, opt_state_axes
+from .schedule import warmup_cosine
+from .grad_utils import clip_by_global_norm, int8_compress, int8_decompress
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "opt_state_axes",
+           "warmup_cosine", "clip_by_global_norm", "int8_compress",
+           "int8_decompress"]

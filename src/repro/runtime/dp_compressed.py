@@ -1,0 +1,75 @@
+"""Cross-pod data parallelism with int8-compressed gradient all-reduce.
+
+The multi-pod mesh's "pod" axis crosses data-center interconnect; the one
+collective it carries is the per-step gradient all-reduce (DESIGN.md §5).
+This module provides the shard_map DP layer that quantizes that traffic to
+int8 with per-tensor scales and error feedback (optim/grad_utils): 4x less
+cross-pod bytes, bias-corrected over steps by the residual carry.
+
+Scope: pure data parallelism over the given axis (the model runs unsharded
+inside the body — use this as the *outer* layer around a per-pod TP step,
+or standalone for small models).  Validated against the uncompressed step
+in tests/test_dp_compressed.py (single-step tolerance + error-feedback
+drift bound over multiple steps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.optim import AdamWConfig, adamw_update, clip_by_global_norm
+from repro.optim.grad_utils import compressed_psum
+
+
+def make_compressed_dp_step(model, opt_cfg: AdamWConfig, mesh: Mesh, *,
+                            axis: str = "data", compress: bool = True):
+    """Returns step(params, opt_state, residuals, batch) ->
+    (params', opt_state', residuals', metrics).  ``residuals`` is the
+    error-feedback pytree (zeros_like(params) at step 0)."""
+
+    def body(params, opt_state, residuals, batch):
+        # params replicated over `axis`; batch sharded on dim 0
+        n = jax.lax.axis_size(axis)
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        loss = jax.lax.pmean(loss, axis)
+        if compress:
+            synced = {}
+            new_res = {}
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_r = jax.tree.leaves(residuals)
+            out_g, out_r = [], []
+            for g, r in zip(flat_g, flat_r):
+                s, nr = compressed_psum(g, axis, residual=r)
+                out_g.append(s)
+                out_r.append(nr)
+            grads = jax.tree.unflatten(tdef, out_g)
+            residuals = jax.tree.unflatten(tdef, out_r)
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        params, opt_state = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, residuals, {
+            "loss": loss, "grad_norm": gnorm}
+
+    def to_spec(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    def step(params, opt_state, residuals, batch):
+        batch_specs = jax.tree.map(lambda _: P(axis), batch)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(to_spec(params, P()), to_spec(opt_state, P()),
+                      to_spec(residuals, P()), batch_specs),
+            out_specs=(to_spec(params, P()), to_spec(opt_state, P()),
+                       to_spec(residuals, P()),
+                       {"loss": P(), "grad_norm": P()}),
+        )(params, opt_state, residuals, batch)
+
+    return step
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,101 @@
+"""GPipe pipeline parallelism via shard_map + lax.ppermute.
+
+The production meshes (launch/mesh.py) default to DP x TP; for depth-bound
+models at >=4 pods, pipeline parallelism splits the layer stack across a
+"pipe" axis.  This implements the classic GPipe schedule:
+
+  * each pipe-rank holds n_layers/P consecutive blocks (stacked params),
+  * M microbatches stream through; rank r computes microbatch m at tick
+    t = r + m, activations hop rank->rank with a single collective-permute
+    per tick (the cheapest collective on a TPU torus: one hop),
+  * the bubble overhead is the standard (P-1)/(M+P-1).
+
+Reverse-mode AD through ppermute transposes to the reverse permutation, so
+``jax.grad`` of a pipelined forward IS GPipe backward (fill-drain order,
+same bubble) — no custom VJP needed.
+
+Used by tests/test_pipeline.py (vs. sequential oracle) and available to
+launch/train.py via --pp; the dry-run meshes stay DP x TP by default.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _pipe_body(block_fn: Callable, n_micro: int, axis: str,
+               stage_params, x_stack):
+    """Per-rank body. stage_params: this rank's stacked layer params
+    (L/P, ...); x_stack: (M, mb, ...) microbatched inputs (replicated).
+    Returns (M, mb, ...) final activations (valid on the last rank)."""
+    p_rank = jax.lax.axis_index(axis)
+    p_size = jax.lax.axis_size(axis)
+    m_shape = x_stack.shape[1:]
+    n_ticks = n_micro + p_size - 1
+
+    def run_stage(carry_x):
+        # apply this rank's layer block (scan over local layers)
+        def one(x, lp):
+            return block_fn(lp, x), None
+        y, _ = jax.lax.scan(one, carry_x, stage_params)
+        return y
+
+    def tick(state, t):
+        buf, outs = state          # buf: activation entering this rank
+        # rank 0 ingests microbatch t (while available)
+        mb_idx = jnp.clip(t, 0, n_micro - 1)
+        fresh = jax.lax.dynamic_index_in_dim(x_stack, mb_idx, 0,
+                                             keepdims=False)
+        inp = jnp.where(p_rank == 0, fresh, buf)
+        out = run_stage(inp)
+        # last rank retires microbatch t - (P-1)
+        retire = t - (p_size - 1)
+        write_idx = jnp.clip(retire, 0, n_micro - 1)
+        do_write = (p_rank == p_size - 1) & (retire >= 0)
+        cur = jax.lax.dynamic_index_in_dim(outs, write_idx, 0,
+                                           keepdims=False)
+        new = jnp.where(do_write, out, cur)
+        outs = jax.lax.dynamic_update_index_in_dim(outs, new, write_idx, 0)
+        # hop activations one rank forward (ring; last->first carries junk)
+        perm = [(i, (i + 1) % p_size) for i in range(p_size)]
+        buf = jax.lax.ppermute(out, axis, perm)
+        return (buf, outs), None
+
+    # the carry becomes rank-varying after the first tick (axis_index,
+    # ppermute); mark it varying from the start so scan types match
+    buf0 = jax.lax.pcast(jnp.zeros(m_shape, x_stack.dtype), axis,
+                         to="varying")
+    outs0 = jax.lax.pcast(jnp.zeros((n_micro,) + m_shape, x_stack.dtype),
+                          axis, to="varying")
+    (buf, outs), _ = jax.lax.scan(tick, (buf0, outs0),
+                                  jnp.arange(n_ticks))
+    # broadcast the last rank's outputs to every rank (replicated result)
+    mask = (p_rank == p_size - 1).astype(outs.dtype)
+    return jax.lax.psum(outs * mask, axis)
+
+
+def pipeline_apply(mesh: Mesh, block_fn: Callable, stacked_params,
+                   x: jax.Array, *, n_micro: int, axis: str = "pipe"):
+    """Run x (B, ...) through n_layers of ``block_fn`` pipelined over
+    ``axis``.  stacked_params leaves have leading dim n_layers (must be
+    divisible by the pipe-axis size); B must be divisible by n_micro."""
+    p_size = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_micro == 0, (b, n_micro)
+    mb = b // n_micro
+    x_stack = x.reshape((n_micro, mb) + x.shape[1:])
+
+    # params: leading layer dim sharded over the pipe axis
+    param_specs = jax.tree.map(lambda _: P(axis), stacked_params)
+    fn = jax.shard_map(
+        functools.partial(_pipe_body, block_fn, n_micro, axis),
+        mesh=mesh,
+        in_specs=(param_specs, P()),
+        out_specs=P(),
+    )
+    out = fn(stacked_params, x_stack)
+    return out.reshape((b,) + out.shape[2:])

@@ -1,0 +1,158 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter / activation dimension carries a *logical* axis name
+("batch", "vocab", "heads", ...).  Rules map logical names to mesh axes;
+``logical_to_spec`` resolves them against concrete shapes, silently dropping
+a mesh axis when it does not divide the dimension (e.g. kv_heads=2 cannot
+shard over model=16 — it stays replicated, which is exactly what a GQA
+tensor-parallel layout does).
+
+A thread-local context carries (mesh, rules) so model code can annotate
+activations without threading the mesh through every call:
+
+    with use_mesh(mesh, rules):
+        x = constrain(x, ("batch", "seq", "embed"))
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes). None = replicate.
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,               # flipped to "model" for sequence parallelism
+    "seq_resid": "model",      # residual stream between blocks (Megatron-SP):
+                               # shrinks the per-layer saved activations by
+                               # the model-axis factor (17 GB -> 1.07 GB on
+                               # llama3-8b train_4k; see EXPERIMENTS.md §Perf)
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk_rank": None,           # MLA low-rank dims
+    "kv_rank": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "capacity": None,
+    "layers": None,            # scan-stacked leading dim
+    "state": None,             # SSM state dim
+    "conv": None,
+    "rnn_width": "model",      # RG-LRU width / mamba d_inner
+    "frames": None,
+    "opt_state": ("pod", "data", "model"),  # ZeRO-1 flat shard axis
+}
+
+_ctx = threading.local()
+
+
+def _mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def resolve_axis(logical: str | None, dim: int, mesh: Mesh,
+                 rules: dict) -> object:
+    """Resolve one logical axis to mesh axes that actually divide ``dim``."""
+    if logical is None:
+        return None
+    target = rules.get(logical, None)
+    if target is None:
+        return None
+    axes = (target,) if isinstance(target, str) else tuple(target)
+    axes = [a for a in axes if a in _mesh_axes(mesh)]
+    # keep the longest prefix of axes whose product divides dim
+    kept = []
+    prod = 1
+    for a in axes:
+        if dim % (prod * mesh.shape[a]) == 0:
+            kept.append(a)
+            prod *= mesh.shape[a]
+        else:
+            break
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else tuple(kept)
+
+
+def logical_to_spec(axes: Sequence[str | None], shape: Sequence[int],
+                    mesh: Mesh, rules: dict | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} vs shape {shape}")
+    used: set[str] = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        r = resolve_axis(name, dim, mesh, rules)
+        # a mesh axis may appear at most once in a spec
+        if isinstance(r, tuple):
+            r = tuple(a for a in r if a not in used) or None
+            if isinstance(r, tuple) and len(r) == 1:
+                r = r[0]
+        if isinstance(r, str) and r in used:
+            r = None
+        if r is not None:
+            used.update(r if isinstance(r, tuple) else (r,))
+        out.append(r)
+    return P(*out)
+
+
+# -- context ----------------------------------------------------------------
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: dict | None = None):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh() -> tuple[Mesh | None, dict]:
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return None, DEFAULT_RULES
+    return st
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+    """Annotate an activation with its logical sharding (no-op off-mesh)."""
+    mesh, rules = current_mesh()
+    if mesh is None or len(mesh.devices.flat) == 1:
+        return x
+    spec = logical_to_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_if_sharded(x: jax.Array, axes: Sequence[str | None],
+                         key_dim: int) -> jax.Array:
+    """Constrain only if the resolved spec actually shards ``key_dim``.
+
+    Replacing a GSPMD-chosen sharding with an explicit *replicated* spec is
+    a pessimization (measured: llama3 kvh=8 on model=16 — §Perf); only pin
+    when the rule resolves to a real axis for the key dimension.
+    """
+    mesh, rules = current_mesh()
+    if mesh is None or len(mesh.devices.flat) == 1:
+        return x
+    spec = logical_to_spec(axes, x.shape, mesh, rules)
+    if spec[key_dim] is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_tree(axes_tree, shape_tree, mesh: Mesh, rules: dict | None = None):
+    """Map logical_to_spec over parallel pytrees of axes and shapes."""
+    return jax.tree.map(
+        lambda axes, shp: logical_to_spec(axes, shp, mesh, rules),
+        axes_tree, shape_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v),
+    )

@@ -1,0 +1,112 @@
+"""Pattern-language unit tests — anchored on the paper's own examples."""
+import numpy as np
+import pytest
+
+from repro.core import (Pattern, dump_suite, generate_index, load_suite,
+                        make_pattern)
+from repro.core.pattern import broadcast, laplacian, ms1, uniform
+
+
+class TestGenerators:
+    def test_uniform_paper_semantics(self):
+        # paper §3.3.1 example prints [0,4,8,12] but defines length-N
+        # buffers; released Spatter semantics (followed here, DESIGN.md §9):
+        assert uniform(8, 4) == (0, 4, 8, 12, 16, 20, 24, 28)
+        assert uniform(4, 1) == (0, 1, 2, 3)
+
+    def test_ms1_paper_example(self):
+        # §3.3.2: MS1:8:4:20 -> [0,1,2,3,23,24,25,26]
+        assert ms1(8, 4, 20) == (0, 1, 2, 3, 23, 24, 25, 26)
+
+    def test_laplacian_paper_example(self):
+        # §3.3.3: LAPLACIAN:2:2:100 -> classic 5-point(ish) stencil
+        assert laplacian(2, 2, 100) == (0, 100, 198, 199, 200, 201, 202,
+                                        300, 400)
+
+    def test_laplacian_1d(self):
+        assert laplacian(1, 1, 10) == (0, 1, 2)
+
+    def test_broadcast(self):
+        assert broadcast(16, 4) == (0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2,
+                                    3, 3, 3, 3)
+
+    def test_parse_strings(self):
+        assert generate_index("UNIFORM:8:1") == tuple(range(8))
+        assert generate_index("MS1:8:4:20") == (0, 1, 2, 3, 23, 24, 25, 26)
+        assert generate_index("LAPLACIAN:2:2:100")[4] == 200
+        assert generate_index("0,4,8,12") == (0, 4, 8, 12)
+        assert generate_index("CUSTOM:7,3,1") == (7, 3, 1)
+        assert generate_index("STREAM:4") == (0, 1, 2, 3)
+
+    def test_parse_bad(self):
+        with pytest.raises(ValueError):
+            generate_index("NOPE:broken:x")
+
+
+class TestPattern:
+    def test_stream_like_example(self):
+        # paper §3.4: ./spatter -k Gather -p UNIFORM:8:1 -d 8 -l 2**24
+        p = make_pattern("UNIFORM:8:1", kind="gather", delta=8, count=2 ** 10)
+        assert p.index_len == 8
+        assert p.footprint() == 8 * (2 ** 10 - 1) + 8
+        assert p.useful_elements() == 8 * 2 ** 10
+        assert p.reuse_factor() == 1.0          # delta == span: no reuse
+
+    def test_overlap_reuse(self):
+        p = make_pattern("UNIFORM:8:1", delta=1, count=64)
+        assert p.reuse_factor() > 4
+
+    def test_absolute_indices(self):
+        p = make_pattern("UNIFORM:4:2", delta=3, count=3)
+        abs_idx = p.absolute_indices()
+        assert abs_idx.shape == (3, 4)
+        np.testing.assert_array_equal(abs_idx[0], [0, 2, 4, 6])
+        np.testing.assert_array_equal(abs_idx[2], [6, 8, 10, 12])
+
+    def test_classify(self):
+        assert make_pattern("UNIFORM:8:4").classify() == "Stride-4"
+        assert make_pattern("UNIFORM:8:1").classify() == "Stride-1"
+        assert make_pattern("BROADCAST:16:4").classify() == "Broadcast"
+        assert make_pattern("MS1:8:4:20").classify() == "Mostly Stride-1"
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Pattern("x", "gather", (), 1, 1)
+        with pytest.raises(ValueError):
+            Pattern("x", "upside-down", (0,), 1, 1)
+        with pytest.raises(ValueError):
+            Pattern("x", "gather", (0,), 1, 0)
+
+
+class TestSuiteIO:
+    def test_json_roundtrip(self):
+        ps = [make_pattern("UNIFORM:8:2", delta=4, count=16),
+              make_pattern("MS1:8:4:20", kind="scatter", delta=2, count=8)]
+        text = dump_suite(ps)
+        back = load_suite(text)
+        assert [p.index for p in back] == [p.index for p in ps]
+        assert [p.kind for p in back] == ["gather", "scatter"]
+
+    def test_json_pattern_string(self):
+        back = load_suite('[{"kernel":"gather","pattern":"UNIFORM:4:1",'
+                          '"delta":4,"count":10}]')
+        assert back[0].index == (0, 1, 2, 3)
+
+
+class TestAppDB:
+    def test_table5_integrity(self):
+        from repro.core import appdb
+        assert len(appdb.ALL_GATHERS) == 29     # 16 PENNANT + 8 LULESH + 3 NEK + 2 AMG
+        assert len(appdb.ALL_SCATTERS) == 5     # 1 PENNANT + 4 LULESH (incl. S3)
+        g4 = appdb.get("PENNANT-G4")
+        assert g4.classify() == "Broadcast"
+        assert g4.delta == 4
+        s3 = appdb.get("LULESH-S3")
+        assert s3.delta == 0                    # the §5.4 pathology
+        assert appdb.get("PENNANT-G15").delta == 1882384
+
+    def test_scale_counts(self):
+        from repro.core import appdb
+        scaled = appdb.scale_counts(appdb.ALL_PATTERNS, 1 / 1024)
+        assert all(p.count >= 1 for p in scaled)
+        assert scaled[0].index == appdb.ALL_PATTERNS[0].index

@@ -1,0 +1,103 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Pattern, make_pattern
+from repro.core.bandwidth import tpu_tile_model, HBM_BW, VMEM_BW
+
+
+@st.composite
+def patterns(draw):
+    n = draw(st.integers(1, 32))
+    stride = draw(st.integers(0, 64))
+    delta = draw(st.integers(0, 256))
+    count = draw(st.integers(1, 256))
+    kind = draw(st.sampled_from(["gather", "scatter"]))
+    idx = tuple(i * stride for i in range(n))
+    return Pattern("prop", kind, idx, delta, count)
+
+
+@settings(max_examples=60, deadline=None)
+@given(patterns())
+def test_pattern_geometry_invariants(p):
+    assert p.footprint() >= p.span
+    assert p.useful_elements() == p.index_len * p.count
+    assert 1 <= p.unique_elements() <= p.useful_elements()
+    assert p.reuse_factor() >= 1.0
+    abs_idx = p.absolute_indices()
+    assert abs_idx.shape == (p.count, p.index_len)
+    assert abs_idx.max() < p.footprint()
+    assert abs_idx.min() >= 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(patterns())
+def test_tile_model_invariants(p):
+    tm = tpu_tile_model(p, 4, sim_ops=32)
+    # modeled bandwidth never exceeds the VMEM ceiling and time is positive
+    assert tm.modeled_time_s > 0
+    assert tm.modeled_gbs <= VMEM_BW / 1e9 + 1e-6
+    # no-reuse patterns can't beat HBM bandwidth
+    if p.reuse_factor() == 1.0:
+        assert tm.modeled_gbs <= HBM_BW / 1e9 + 1e-6
+    # tile efficiency is bounded by reuse
+    assert tm.tile_efficiency <= p.reuse_factor() + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 8), st.integers(1, 1024))
+def test_uniform_tile_efficiency_decays(n, s_exp, count):
+    """Fig 3 invariant: doubling the stride never increases tile traffic."""
+    stride = 2 ** (s_exp - 1)
+    p1 = make_pattern(f"UNIFORM:{n}:{stride}", delta=n * stride + 1,
+                      count=count)
+    p2 = make_pattern(f"UNIFORM:{n}:{stride * 2}", delta=n * stride * 2 + 1,
+                      count=count)
+    t1 = tpu_tile_model(p1, 4, sim_ops=16)
+    t2 = tpu_tile_model(p2, 4, sim_ops=16)
+    assert t2.fetched_bytes >= t1.fetched_bytes - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# attention: chunked implementation vs naive oracle
+# ---------------------------------------------------------------------------
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import chunked_attention
+
+
+def _naive_attention(q, k, v, causal, window, cap):
+    b, s, kvh, g, dh = q.shape
+    t = k.shape[1]
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", q, k) / np.sqrt(dh)
+    if cap > 0:
+        scores = jnp.tanh(scores / cap) * cap
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= (qp - kp) < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([8, 16, 24, 32]),
+       st.sampled_from([1, 2]), st.sampled_from([1, 2, 4]),
+       st.booleans(), st.sampled_from([0, 8]),
+       st.sampled_from([0.0, 30.0]))
+def test_chunked_attention_matches_naive(b, s, kvh, g, causal, window, cap):
+    rng = np.random.default_rng(0)
+    dh = 8
+    q = jnp.asarray(rng.standard_normal((b, s, kvh, g, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, dh)), jnp.float32)
+    out = chunked_attention(q, k, v, chunk=8, causal=causal, window=window,
+                            attn_softcap=cap)
+    ref = _naive_attention(q, k, v, causal, window, cap)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
