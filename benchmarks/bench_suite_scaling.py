@@ -1,0 +1,72 @@
+"""Suite-scaling: batched planner vs one-compile-per-pattern (plan.py).
+
+A 32-pattern suite whose shapes collapse into a handful of pow-2 buckets
+is run both ways; the batched path must (a) compile only #buckets
+executables (cache miss counter) and (b) win wall-clock end-to-end,
+because per-pattern mode pays 32 XLA compiles.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import ExecutorCache, SuitePlan, make_pattern, run_suite
+
+from .harness import emit
+
+
+def make_suite(n: int = 32, count: int = 1 << 10):
+    """n patterns, half gather / half scatter, strides cycling 1..8."""
+    pats = []
+    for i in range(n):
+        kind = "gather" if i % 2 == 0 else "scatter"
+        stride = (i // 2) % 8 + 1
+        pats.append(make_pattern(f"UNIFORM:8:{stride}", kind=kind,
+                                 delta=8, count=count,
+                                 name=f"{kind[0]}{i}"))
+    return pats
+
+
+def run(runs: int = 3) -> dict:
+    pats = make_suite()
+    plan = SuitePlan.build(pats)
+
+    t0 = time.perf_counter()
+    run_suite(pats, backend="xla", runs=runs, batch=False)
+    t_per_pattern = time.perf_counter() - t0
+
+    cache = ExecutorCache()
+    t0 = time.perf_counter()
+    run_suite(pats, backend="xla", runs=runs, cache=cache)
+    t_batched_cold = time.perf_counter() - t0
+    compiles_cold = cache.misses
+
+    t0 = time.perf_counter()
+    run_suite(pats, backend="xla", runs=runs, cache=cache)
+    t_batched_warm = time.perf_counter() - t0
+    compiles_warm = cache.misses - compiles_cold
+
+    assert compiles_cold == plan.n_buckets < len(pats), \
+        (compiles_cold, plan.n_buckets)
+    assert compiles_warm == 0, compiles_warm
+
+    emit("suite_scaling/per_pattern", t_per_pattern * 1e6,
+         f"{len(pats)}compiles")
+    emit("suite_scaling/batched_cold", t_batched_cold * 1e6,
+         f"{compiles_cold}compiles")
+    emit("suite_scaling/batched_warm", t_batched_warm * 1e6,
+         f"{compiles_warm}compiles")
+    emit("suite_scaling/speedup_cold", 0.0,
+         f"{t_per_pattern / t_batched_cold:.1f}x")
+    emit("suite_scaling/speedup_warm", 0.0,
+         f"{t_per_pattern / t_batched_warm:.1f}x")
+    return {
+        "per_pattern_s": t_per_pattern,
+        "batched_cold_s": t_batched_cold,
+        "batched_warm_s": t_batched_warm,
+        "compiles_cold": compiles_cold,
+        "n_buckets": plan.n_buckets,
+    }
+
+
+if __name__ == "__main__":
+    run()

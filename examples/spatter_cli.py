@@ -32,11 +32,15 @@ def main():
                     help="TPU row granularity (1 = paper's scalar element)")
     ap.add_argument("--json", default=None,
                     help="run a JSON suite file instead (paper §3.3)")
+    ap.add_argument("--no-batch", action="store_true",
+                    help="suite mode: one compile per pattern instead of "
+                         "the bucketed planner (plan.py)")
     args = ap.parse_args()
 
     if args.json:
         stats = run_suite(load_suite(args.json), backend=args.backend,
-                          runs=args.runs, row_width=args.row_width)
+                          runs=args.runs, row_width=args.row_width,
+                          batch=not args.no_batch)
         print(f"{'name':24s} {'type':16s} {'cpu GB/s':>9s} {'v5e GB/s':>9s} "
               f"{'tile_eff':>8s}")
         for r in stats.results:
@@ -45,6 +49,10 @@ def main():
                   f"{r.tile_efficiency:8.3f}")
         print(f"\nsuite: min {stats.min_gbs:.2f}  max {stats.max_gbs:.2f}  "
               f"harmonic-mean {stats.hmean_gbs:.2f} GB/s   (paper §3.5)")
+        if stats.plan is not None:
+            print(f"plan : {len(stats.results)} patterns -> "
+                  f"{stats.plan.n_buckets} shape buckets "
+                  f"(pad waste {stats.plan.pad_waste():.1%})")
         return
 
     p = make_pattern(args.pattern, kind=args.kernel.lower(),

@@ -12,18 +12,22 @@ from .pattern import (Pattern, make_pattern, generate_index, load_suite,
                       dump_suite, uniform, ms1, laplacian, broadcast)
 from .backends import gather, scatter, BACKENDS
 from .engine import GSEngine, RunResult
+from .plan import (SuitePlan, BucketSpec, Bucket, ExecutorCache, run_plan,
+                   execute_bucket, default_cache)
 from .suite import run_suite, run_suite_file, stream_reference, \
     harmonic_mean, pearson_r, SuiteStats
 from .tracing import trace_gs, TraceReport, TracedAccess
-from . import appdb, bandwidth
+from . import appdb, bandwidth, compat
 
 __all__ = [
     "Pattern", "make_pattern", "generate_index", "load_suite", "dump_suite",
     "uniform", "ms1", "laplacian", "broadcast",
     "gather", "scatter", "BACKENDS",
     "GSEngine", "RunResult",
+    "SuitePlan", "BucketSpec", "Bucket", "ExecutorCache", "run_plan",
+    "execute_bucket", "default_cache",
     "run_suite", "run_suite_file", "stream_reference", "harmonic_mean",
     "pearson_r", "SuiteStats",
     "trace_gs", "TraceReport", "TracedAccess",
-    "appdb", "bandwidth",
+    "appdb", "bandwidth", "compat",
 ]

@@ -184,3 +184,22 @@ def gather(src: jax.Array, idx: jax.Array, *, backend: str = "xla") -> jax.Array
 def scatter(dst: jax.Array, idx: jax.Array, vals: jax.Array, *,
             mode: str = "store", backend: str = "xla") -> jax.Array:
     return SCATTER_FNS[backend](dst, idx, vals, mode)
+
+
+# ---------------------------------------------------------------------------
+# Batched dispatch (suite planner, core/plan.py): one vmapped launch runs a
+# whole shape bucket of patterns.  Leading dim is the pattern-batch dim.
+# ---------------------------------------------------------------------------
+
+def gather_batched(src: jax.Array, idx: jax.Array, *,
+                   backend: str = "xla") -> jax.Array:
+    """src: (B, F, R), idx: (B, N) -> (B, N, R); one launch for B patterns."""
+    return jax.vmap(lambda s, i: gather(s, i, backend=backend))(src, idx)
+
+
+def scatter_batched(dst: jax.Array, idx: jax.Array, vals: jax.Array, *,
+                    mode: str = "store", backend: str = "xla") -> jax.Array:
+    """dst: (B, F, R), idx: (B, N), vals: (B, N, R) -> (B, F, R)."""
+    return jax.vmap(
+        lambda d, i, v: scatter(d, i, v, mode=mode, backend=backend)
+    )(dst, idx, vals)

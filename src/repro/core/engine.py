@@ -26,6 +26,26 @@ from . import bandwidth as bw
 from .pattern import Pattern
 
 
+def make_host_buffers(pattern: Pattern, row_width: int, seed: int = 0):
+    """Host-side buffers for one pattern: (src, abs_idx, vals_or_None).
+
+    ``src`` is the (footprint, row_width) float32 table, ``abs_idx`` the
+    flattened (count*index_len,) int32 absolute indices, and ``vals`` the
+    scatter payload (None for gathers).  Both GSEngine and the suite
+    planner (plan.py) build their device buffers from this one function so
+    batched and per-pattern execution see bit-identical inputs.
+    """
+    rng = np.random.default_rng(seed)
+    f = pattern.footprint()
+    abs_idx = pattern.absolute_indices().reshape(-1)
+    src = rng.standard_normal((f, row_width), dtype=np.float32)
+    if pattern.kind == "gather":
+        return src, abs_idx, None
+    vals = rng.standard_normal((abs_idx.shape[0], row_width),
+                               dtype=np.float32)
+    return src, abs_idx, vals
+
+
 @dataclasses.dataclass(frozen=True)
 class RunResult:
     pattern: Pattern
@@ -65,7 +85,7 @@ class GSEngine:
         self.backend = backend
         self.dtype = jnp.dtype(dtype)
         self.row_width = row_width
-        self._rng = np.random.default_rng(seed)
+        self._seed = seed
         self._abs_idx = pattern.absolute_indices().reshape(-1)   # (count*L,)
         self._built = None
 
@@ -79,14 +99,12 @@ class GSEngine:
 
     def make_buffers(self):
         f, r = self.footprint_shape()
-        n = self._abs_idx.shape[0]
-        src = jnp.asarray(
-            self._rng.standard_normal((f, r), dtype=np.float32), self.dtype)
-        idx = jnp.asarray(self._abs_idx, jnp.int32)
+        host_src, host_idx, host_vals = make_host_buffers(
+            self.pattern, self.row_width, seed=self._seed)
+        idx = jnp.asarray(host_idx, jnp.int32)
         if self.pattern.kind == "gather":
-            return src, idx, None
-        vals = jnp.asarray(
-            self._rng.standard_normal((n, r), dtype=np.float32), self.dtype)
+            return jnp.asarray(host_src, self.dtype), idx, None
+        vals = jnp.asarray(host_vals, self.dtype)
         dst = jnp.zeros((f, r), self.dtype)
         return dst, idx, vals
 

@@ -1,0 +1,313 @@
+"""Suite execution planner: plan -> compile -> execute for pattern suites.
+
+DESIGN NOTE (referenced from suite.py)
+======================================
+
+Problem.  ``run_suite`` used to build one ``GSEngine`` per pattern, so an
+N-pattern suite paid N XLA compiles — compile time dwarfed execute time for
+the paper's JSON suites (§3.3) and made streamed/repeated suite runs (the
+"many scenarios per process" regime) unusable.
+
+Plan.  ``SuitePlan.build`` groups patterns into **shape buckets**: the two
+shape-bearing dims of a pattern's executable — the flattened index length
+``count * index_len`` and the table ``footprint`` — are padded up to the
+next power of two, and patterns whose ``(kind, padded_idx_len,
+padded_footprint)`` agree share one bucket.  Pow-2 padding trades at most
+2x wasted lanes for an O(log) number of distinct executable shapes.
+
+Compile.  One executable per bucket: a ``jax.jit``-wrapped ``vmap`` of the
+single-pattern backend op (backends.gather_batched / scatter_batched),
+with the pattern-batch as the mapped dim.  Executables live in an
+``ExecutorCache`` — an LRU keyed on ``(backend, kind, idx_len, footprint,
+dtype, row_width, mode)`` — so repeated or streamed suite runs reuse warm
+executables across ``run_suite`` calls.  The cache's ``misses`` counter is
+the compile counter: a 32-pattern suite compiles ``n_buckets`` (< 32)
+executables, and a second identical run compiles zero.  (jax itself
+re-traces a cached executable if the *batch* size changes; the bucket
+shapes, which dominate compile cost, stay fixed.)
+
+Execute.  Same-bucket patterns are stacked: indices into a (B, N_pad)
+int32 array, tables into (B, F_pad + 1, R).  Row ``F_pad`` of every table
+is a scratch row; padded lanes (both the lane tail up to N_pad and, for
+scatters, their payload) point at it, so they can never touch real rows,
+and they never enter the bandwidth numerator — ``measured_gbs`` /
+``modeled_gbs`` keep exactly the paper's §3.5 useful-bytes formula.
+Per-pattern buffers come from ``engine.make_host_buffers`` — the same
+function ``GSEngine`` uses — so batched results are bit-identical to
+per-pattern execution (asserted by tests/test_suite_plan.py on all four
+backends).
+
+Timing attribution.  A bucket launch is timed like GSEngine.run (min over
+K runs, §3.5); each member pattern is attributed wall time proportional to
+its share of the bucket's real lanes, so every pattern in a bucket reports
+the bandwidth the *launch* achieved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import backends as B
+from . import bandwidth as bw
+from .engine import RunResult, make_host_buffers
+from .pattern import Pattern
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """Shape signature shared by every pattern in a bucket."""
+    kind: str           # "gather" | "scatter"
+    idx_len: int        # count * index_len, padded to pow2
+    footprint: int      # table footprint, padded to pow2
+
+    @staticmethod
+    def of(p: Pattern) -> "BucketSpec":
+        return BucketSpec(kind=p.kind,
+                          idx_len=next_pow2(p.count * p.index_len),
+                          footprint=next_pow2(p.footprint()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    spec: BucketSpec
+    members: tuple[int, ...]      # positions into the suite's pattern list
+
+
+@dataclasses.dataclass(frozen=True)
+class SuitePlan:
+    patterns: tuple[Pattern, ...]
+    buckets: tuple[Bucket, ...]
+
+    @staticmethod
+    def build(patterns: Sequence[Pattern]) -> "SuitePlan":
+        groups: dict[BucketSpec, list[int]] = {}
+        for i, p in enumerate(patterns):
+            groups.setdefault(BucketSpec.of(p), []).append(i)
+        buckets = tuple(
+            Bucket(spec=spec, members=tuple(groups[spec]))
+            for spec in sorted(groups,
+                               key=lambda s: (s.kind, s.idx_len, s.footprint)))
+        return SuitePlan(patterns=tuple(patterns), buckets=buckets)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def pad_waste(self) -> float:
+        """Fraction of launched lanes that are padding (0 = no waste)."""
+        real = sum(p.count * p.index_len for p in self.patterns)
+        launched = sum(b.spec.idx_len * len(b.members) for b in self.buckets)
+        return 1.0 - real / max(1, launched)
+
+
+# ---------------------------------------------------------------------------
+# Executor cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecKey:
+    backend: str
+    kind: str
+    idx_len: int
+    footprint: int
+    dtype: str
+    row_width: int
+    mode: str           # "store" | "add" for scatter, "" for gather
+
+
+class ExecutorCache:
+    """LRU of compiled bucket executables; ``misses`` counts compiles."""
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self._entries: OrderedDict[ExecKey, Callable] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: ExecKey, builder: Callable[[], Callable]) -> Callable:
+        fn = self._entries.get(key)
+        if fn is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return fn
+        self.misses += 1
+        fn = builder()
+        self._entries[key] = fn
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return fn
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+_DEFAULT_CACHE = ExecutorCache()
+
+
+def default_cache() -> ExecutorCache:
+    """Process-wide cache: repeated run_suite calls share warm executables."""
+    return _DEFAULT_CACHE
+
+
+def _build_executable(backend: str, kind: str, mode: str) -> Callable:
+    if kind == "gather":
+        def fn(src_b, idx_b):
+            return B.gather_batched(src_b, idx_b, backend=backend)
+    else:
+        def fn(dst_b, idx_b, vals_b):
+            return B.scatter_batched(dst_b, idx_b, vals_b, mode=mode,
+                                     backend=backend)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Bucket assembly + execution
+# ---------------------------------------------------------------------------
+
+def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
+                     seed: int):
+    """Stack a bucket's patterns into batched device buffers.
+
+    Returns (args, real_lanes) where args feeds the bucket executable and
+    real_lanes[b] is member b's un-padded lane count.  Table row F_pad is
+    the scratch row every padded lane points at.
+    """
+    spec = bucket.spec
+    nb = len(bucket.members)
+    n_pad, f_pad, r = spec.idx_len, spec.footprint, row_width
+    idx_b = np.full((nb, n_pad), f_pad, np.int32)          # pad -> scratch
+    table_b = (np.zeros((nb, f_pad + 1, r), np.float32)
+               if spec.kind == "gather" else None)
+    vals_b = (np.zeros((nb, n_pad, r), np.float32)
+              if spec.kind == "scatter" else None)
+    real_lanes = []
+    for b, pos in enumerate(bucket.members):
+        p = plan.patterns[pos]
+        src, abs_idx, vals = make_host_buffers(p, r, seed=seed)
+        n = abs_idx.shape[0]
+        real_lanes.append(n)
+        idx_b[b, :n] = abs_idx
+        if spec.kind == "gather":
+            table_b[b, :src.shape[0]] = src
+        else:
+            vals_b[b, :n] = vals
+    idx = jnp.asarray(idx_b)
+    if spec.kind == "gather":
+        return (jnp.asarray(table_b, dtype), idx), real_lanes
+    dst = jnp.zeros((nb, f_pad + 1, r), dtype)
+    return (dst, idx, jnp.asarray(vals_b, dtype)), real_lanes
+
+
+def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
+                   dtype=jnp.float32, row_width: int = 1,
+                   mode: str = "store", seed: int = 0,
+                   cache: ExecutorCache | None = None) -> list[np.ndarray]:
+    """Run one bucket once and return per-member un-padded outputs.
+
+    Gathers give member i its (count*index_len, R) rows; scatters give the
+    (footprint, R) result table (scratch row trimmed).
+    """
+    cache = cache if cache is not None else default_cache()
+    spec = bucket.spec
+    key = _exec_key(backend, spec, dtype, row_width, mode)
+    fn = cache.get(key, lambda: _build_executable(backend, spec.kind,
+                                                  key.mode))
+    args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width, seed)
+    out = np.asarray(jax.block_until_ready(fn(*args)))
+    trimmed = []
+    for b, pos in enumerate(bucket.members):
+        if spec.kind == "gather":
+            trimmed.append(out[b, :real_lanes[b]])
+        else:
+            trimmed.append(out[b, :plan.patterns[pos].footprint()])
+    return trimmed
+
+
+def _exec_key(backend: str, spec: BucketSpec, dtype, row_width: int,
+              mode: str) -> ExecKey:
+    return ExecKey(backend=backend, kind=spec.kind, idx_len=spec.idx_len,
+                   footprint=spec.footprint, dtype=jnp.dtype(dtype).name,
+                   row_width=row_width,
+                   mode=mode if spec.kind == "scatter" else "")
+
+
+def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
+             row_width: int = 1, runs: int = 10, mode: str = "store",
+             seed: int = 0,
+             cache: ExecutorCache | None = None) -> list[RunResult]:
+    """Execute a SuitePlan with paper-style timing (min over ``runs``).
+
+    Returns one RunResult per pattern, in the suite's original order.
+    Wall time of a bucket launch is attributed to members proportionally
+    to their real (un-padded) lanes.
+    """
+    if backend not in B.BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    dtype = jnp.dtype(dtype or jnp.float32)
+    cache = cache if cache is not None else default_cache()
+    elem_bytes = dtype.itemsize * row_width
+    results: list[RunResult | None] = [None] * len(plan.patterns)
+
+    for bucket in plan.buckets:
+        spec = bucket.spec
+        key = _exec_key(backend, spec, dtype, row_width, mode)
+        fn = cache.get(key, lambda: _build_executable(backend, spec.kind,
+                                                      key.mode))
+        args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width,
+                                            seed)
+        if spec.kind == "scatter":
+            dst, idx, vals = args
+            jax.block_until_ready(fn(dst, idx, vals))       # compile & warm
+            times = []
+            for _ in range(runs):
+                d = jnp.zeros_like(dst)
+                jax.block_until_ready(d)
+                t0 = time.perf_counter()
+                out = fn(d, idx, vals)
+                jax.block_until_ready(out)
+                times.append(time.perf_counter() - t0)
+        else:
+            jax.block_until_ready(fn(*args))                # compile & warm
+            times = []
+            for _ in range(runs):
+                t0 = time.perf_counter()
+                out = fn(*args)
+                jax.block_until_ready(out)
+                times.append(time.perf_counter() - t0)
+        t_bucket = min(times)                                # paper §3.5
+
+        total_lanes = sum(real_lanes)
+        for b, pos in enumerate(bucket.members):
+            p = plan.patterns[pos]
+            t_i = t_bucket * real_lanes[b] / total_lanes
+            tm = bw.tpu_tile_model(p, elem_bytes)
+            results[pos] = RunResult(
+                pattern=p, backend=backend, elem_bytes=elem_bytes,
+                row_width=row_width, runs=runs, time_s=t_i,
+                measured_gbs=bw.paper_bandwidth(p, t_i, elem_bytes) / 1e9,
+                modeled_gbs=tm.modeled_gbs,
+                tile_efficiency=tm.tile_efficiency,
+            )
+    return results  # type: ignore[return-value]

@@ -1,8 +1,16 @@
 """Multi-pattern suite runner — the paper's JSON-input mode (§3.3, §3.5).
 
-Runs many patterns through GSEngine, then reports the aggregate stats the
-paper reports: per-pattern bandwidths, suite min/max, harmonic mean, and
-Pearson's R against a STREAM-like reference (paper Eq. 1 / Table 4).
+Runs many patterns, then reports the aggregate stats the paper reports:
+per-pattern bandwidths, suite min/max, harmonic mean, and Pearson's R
+against a STREAM-like reference (paper Eq. 1 / Table 4).
+
+Execution goes through the suite planner by default (``batch=True``):
+patterns are grouped into shape buckets and each bucket runs as one
+vmapped launch through a process-wide executable cache, so an N-pattern
+suite compiles #buckets executables instead of N and repeated suite runs
+compile nothing.  See the DESIGN NOTE in plan.py for the full plan ->
+compile -> execute design and the padding/scratch-row semantics.
+``batch=False`` restores the original one-GSEngine-per-pattern path.
 """
 from __future__ import annotations
 
@@ -13,6 +21,7 @@ import numpy as np
 
 from .engine import GSEngine, RunResult
 from .pattern import Pattern, load_suite, make_pattern
+from .plan import ExecutorCache, SuitePlan, run_plan
 
 
 @dataclasses.dataclass
@@ -21,6 +30,7 @@ class SuiteStats:
     min_gbs: float
     max_gbs: float
     hmean_gbs: float
+    plan: SuitePlan | None = None        # set when the batched path ran
 
     def table(self, metric: str = "measured_cpu_gbs") -> list[dict]:
         return [r.row() for r in self.results]
@@ -43,13 +53,23 @@ def pearson_r(xs, ys) -> float:
 
 def run_suite(patterns: list[Pattern], *, backend: str = "xla",
               dtype=None, row_width: int = 1, runs: int = 10,
-              metric: str = "measured") -> SuiteStats:
+              metric: str = "measured", batch: bool = True,
+              cache: ExecutorCache | None = None) -> SuiteStats:
     import jax.numpy as jnp
+    if not patterns:
+        raise ValueError("run_suite needs at least one pattern")
     dtype = dtype or jnp.float32
-    results = []
-    for p in patterns:
-        eng = GSEngine(p, backend=backend, dtype=dtype, row_width=row_width)
-        results.append(eng.run(runs=runs))
+    plan = None
+    if batch:
+        plan = SuitePlan.build(patterns)
+        results = run_plan(plan, backend=backend, dtype=dtype,
+                           row_width=row_width, runs=runs, cache=cache)
+    else:
+        results = []
+        for p in patterns:
+            eng = GSEngine(p, backend=backend, dtype=dtype,
+                           row_width=row_width)
+            results.append(eng.run(runs=runs))
     key = (lambda r: r.measured_gbs) if metric == "measured" \
         else (lambda r: r.modeled_gbs)
     vals = [key(r) for r in results]
@@ -57,6 +77,7 @@ def run_suite(patterns: list[Pattern], *, backend: str = "xla",
         results=results,
         min_gbs=min(vals), max_gbs=max(vals),
         hmean_gbs=harmonic_mean(vals),
+        plan=plan,
     )
 
 

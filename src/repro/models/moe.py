@@ -21,6 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import axis_size, pcast, shard_map
 from repro.runtime.sharding import constrain
 from .common import ParamDef, mlp_def, mlp_apply
 
@@ -137,12 +138,12 @@ def _ep_inner(cfg, axis: str, pp: dict, xt: jax.Array, tope: jax.Array,
     # this the per-rank cotangents of xt/topw (each rank consumed different
     # tokens) are silently treated as replicated and 15/16 of the gradient
     # is dropped (caught by tests/test_moe_ep.py grad-equivalence).
-    xt = jax.lax.pcast(xt, axis, to="varying")
-    tope = jax.lax.pcast(tope, axis, to="varying")
-    topw = jax.lax.pcast(topw, axis, to="varying")
+    xt = pcast(xt, axis, to="varying")
+    tope = pcast(tope, axis, to="varying")
+    topw = pcast(topw, axis, to="varying")
     n, d = xt.shape
     e, k = cfg.n_experts, cfg.top_k
-    ep = jax.lax.axis_size(axis)
+    ep = axis_size(axis)
     e_loc = e // ep
     j = jax.lax.axis_index(axis)
     e_lo = j * e_loc
@@ -219,7 +220,7 @@ def moe_apply_ep(cfg, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
         "wo": P("model", None, None)}
 
     inner = partial(_ep_inner, cfg, "model")
-    y = jax.shard_map(
+    y = shard_map(
         inner, mesh=mesh,
         in_specs=(expert_specs, P(batch_axes, None),
                   P(batch_axes, None), P(batch_axes, None)),

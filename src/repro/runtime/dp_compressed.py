@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import axis_size, shard_map_unchecked
 from repro.optim import AdamWConfig, adamw_update, clip_by_global_norm
 from repro.optim.grad_utils import compressed_psum
 
@@ -32,7 +33,7 @@ def make_compressed_dp_step(model, opt_cfg: AdamWConfig, mesh: Mesh, *,
 
     def body(params, opt_state, residuals, batch):
         # params replicated over `axis`; batch sharded on dim 0
-        n = jax.lax.axis_size(axis)
+        n = axis_size(axis)
         loss, grads = jax.value_and_grad(model.loss)(params, batch)
         loss = jax.lax.pmean(loss, axis)
         if compress:
@@ -59,7 +60,9 @@ def make_compressed_dp_step(model, opt_cfg: AdamWConfig, mesh: Mesh, *,
 
     def step(params, opt_state, residuals, batch):
         batch_specs = jax.tree.map(lambda _: P(axis), batch)
-        return jax.shard_map(
+        # residuals are rank-local error-feedback state threaded through a
+        # nominally-replicated spec; the replication checker must be off
+        return shard_map_unchecked(
             body, mesh=mesh,
             in_specs=(to_spec(params, P()), to_spec(opt_state, P()),
                       to_spec(residuals, P()), batch_specs),

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import axis_size, pcast, shard_map
+
 
 def _pipe_body(block_fn: Callable, n_micro: int, axis: str,
                stage_params, x_stack):
@@ -33,7 +35,7 @@ def _pipe_body(block_fn: Callable, n_micro: int, axis: str,
     (L/P, ...); x_stack: (M, mb, ...) microbatched inputs (replicated).
     Returns (M, mb, ...) final activations (valid on the last rank)."""
     p_rank = jax.lax.axis_index(axis)
-    p_size = jax.lax.axis_size(axis)
+    p_size = axis_size(axis)
     m_shape = x_stack.shape[1:]
     n_ticks = n_micro + p_size - 1
 
@@ -67,10 +69,9 @@ def _pipe_body(block_fn: Callable, n_micro: int, axis: str,
 
     # the carry becomes rank-varying after the first tick (axis_index,
     # ppermute); mark it varying from the start so scan types match
-    buf0 = jax.lax.pcast(jnp.zeros(m_shape, x_stack.dtype), axis,
-                         to="varying")
-    outs0 = jax.lax.pcast(jnp.zeros((n_micro,) + m_shape, x_stack.dtype),
-                          axis, to="varying")
+    buf0 = pcast(jnp.zeros(m_shape, x_stack.dtype), axis, to="varying")
+    outs0 = pcast(jnp.zeros((n_micro,) + m_shape, x_stack.dtype),
+                  axis, to="varying")
     (buf, outs), _ = jax.lax.scan(tick, (buf0, outs0),
                                   jnp.arange(n_ticks))
     # broadcast the last rank's outputs to every rank (replicated result)
@@ -91,7 +92,7 @@ def pipeline_apply(mesh: Mesh, block_fn: Callable, stacked_params,
 
     # params: leading layer dim sharded over the pipe axis
     param_specs = jax.tree.map(lambda _: P(axis), stacked_params)
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(_pipe_body, block_fn, n_micro, axis),
         mesh=mesh,
         in_specs=(param_specs, P()),

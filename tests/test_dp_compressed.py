@@ -37,7 +37,7 @@ CODE = textwrap.dedent("""
     oc = init_opt_state(params0)
     res = init_residuals(params0)
     losses_e, losses_c = [], []
-    for i in range(8):
+    for i in range(24):
         batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
         pe, oe, _, me = exact(pe, oe, init_residuals(params0), batch)
         pc, oc, res, mc = comp(pc, oc, res, batch)
@@ -50,8 +50,8 @@ CODE = textwrap.dedent("""
     drift = max(float(jnp.abs(a - b).max())
                 for a, b in zip(jax.tree.leaves(pe), jax.tree.leaves(pc)))
     assert drift < 0.05, drift
-    # both learn
-    assert losses_c[-1] < losses_c[0]
+    # both learn (windowed means: single-step compares are noise-prone)
+    assert sum(losses_c[-4:]) / 4 < sum(losses_c[:4]) / 4 - 0.3
     print("OK", max(diffs), drift)
 """) % REPO
 

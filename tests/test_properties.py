@@ -1,5 +1,9 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Pattern, make_pattern

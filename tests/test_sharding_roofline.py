@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import make_abstract_mesh
 from repro.launch.roofline import (Collective, analyze_module,
                                    parse_computations, _shape_bytes)
 
@@ -25,7 +26,7 @@ class TestLogicalSpec:
     def _mesh(self):
         # fake mesh objects need real devices; use a 1-device mesh with
         # axis sizes read from shape, so build an abstract mesh instead
-        return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        return make_abstract_mesh((16, 16), ("data", "model"))
 
     def test_divisible(self):
         from repro.runtime.sharding import logical_to_spec
@@ -42,8 +43,7 @@ class TestLogicalSpec:
 
     def test_batch_multi_axis(self):
         from repro.runtime.sharding import logical_to_spec
-        mesh3 = jax.sharding.AbstractMesh((2, 16, 16),
-                                          ("pod", "data", "model"))
+        mesh3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
         spec = logical_to_spec(("batch", "seq", "embed"), (256, 4096, 4096),
                                mesh3)
         assert spec[0] == ("pod", "data")
@@ -58,7 +58,7 @@ class TestLogicalSpec:
 class TestZero1:
     def test_moments_fully_sharded(self):
         from repro.runtime.train import zero1_shardings
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh = make_abstract_mesh((16, 16), ("data", "model"))
         axes = {"w": ("layers", "experts", "embed", "expert_mlp")}
         avals = {"w": jax.ShapeDtypeStruct((60, 384, 7168, 2048),
                                            jnp.float32)}

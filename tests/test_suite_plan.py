@@ -1,0 +1,189 @@
+"""Suite planner: bucketing, executor cache, and batched-vs-per-pattern
+numerical equivalence (plan.py DESIGN NOTE)."""
+import random
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BucketSpec, ExecutorCache, GSEngine, Pattern,
+                        SuitePlan, execute_bucket, make_pattern, run_plan,
+                        run_suite)
+from repro.core import backends as B
+from repro.core.engine import make_host_buffers
+from repro.core.plan import next_pow2
+
+
+def _suite(n_gather=4, n_scatter=4, count=32):
+    pats = []
+    for i in range(n_gather):
+        pats.append(make_pattern(f"UNIFORM:8:{i + 1}", kind="gather",
+                                 delta=8, count=count, name=f"g{i}"))
+    for i in range(n_scatter):
+        pats.append(make_pattern(f"UNIFORM:8:{i + 1}", kind="scatter",
+                                 delta=8, count=count, name=f"s{i}"))
+    return pats
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (1, 2, 3, 4, 5, 255, 256, 257)] == \
+        [1, 2, 4, 4, 8, 256, 256, 512]
+
+
+def test_bucket_pad_amounts():
+    # count*index_len = 32*8 = 256 (already pow2); footprint = 8*31+57 = 305
+    p = make_pattern("UNIFORM:8:8", kind="gather", delta=8, count=32)
+    spec = BucketSpec.of(p)
+    assert spec.idx_len == 256
+    assert p.footprint() == 305 and spec.footprint == 512
+
+
+def test_same_bucket_shares_spec():
+    # strides 2..8 with delta 8, count 32: footprints 9..105 all pad to <=128
+    a = make_pattern("UNIFORM:8:2", kind="gather", delta=8, count=32)
+    b = make_pattern("UNIFORM:8:5", kind="gather", delta=8, count=32)
+    assert BucketSpec.of(a).idx_len == BucketSpec.of(b).idx_len
+    # but kind always splits buckets
+    c = make_pattern("UNIFORM:8:2", kind="scatter", delta=8, count=32)
+    assert BucketSpec.of(a) != BucketSpec.of(c)
+
+
+def test_plan_determinism_and_order():
+    pats = _suite()
+    p1, p2 = SuitePlan.build(pats), SuitePlan.build(pats)
+    assert p1 == p2
+    # member positions cover the suite exactly once, plan order is sorted
+    members = [i for b in p1.buckets for i in b.members]
+    assert sorted(members) == list(range(len(pats)))
+    specs = [b.spec for b in p1.buckets]
+    assert specs == sorted(specs, key=lambda s: (s.kind, s.idx_len,
+                                                 s.footprint))
+    # shuffling the suite changes member positions but not the bucket specs
+    rng = random.Random(0)
+    shuffled = pats[:]
+    rng.shuffle(shuffled)
+    p3 = SuitePlan.build(shuffled)
+    assert [b.spec for b in p3.buckets] == specs
+
+
+# ---------------------------------------------------------------------------
+# cache behavior
+# ---------------------------------------------------------------------------
+
+def test_second_run_compiles_nothing():
+    pats = _suite()
+    cache = ExecutorCache()
+    stats1 = run_suite(pats, backend="xla", runs=2, cache=cache)
+    misses_after_first = cache.misses
+    assert misses_after_first == stats1.plan.n_buckets
+    stats2 = run_suite(pats, backend="xla", runs=2, cache=cache)
+    assert cache.misses == misses_after_first        # zero new compiles
+    assert cache.hits >= stats2.plan.n_buckets
+
+
+def test_32_pattern_suite_compiles_at_most_buckets():
+    # acceptance: 32 patterns on xla compile #buckets (< 32) executables
+    pats = []
+    for i in range(16):
+        pats.append(make_pattern(f"UNIFORM:8:{(i % 8) + 1}", kind="gather",
+                                 delta=8, count=32, name=f"g{i}"))
+        pats.append(make_pattern(f"UNIFORM:8:{(i % 8) + 1}", kind="scatter",
+                                 delta=8, count=32, name=f"s{i}"))
+    assert len(pats) == 32
+    cache = ExecutorCache()
+    stats = run_suite(pats, backend="xla", runs=2, cache=cache)
+    assert cache.misses == stats.plan.n_buckets
+    assert cache.misses < 32
+    # results come back in suite order with the paper's numerator
+    for p, r in zip(pats, stats.results):
+        assert r.pattern is p
+        assert r.measured_gbs > 0 and r.time_s > 0
+
+
+def test_cache_lru_eviction_recompiles():
+    pats = _suite()
+    cache = ExecutorCache(maxsize=1)          # every bucket evicts the last
+    run_suite(pats, backend="xla", runs=1, cache=cache)
+    first = cache.misses
+    run_suite(pats, backend="xla", runs=1, cache=cache)
+    assert cache.misses > first               # eviction forced recompiles
+
+
+# ---------------------------------------------------------------------------
+# numerical equivalence: batched == per-pattern, all backends, all modes
+# ---------------------------------------------------------------------------
+
+def test_batched_gather_matches_engine_exactly():
+    pats = [make_pattern(f"UNIFORM:4:{s}", kind="gather", delta=4, count=16,
+                         name=f"g{s}") for s in (1, 2, 3, 5)]
+    plan = SuitePlan.build(pats)
+    cache = ExecutorCache()
+    for backend in B.BACKENDS:
+        for bucket in plan.buckets:
+            outs = execute_bucket(plan, bucket, backend=backend, cache=cache)
+            for out, pos in zip(outs, bucket.members):
+                fn, args = GSEngine(pats[pos], backend=backend).build()
+                ref = np.asarray(fn(*args))
+                np.testing.assert_array_equal(
+                    out, ref, err_msg=f"{backend}/{pats[pos].name}")
+
+
+def test_batched_scatter_matches_unbatched_both_modes():
+    # delta 2 < index span -> duplicate writes exercise dedup + add order
+    pats = [make_pattern(f"UNIFORM:4:{s}", kind="scatter", delta=2, count=16,
+                         name=f"s{s}") for s in (1, 2, 3, 5)]
+    plan = SuitePlan.build(pats)
+    for backend in B.BACKENDS:
+        for mode in ("store", "add"):
+            cache = ExecutorCache()
+            for bucket in plan.buckets:
+                outs = execute_bucket(plan, bucket, backend=backend,
+                                      mode=mode, cache=cache)
+                for out, pos in zip(outs, bucket.members):
+                    p = pats[pos]
+                    _, abs_idx, vals = make_host_buffers(p, 1)
+                    dst = jnp.zeros((p.footprint(), 1), jnp.float32)
+                    ref = np.asarray(B.scatter(
+                        dst, jnp.asarray(abs_idx), jnp.asarray(vals),
+                        mode=mode, backend=backend))
+                    if backend == "onehot" and mode == "add":
+                        # onehot-add is a matmul; vmap reassociates the
+                        # contraction, so agreement is up to f32 rounding
+                        np.testing.assert_allclose(
+                            out, ref, rtol=1e-6, atol=1e-6,
+                            err_msg=f"{backend}/{mode}/{p.name}")
+                    else:
+                        np.testing.assert_array_equal(
+                            out, ref, err_msg=f"{backend}/{mode}/{p.name}")
+
+
+def test_padded_lanes_stay_in_scratch():
+    # footprint 11 pads to a 16-row bucket + scratch; count*idx_len 24 -> 32.
+    # If any padded lane leaked into a real row the store result would
+    # differ from the unbatched reference on untouched rows.
+    p = Pattern("odd", "scatter", (0, 3, 10), delta=0, count=8)
+    plan = SuitePlan.build([p])
+    spec = plan.buckets[0].spec
+    assert spec.idx_len == 32 and spec.footprint == 16
+    outs = execute_bucket(plan, plan.buckets[0], backend="xla", mode="store")
+    _, abs_idx, vals = make_host_buffers(p, 1)
+    dst = jnp.zeros((p.footprint(), 1), jnp.float32)
+    ref = np.asarray(B.scatter(dst, jnp.asarray(abs_idx),
+                               jnp.asarray(vals), mode="store",
+                               backend="xla"))
+    np.testing.assert_array_equal(outs[0], ref)
+    untouched = [i for i in range(p.footprint()) if i not in p.index]
+    assert np.all(outs[0][untouched] == 0)
+
+
+def test_run_plan_bandwidth_uses_useful_bytes_only():
+    # pattern with heavy padding: numerator must still be count*index_len
+    p = make_pattern("UNIFORM:5:1", kind="gather", delta=5, count=13)
+    plan = SuitePlan.build([p])
+    res = run_plan(plan, backend="xla", runs=2, cache=ExecutorCache())[0]
+    useful = p.index_len * p.count * 4
+    np.testing.assert_allclose(res.measured_gbs,
+                               useful / res.time_s / 1e9, rtol=1e-9)
