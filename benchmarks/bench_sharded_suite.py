@@ -1,0 +1,95 @@
+"""Multi-device suite execution: sharded bucket launches vs the
+single-device planner (core/plan.py ShardedExecutor).
+
+Runs the same bucketed suite twice inside a subprocess that forces
+``N_DEV`` fake host devices (XLA_FLAGS must be set before jax initializes,
+so this cannot run in the parent process): once through the single-device
+planner, once with every bucket launch's pattern-batch dim sharded over a
+1-D mesh.  Reports suite harmonic-mean GB/s aggregate and per-device, and
+end-to-end wall clock for both paths.
+
+On a CPU host the fake devices share the same cores, so wall-clock parity
+(not speedup) is the expected result — the bench verifies the sharded
+path's overhead structure; the per-device split is the number that scales
+on real multi-chip hardware.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .harness import emit
+
+N_DEV = 8
+
+_CHILD = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(n_dev)d"
+    import sys, time, json
+    sys.path.insert(0, %(src)r)
+    import jax
+    from repro.core import ExecutorCache, SuitePlan, make_pattern, run_suite
+
+    def make_suite(n=16, count=1 << 14):
+        pats = []
+        for i in range(n):
+            kind = "gather" if i %% 2 == 0 else "scatter"
+            stride = (i // 2) %% 8 + 1
+            pats.append(make_pattern("UNIFORM:8:%%d" %% stride, kind=kind,
+                                     delta=8, count=count,
+                                     name="%%s%%d" %% (kind[0], i)))
+        return pats
+
+    pats = make_suite()
+    runs = %(runs)d
+    mesh = jax.make_mesh((%(n_dev)d,), ("data",))
+
+    cache = ExecutorCache()
+    t0 = time.perf_counter()
+    single = run_suite(pats, backend="xla", runs=runs, cache=cache)
+    t_single = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sharded = run_suite(pats, backend="xla", runs=runs, cache=cache,
+                        mesh=mesh)
+    t_sharded = time.perf_counter() - t0
+
+    print(json.dumps({
+        "n_dev": %(n_dev)d,
+        "n_buckets": single.plan.n_buckets,
+        "single_hmean_gbs": single.hmean_gbs,
+        "sharded_hmean_gbs": sharded.hmean_gbs,
+        "wall_single_s": t_single,
+        "wall_sharded_s": t_sharded,
+        "compiles": cache.misses,
+    }))
+    """)
+
+
+def run(runs: int = 3) -> dict:
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = _CHILD % {"n_dev": N_DEV, "src": src, "runs": runs}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=540)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded-suite child failed: {r.stderr[-2000:]}")
+    stats = json.loads(r.stdout.strip().splitlines()[-1])
+
+    agg = stats["sharded_hmean_gbs"]
+    emit("sharded_suite/single_dev_hmean", stats["wall_single_s"] * 1e6,
+         f"{stats['single_hmean_gbs']:.2f}GB/s")
+    emit("sharded_suite/sharded_agg_hmean", stats["wall_sharded_s"] * 1e6,
+         f"{agg:.2f}GB/s")
+    emit("sharded_suite/sharded_per_dev", 0.0,
+         f"{agg / stats['n_dev']:.2f}GB/s x{stats['n_dev']}dev")
+    emit("sharded_suite/compiles", 0.0,
+         f"{stats['compiles']}for{stats['n_buckets']}buckets_x2paths")
+    return stats
+
+
+if __name__ == "__main__":
+    run()

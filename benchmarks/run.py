@@ -24,8 +24,9 @@ def main() -> None:
     runs = 3 if args.quick else 5
 
     from . import (bench_app_patterns, bench_llm_gs, bench_prefetch,
-                   bench_roofline, bench_stream, bench_suite_scaling,
-                   bench_uniform_stride, bench_vector_vs_scalar)
+                   bench_roofline, bench_sharded_suite, bench_stream,
+                   bench_suite_scaling, bench_uniform_stride,
+                   bench_vector_vs_scalar)
     benches = {
         "stream": lambda: bench_stream.run(runs=runs),
         "uniform_stride": lambda: bench_uniform_stride.run(runs=runs),
@@ -35,6 +36,7 @@ def main() -> None:
         "llm_gs": lambda: bench_llm_gs.run(runs=runs),
         "roofline": lambda: bench_roofline.run(runs=runs),
         "suite_scaling": lambda: bench_suite_scaling.run(runs=runs),
+        "sharded_suite": lambda: bench_sharded_suite.run(runs=runs),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

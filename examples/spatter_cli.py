@@ -7,6 +7,14 @@ becomes
 
 Prints the paper's outputs (min-time bandwidth) plus the TPU-model columns
 (modeled v5e GB/s, tile efficiency, reuse factor).
+
+Multi-device suites (--json mode): ``--mesh N`` splits every bucket
+launch's pattern-batch dim over a 1-D mesh of N devices (the paper §3.4
+thread-scaling story, scaled to devices; see the DESIGN NOTE in
+core/plan.py).  On a CPU-only host, force fake devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/spatter_cli.py --json suite.json --mesh 8
 """
 import argparse
 
@@ -35,12 +43,29 @@ def main():
     ap.add_argument("--no-batch", action="store_true",
                     help="suite mode: one compile per pattern instead of "
                          "the bucketed planner (plan.py)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="suite mode: shard bucket launches' pattern-batch "
+                         "dim over a 1-D mesh of N devices (0 = off)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        if not args.json:
+            ap.error("--mesh only applies to --json suite mode")
+        if args.no_batch:
+            ap.error("--mesh requires the bucketed planner (drop --no-batch)")
+        import jax
+        n_dev = len(jax.devices())
+        if args.mesh > n_dev:
+            ap.error(f"--mesh {args.mesh} > {n_dev} visible devices "
+                     f"(set XLA_FLAGS=--xla_force_host_platform_device_"
+                     f"count={args.mesh} on CPU)")
+        mesh = jax.make_mesh((args.mesh,), ("data",))
 
     if args.json:
         stats = run_suite(load_suite(args.json), backend=args.backend,
                           runs=args.runs, row_width=args.row_width,
-                          batch=not args.no_batch)
+                          batch=not args.no_batch, mesh=mesh)
         print(f"{'name':24s} {'type':16s} {'cpu GB/s':>9s} {'v5e GB/s':>9s} "
               f"{'tile_eff':>8s}")
         for r in stats.results:
@@ -52,7 +77,11 @@ def main():
         if stats.plan is not None:
             print(f"plan : {len(stats.results)} patterns -> "
                   f"{stats.plan.n_buckets} shape buckets "
-                  f"(pad waste {stats.plan.pad_waste():.1%})")
+                  f"(pad waste {stats.plan.pad_waste(args.mesh or 1):.1%})")
+        if mesh is not None:
+            print(f"mesh : pattern-batch dim sharded over {args.mesh} "
+                  f"devices (aggregate GB/s above; per-device = /"
+                  f"{args.mesh})")
         return
 
     p = make_pattern(args.pattern, kind=args.kernel.lower(),

@@ -11,9 +11,10 @@ Public API:
 from .pattern import (Pattern, make_pattern, generate_index, load_suite,
                       dump_suite, uniform, ms1, laplacian, broadcast)
 from .backends import gather, scatter, BACKENDS
-from .engine import GSEngine, RunResult
-from .plan import (SuitePlan, BucketSpec, Bucket, ExecutorCache, run_plan,
-                   execute_bucket, default_cache)
+from .engine import GSEngine, RunResult, gs_shardings
+from .plan import (SuitePlan, BucketSpec, Bucket, ExecutorCache,
+                   ShardedExecutor, run_plan, execute_bucket, default_cache,
+                   pad_batch)
 from .suite import run_suite, run_suite_file, stream_reference, \
     harmonic_mean, pearson_r, SuiteStats
 from .tracing import trace_gs, TraceReport, TracedAccess
@@ -23,9 +24,9 @@ __all__ = [
     "Pattern", "make_pattern", "generate_index", "load_suite", "dump_suite",
     "uniform", "ms1", "laplacian", "broadcast",
     "gather", "scatter", "BACKENDS",
-    "GSEngine", "RunResult",
-    "SuitePlan", "BucketSpec", "Bucket", "ExecutorCache", "run_plan",
-    "execute_bucket", "default_cache",
+    "GSEngine", "RunResult", "gs_shardings",
+    "SuitePlan", "BucketSpec", "Bucket", "ExecutorCache", "ShardedExecutor",
+    "run_plan", "execute_bucket", "default_cache", "pad_batch",
     "run_suite", "run_suite_file", "stream_reference", "harmonic_mean",
     "pearson_r", "SuiteStats",
     "trace_gs", "TraceReport", "TracedAccess",

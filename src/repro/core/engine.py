@@ -19,11 +19,42 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import backends as B
 from . import bandwidth as bw
 from .pattern import Pattern
+
+
+def gs_shardings(mesh: Mesh, axis: str, kind: str, *, batched: bool = False):
+    """(in_shardings, out_sharding) for a gather/scatter executable.
+
+    Unbatched (``GSEngine.sharded``): the flattened lane dim — the paper's
+    OpenMP-thread dim — is split over ``axis``.  The gather table is
+    replicated (every shard reads anywhere); the scatter result is
+    replicated because shards may write to any row.
+
+    Batched (``plan.ShardedExecutor``): dim 0 of every operand is the
+    pattern-batch dim of a bucket launch, and a whole pattern — indices,
+    its private table, its payload — lives on one shard, so *everything*
+    shards on dim 0 and no cross-device writes exist by construction.
+    """
+    if kind not in ("gather", "scatter"):
+        raise ValueError(f"kind must be gather|scatter, got {kind!r}")
+    from repro.runtime.sharding import named_shardings
+    shard, rep = P(axis), P()
+    if batched:
+        n_in = 2 if kind == "gather" else 3
+        in_sh = named_shardings(mesh, *([shard] * n_in))
+        (out_sh,) = named_shardings(mesh, shard)
+        return in_sh, out_sh
+    if kind == "gather":
+        in_sh = named_shardings(mesh, rep, shard)     # table replicated
+        (out_sh,) = named_shardings(mesh, shard)      # rows land per-shard
+        return in_sh, out_sh
+    in_sh = named_shardings(mesh, rep, shard, shard)  # dst, idx, vals
+    (out_sh,) = named_shardings(mesh, rep)            # any shard, any row
+    return in_sh, out_sh
 
 
 def make_host_buffers(pattern: Pattern, row_width: int, seed: int = 0):
@@ -140,22 +171,18 @@ class GSEngine:
         if total % n_shards:
             raise ValueError(f"count*index_len={total} not divisible by "
                              f"{n_shards} shards")
-        if self.pattern.kind == "gather":
-            in_shardings = (NamedSharding(mesh, P()),          # src replicated
-                            NamedSharding(mesh, P(axis)))      # idx sharded
-            out_shardings = NamedSharding(mesh, P(axis))
-        else:
-            in_shardings = (NamedSharding(mesh, P()),          # dst
-                            NamedSharding(mesh, P(axis)),      # idx
-                            NamedSharding(mesh, P(axis)))      # vals
-            out_shardings = NamedSharding(mesh, P())
+        in_shardings, out_shardings = gs_shardings(mesh, axis,
+                                                   self.pattern.kind)
         backend = self.backend
         if self.pattern.kind == "gather":
             def raw(src, idx):
                 return B.gather(src, idx, backend=backend)
         else:
+            # mode must match build()'s "store": "add" here made sharded and
+            # unsharded runs disagree whenever a pattern writes an index twice
             def raw(dst, idx, vals):
-                return B.scatter(dst, idx, vals, mode="add", backend=backend)
+                return B.scatter(dst, idx, vals, mode="store",
+                                 backend=backend)
         sharded_fn = jax.jit(raw, in_shardings=in_shardings,
                              out_shardings=out_shardings)
         return sharded_fn, args

@@ -15,36 +15,70 @@ next power of two, and patterns whose ``(kind, padded_idx_len,
 padded_footprint)`` agree share one bucket.  Pow-2 padding trades at most
 2x wasted lanes for an O(log) number of distinct executable shapes.
 
-Compile.  One executable per bucket: a ``jax.jit``-wrapped ``vmap`` of the
-single-pattern backend op (backends.gather_batched / scatter_batched),
-with the pattern-batch as the mapped dim.  Executables live in an
-``ExecutorCache`` — an LRU keyed on ``(backend, kind, idx_len, footprint,
-dtype, row_width, mode)`` — so repeated or streamed suite runs reuse warm
-executables across ``run_suite`` calls.  The cache's ``misses`` counter is
-the compile counter: a 32-pattern suite compiles ``n_buckets`` (< 32)
-executables, and a second identical run compiles zero.  (jax itself
-re-traces a cached executable if the *batch* size changes; the bucket
-shapes, which dominate compile cost, stay fixed.)
+Compile.  One executable per bucket shape: a ``jax.jit``-wrapped ``vmap``
+of the single-pattern backend op (backends.gather_batched /
+scatter_batched), with the pattern-batch as the mapped dim.  Executables
+live in an ``ExecutorCache`` — an LRU keyed on ``(backend, kind, idx_len,
+footprint, dtype, row_width, mode, batch, placement)`` — so repeated or
+streamed suite runs reuse warm executables across ``run_suite`` calls.
+The cache's ``misses`` counter is the compile counter: a 32-pattern suite
+compiles ``n_buckets`` (< 32) executables, and a second identical run
+compiles zero.
 
-Execute.  Same-bucket patterns are stacked: indices into a (B, N_pad)
-int32 array, tables into (B, F_pad + 1, R).  Row ``F_pad`` of every table
-is a scratch row; padded lanes (both the lane tail up to N_pad and, for
-scatters, their payload) point at it, so they can never touch real rows,
-and they never enter the bandwidth numerator — ``measured_gbs`` /
+Batch polymorphism.  The pattern-batch dim itself is padded to the next
+power of two (``pad_batch``), exactly like the lane dims: a bucket whose
+member count drifts between streamed suite runs (31 patterns today, 29
+tomorrow) keeps hitting the same padded batch, the same ``ExecKey``, and
+the same traced executable — zero re-traces, where the unpadded batch dim
+used to make jax silently re-trace on every membership change.  Lookup is
+additionally batch-polymorphic across pow-2 brackets
+(``ExecutorCache.best_batch``): a bucket whose membership *shrank* below
+its old bracket reuses the smallest warm executable with a larger batch,
+padding with more scratch patterns, so only genuine shape growth ever
+compiles.  Because the padded batch is part of the ``ExecKey``,
+``ExecutorCache.misses`` is an *exact* compile count: one cached
+executable is only ever called with one input signature (each jitted
+entry holds exactly one trace — asserted by tests).
+
+Padded batch rows are scratch *patterns*: their index lanes all point at
+the scratch table row, their tables/payloads are zeros, and their vmap
+outputs are dropped before results are attributed — the same
+can't-touch-real-data / never-in-the-numerator semantics as padded lanes.
+
+Sharded launches.  ``run_plan(..., mesh=..., mesh_axis=...)`` splits every
+bucket launch's pattern-batch dim over a mesh axis (the multi-device form
+of the paper's §3.4 thread scaling): ``ShardedExecutor`` jits the same
+batched op with ``NamedSharding``s from ``engine.gs_shardings(batched=
+True)``, so each device runs the whole gather/scatter for its slice of
+the bucket's patterns — a pattern never straddles devices, hence sharded
+results are bit-identical to the single-device launch.  ``pad_batch``
+additionally rounds the batch up to a multiple of the shard count so the
+split is always even.  The mesh placement is part of the ``ExecKey``
+(sharded and unsharded executables never collide).
+
+Execute.  Same-bucket patterns are stacked: indices into a (B_pad, N_pad)
+int32 array, tables into (B_pad, F_pad + 1, R).  Row ``F_pad`` of every
+table is a scratch row; padded lanes (both the lane tail up to N_pad and,
+for scatters, their payload) point at it, so they can never touch real
+rows, and they never enter the bandwidth numerator — ``measured_gbs`` /
 ``modeled_gbs`` keep exactly the paper's §3.5 useful-bytes formula.
 Per-pattern buffers come from ``engine.make_host_buffers`` — the same
 function ``GSEngine`` uses — so batched results are bit-identical to
 per-pattern execution (asserted by tests/test_suite_plan.py on all four
-backends).
+backends, and by tests/test_sharded_plan.py for the sharded path).
 
 Timing attribution.  A bucket launch is timed like GSEngine.run (min over
 K runs, §3.5); each member pattern is attributed wall time proportional to
-its share of the bucket's real lanes, so every pattern in a bucket reports
-the bandwidth the *launch* achieved.
+its share of the bucket's *launched* pattern lanes — scratch batch rows
+count in the denominator (their share belongs to padding, not to any
+member), so a member's reported bandwidth is invariant to how much batch
+padding the serving executable carried, and every pattern in a bucket
+reports the bandwidth the launch achieved.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import OrderedDict
 from typing import Callable, Sequence
@@ -52,10 +86,11 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from . import backends as B
 from . import bandwidth as bw
-from .engine import RunResult, make_host_buffers
+from .engine import RunResult, gs_shardings, make_host_buffers
 from .pattern import Pattern
 
 
@@ -64,6 +99,21 @@ def next_pow2(n: int) -> int:
     if n < 1:
         raise ValueError(f"need n >= 1, got {n}")
     return 1 << (n - 1).bit_length()
+
+
+def pad_batch(nb: int, n_shards: int = 1) -> int:
+    """Padded pattern-batch dim: next pow2 >= nb, divisible by n_shards.
+
+    Pow-2 padding makes bucket executables batch-polymorphic in practice
+    (member-count drift between suite runs lands on the same padded batch);
+    the shard-count multiple keeps a sharded launch's batch split even.
+    """
+    if n_shards < 1:
+        raise ValueError(f"need n_shards >= 1, got {n_shards}")
+    b = next_pow2(nb)
+    if b % n_shards:
+        b = n_shards * next_pow2(max(1, math.ceil(nb / n_shards)))
+    return b
 
 
 # ---------------------------------------------------------------------------
@@ -110,10 +160,16 @@ class SuitePlan:
     def n_buckets(self) -> int:
         return len(self.buckets)
 
-    def pad_waste(self) -> float:
-        """Fraction of launched lanes that are padding (0 = no waste)."""
+    def pad_waste(self, n_shards: int = 1) -> float:
+        """Fraction of launched lanes that are padding (0 = no waste).
+
+        Counts both lane padding and the scratch patterns added by
+        batch-dim padding (``pad_batch``, including the shard-multiple
+        round-up when ``n_shards`` > 1).
+        """
         real = sum(p.count * p.index_len for p in self.patterns)
-        launched = sum(b.spec.idx_len * len(b.members) for b in self.buckets)
+        launched = sum(b.spec.idx_len * pad_batch(len(b.members), n_shards)
+                       for b in self.buckets)
         return 1.0 - real / max(1, launched)
 
 
@@ -130,10 +186,18 @@ class ExecKey:
     dtype: str
     row_width: int
     mode: str           # "store" | "add" for scatter, "" for gather
+    batch: int          # padded pattern-batch dim (pad_batch)
+    placement: str      # ShardedExecutor.placement, "" = single-device
 
 
 class ExecutorCache:
-    """LRU of compiled bucket executables; ``misses`` counts compiles."""
+    """LRU of compiled bucket executables; ``misses`` counts compiles.
+
+    Keys carry the full input signature (bucket shape, padded batch, and
+    mesh placement), so one entry is only ever invoked with one trace:
+    ``misses`` equals the number of XLA compiles performed through the
+    cache, exactly.
+    """
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
@@ -156,6 +220,21 @@ class ExecutorCache:
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
         return fn
+
+    def best_batch(self, key: ExecKey) -> ExecKey | None:
+        """Smallest cached key differing from ``key`` only by a >= batch.
+
+        The batch-polymorphic lookup: a warm executable compiled for a
+        larger pattern-batch serves a smaller bucket by padding with more
+        scratch patterns, so bucket-membership shrink never compiles.
+        """
+        best = None
+        for k in self._entries:
+            if (k.batch >= key.batch
+                    and dataclasses.replace(k, batch=key.batch) == key
+                    and (best is None or k.batch < best.batch)):
+                best = k
+        return best
 
     def clear(self) -> None:
         self._entries.clear()
@@ -183,24 +262,113 @@ def _build_executable(backend: str, kind: str, mode: str) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# Sharded executor
+# ---------------------------------------------------------------------------
+
+class ShardedExecutor:
+    """Builds bucket executables whose pattern-batch dim is mesh-sharded.
+
+    Wraps a ``(mesh, axis)`` pair.  ``build`` returns the same jitted
+    batched op as the single-device path, but with in/out ``NamedSharding``s
+    (``engine.gs_shardings(batched=True)``) splitting dim 0 — the
+    pattern-batch — over ``axis``: each device executes the full
+    gather/scatter for its slice of the bucket's patterns, so results are
+    bit-identical to the unsharded launch.  ``placement`` feeds the
+    ``ExecKey`` so sharded and unsharded executables never collide in the
+    ``ExecutorCache``.
+    """
+
+    def __init__(self, mesh: Mesh, axis: str = "data"):
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {axis!r} "
+                             f"(axes: {mesh.axis_names})")
+        self.mesh = mesh
+        self.axis = axis
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    @property
+    def placement(self) -> str:
+        return (f"{self.axis}={self.n_shards}"
+                f"/{len(self.mesh.devices.flat)}dev")
+
+    def shardings(self, kind: str):
+        return gs_shardings(self.mesh, self.axis, kind, batched=True)
+
+    def build(self, backend: str, kind: str, mode: str) -> Callable:
+        if kind == "gather":
+            def fn(src_b, idx_b):
+                return B.gather_batched(src_b, idx_b, backend=backend)
+        else:
+            def fn(dst_b, idx_b, vals_b):
+                return B.scatter_batched(dst_b, idx_b, vals_b, mode=mode,
+                                         backend=backend)
+        in_sh, out_sh = self.shardings(kind)
+        return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+    def place(self, kind: str, args: tuple) -> tuple:
+        """Commit assembled host buffers to their launch shardings.
+
+        Keeps the device layout transfer out of the timed region (the jit
+        would otherwise reshard uncommitted arrays inside every call).
+        """
+        in_sh, _ = self.shardings(kind)
+        return tuple(jax.device_put(a, s) for a, s in zip(args, in_sh))
+
+
+def _bucket_executable(cache: ExecutorCache, backend: str, spec: BucketSpec,
+                       dtype, row_width: int, mode: str, n_members: int,
+                       sharder: ShardedExecutor | None
+                       ) -> tuple[Callable, int]:
+    """Fetch (or compile) a bucket executable; returns (fn, batch).
+
+    ``batch`` is the pattern-batch dim the executable was traced for —
+    ``pad_batch`` of the member count, or the smallest warm executable's
+    larger batch when one exists (``ExecutorCache.best_batch``); callers
+    must assemble the bucket at exactly that batch.
+    """
+    key = ExecKey(backend=backend, kind=spec.kind, idx_len=spec.idx_len,
+                  footprint=spec.footprint, dtype=jnp.dtype(dtype).name,
+                  row_width=row_width,
+                  mode=mode if spec.kind == "scatter" else "",
+                  batch=pad_batch(n_members,
+                                  sharder.n_shards if sharder else 1),
+                  placement=sharder.placement if sharder else "")
+    key = cache.best_batch(key) or key
+    if sharder is not None:
+        builder = lambda: sharder.build(backend, spec.kind, key.mode)
+    else:
+        builder = lambda: _build_executable(backend, spec.kind, key.mode)
+    return cache.get(key, builder), key.batch
+
+
+# ---------------------------------------------------------------------------
 # Bucket assembly + execution
 # ---------------------------------------------------------------------------
 
 def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
-                     seed: int):
+                     seed: int, batch: int | None = None):
     """Stack a bucket's patterns into batched device buffers.
 
     Returns (args, real_lanes) where args feeds the bucket executable and
     real_lanes[b] is member b's un-padded lane count.  Table row F_pad is
-    the scratch row every padded lane points at.
+    the scratch row every padded lane points at.  ``batch`` (>= member
+    count; default ``pad_batch``) sets the padded pattern-batch dim: rows
+    past the member count are scratch patterns — all-scratch indices, zero
+    tables/payloads — whose outputs the callers drop.
     """
     spec = bucket.spec
     nb = len(bucket.members)
+    b_pad = pad_batch(nb) if batch is None else batch
+    if b_pad < nb:
+        raise ValueError(f"batch {b_pad} < member count {nb}")
     n_pad, f_pad, r = spec.idx_len, spec.footprint, row_width
-    idx_b = np.full((nb, n_pad), f_pad, np.int32)          # pad -> scratch
-    table_b = (np.zeros((nb, f_pad + 1, r), np.float32)
+    idx_b = np.full((b_pad, n_pad), f_pad, np.int32)       # pad -> scratch
+    table_b = (np.zeros((b_pad, f_pad + 1, r), np.float32)
                if spec.kind == "gather" else None)
-    vals_b = (np.zeros((nb, n_pad, r), np.float32)
+    vals_b = (np.zeros((b_pad, n_pad, r), np.float32)
               if spec.kind == "scatter" else None)
     real_lanes = []
     for b, pos in enumerate(bucket.members):
@@ -216,25 +384,31 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
     idx = jnp.asarray(idx_b)
     if spec.kind == "gather":
         return (jnp.asarray(table_b, dtype), idx), real_lanes
-    dst = jnp.zeros((nb, f_pad + 1, r), dtype)
+    dst = jnp.zeros((b_pad, f_pad + 1, r), dtype)
     return (dst, idx, jnp.asarray(vals_b, dtype)), real_lanes
 
 
 def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
                    dtype=jnp.float32, row_width: int = 1,
                    mode: str = "store", seed: int = 0,
-                   cache: ExecutorCache | None = None) -> list[np.ndarray]:
+                   cache: ExecutorCache | None = None,
+                   mesh: Mesh | None = None,
+                   mesh_axis: str = "data") -> list[np.ndarray]:
     """Run one bucket once and return per-member un-padded outputs.
 
     Gathers give member i its (count*index_len, R) rows; scatters give the
-    (footprint, R) result table (scratch row trimmed).
+    (footprint, R) result table (scratch row trimmed).  With ``mesh`` the
+    launch's pattern-batch dim is split over ``mesh_axis``.
     """
     cache = cache if cache is not None else default_cache()
+    sharder = ShardedExecutor(mesh, mesh_axis) if mesh is not None else None
     spec = bucket.spec
-    key = _exec_key(backend, spec, dtype, row_width, mode)
-    fn = cache.get(key, lambda: _build_executable(backend, spec.kind,
-                                                  key.mode))
-    args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width, seed)
+    fn, batch = _bucket_executable(cache, backend, spec, dtype, row_width,
+                                   mode, len(bucket.members), sharder)
+    args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width, seed,
+                                        batch=batch)
+    if sharder is not None:
+        args = sharder.place(spec.kind, args)
     out = np.asarray(jax.block_until_ready(fn(*args)))
     trimmed = []
     for b, pos in enumerate(bucket.members):
@@ -245,44 +419,48 @@ def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
     return trimmed
 
 
-def _exec_key(backend: str, spec: BucketSpec, dtype, row_width: int,
-              mode: str) -> ExecKey:
-    return ExecKey(backend=backend, kind=spec.kind, idx_len=spec.idx_len,
-                   footprint=spec.footprint, dtype=jnp.dtype(dtype).name,
-                   row_width=row_width,
-                   mode=mode if spec.kind == "scatter" else "")
-
-
 def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
              row_width: int = 1, runs: int = 10, mode: str = "store",
              seed: int = 0,
-             cache: ExecutorCache | None = None) -> list[RunResult]:
+             cache: ExecutorCache | None = None,
+             mesh: Mesh | None = None,
+             mesh_axis: str = "data") -> list[RunResult]:
     """Execute a SuitePlan with paper-style timing (min over ``runs``).
 
     Returns one RunResult per pattern, in the suite's original order.
     Wall time of a bucket launch is attributed to members proportionally
     to their real (un-padded) lanes.
+
+    With ``mesh``, every bucket launch's pattern-batch dim is split over
+    ``mesh_axis`` (ShardedExecutor) — the multi-device suite regime.
+    Reported bandwidth stays the paper's useful-bytes formula over the
+    *aggregate* launch: divide by the shard count for per-device numbers.
     """
     if backend not in B.BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
     dtype = jnp.dtype(dtype or jnp.float32)
     cache = cache if cache is not None else default_cache()
+    sharder = ShardedExecutor(mesh, mesh_axis) if mesh is not None else None
     elem_bytes = dtype.itemsize * row_width
     results: list[RunResult | None] = [None] * len(plan.patterns)
 
     for bucket in plan.buckets:
         spec = bucket.spec
-        key = _exec_key(backend, spec, dtype, row_width, mode)
-        fn = cache.get(key, lambda: _build_executable(backend, spec.kind,
-                                                      key.mode))
+        fn, batch = _bucket_executable(cache, backend, spec, dtype,
+                                       row_width, mode, len(bucket.members),
+                                       sharder)
         args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width,
-                                            seed)
+                                            seed, batch=batch)
+        if sharder is not None:
+            args = sharder.place(spec.kind, args)
         if spec.kind == "scatter":
             dst, idx, vals = args
             jax.block_until_ready(fn(dst, idx, vals))       # compile & warm
             times = []
             for _ in range(runs):
                 d = jnp.zeros_like(dst)
+                if sharder is not None:
+                    d = sharder.place(spec.kind, (d,))[0]
                 jax.block_until_ready(d)
                 t0 = time.perf_counter()
                 out = fn(d, idx, vals)
@@ -298,7 +476,12 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
                 times.append(time.perf_counter() - t0)
         t_bucket = min(times)                                # paper §3.5
 
-        total_lanes = sum(real_lanes)
+        # attribution denominator counts scratch batch rows' lanes too, so
+        # a member's reported bandwidth does not depend on how much batch
+        # padding the serving executable carried (best_batch may hand a
+        # small bucket a larger warm executable)
+        total_lanes = (sum(real_lanes)
+                       + (batch - len(bucket.members)) * spec.idx_len)
         for b, pos in enumerate(bucket.members):
             p = plan.patterns[pos]
             t_i = t_bucket * real_lanes[b] / total_lanes

@@ -11,6 +11,8 @@ suite compiles #buckets executables instead of N and repeated suite runs
 compile nothing.  See the DESIGN NOTE in plan.py for the full plan ->
 compile -> execute design and the padding/scratch-row semantics.
 ``batch=False`` restores the original one-GSEngine-per-pattern path.
+``mesh=``/``mesh_axis=`` split every bucket launch's pattern-batch dim
+over a mesh axis (plan.ShardedExecutor) for multi-device suite runs.
 """
 from __future__ import annotations
 
@@ -24,6 +26,23 @@ from .pattern import Pattern, load_suite, make_pattern
 from .plan import ExecutorCache, SuitePlan, run_plan
 
 
+# metric aliases -> the RunResult.row() column they select
+_METRIC_COLUMNS = {
+    "measured": "measured_cpu_gbs",
+    "measured_cpu_gbs": "measured_cpu_gbs",
+    "modeled": "modeled_v5e_gbs",
+    "modeled_v5e_gbs": "modeled_v5e_gbs",
+}
+
+
+def _metric_column(metric: str) -> str:
+    col = _METRIC_COLUMNS.get(metric)
+    if col is None:
+        raise ValueError(f"unknown metric {metric!r}; "
+                         f"expected one of {sorted(_METRIC_COLUMNS)}")
+    return col
+
+
 @dataclasses.dataclass
 class SuiteStats:
     results: list[RunResult]
@@ -33,7 +52,19 @@ class SuiteStats:
     plan: SuitePlan | None = None        # set when the batched path ran
 
     def table(self, metric: str = "measured_cpu_gbs") -> list[dict]:
-        return [r.row() for r in self.results]
+        """Per-pattern rows with ``gbs`` set to the requested metric.
+
+        ``metric`` picks which bandwidth column ("measured"/"modeled", or
+        the full row() column names) populates the uniform ``gbs`` field;
+        unknown metrics raise ValueError.
+        """
+        col = _metric_column(metric)
+        rows = []
+        for r in self.results:
+            row = r.row()
+            row["gbs"] = row[col]
+            rows.append(row)
+        return rows
 
 
 def harmonic_mean(xs) -> float:
@@ -54,23 +85,29 @@ def pearson_r(xs, ys) -> float:
 def run_suite(patterns: list[Pattern], *, backend: str = "xla",
               dtype=None, row_width: int = 1, runs: int = 10,
               metric: str = "measured", batch: bool = True,
-              cache: ExecutorCache | None = None) -> SuiteStats:
+              cache: ExecutorCache | None = None,
+              mesh=None, mesh_axis: str = "data") -> SuiteStats:
     import jax.numpy as jnp
     if not patterns:
         raise ValueError("run_suite needs at least one pattern")
+    col = _metric_column(metric)            # reject typos up front
+    if mesh is not None and not batch:
+        raise ValueError("mesh execution requires the batched planner "
+                         "(batch=True)")
     dtype = dtype or jnp.float32
     plan = None
     if batch:
         plan = SuitePlan.build(patterns)
         results = run_plan(plan, backend=backend, dtype=dtype,
-                           row_width=row_width, runs=runs, cache=cache)
+                           row_width=row_width, runs=runs, cache=cache,
+                           mesh=mesh, mesh_axis=mesh_axis)
     else:
         results = []
         for p in patterns:
             eng = GSEngine(p, backend=backend, dtype=dtype,
                            row_width=row_width)
             results.append(eng.run(runs=runs))
-    key = (lambda r: r.measured_gbs) if metric == "measured" \
+    key = (lambda r: r.measured_gbs) if col == "measured_cpu_gbs" \
         else (lambda r: r.modeled_gbs)
     vals = [key(r) for r in results]
     return SuiteStats(

@@ -48,10 +48,11 @@ def main():
             0.01 * rng.standard_normal(
                 (b, args.prompt_len // cfg.frame_ratio, cfg.d_model)),
             jnp.dtype(cfg.dtype))
-        _, cache_pre = model.prefill(params, {"frames": frames,
-                                              "max_len": max_len})
-        cache = cache_pre
-        logits = jnp.zeros((b, cfg.vocab))
+        # audio prefill encodes frames only — it produces no logits, so the
+        # decoder must start from BOS (token 1, the data-pipeline convention)
+        # rather than argmax over a zero placeholder (which always emitted 0)
+        logits, cache = model.prefill(params, {"frames": frames,
+                                               "max_len": max_len})
         start_pos = 0
     else:
         cache = model.init_cache(b, max_len)
@@ -72,7 +73,7 @@ def main():
     # -- decode ----------------------------------------------------------------
     step = jax.jit(lambda p, c, t, q: model.decode_step(p, c, t, q))
     tok = jnp.argmax(logits, -1).astype(jnp.int32).reshape(b, 1) \
-        if logits is not None else prompts[:, -1:]
+        if logits is not None else jnp.ones((b, 1), jnp.int32)   # BOS
     generated = []
     t0 = time.perf_counter()
     for i in range(args.gen):

@@ -103,6 +103,16 @@ def logical_to_spec(axes: Sequence[str | None], shape: Sequence[int],
     return P(*out)
 
 
+def named_shardings(mesh: Mesh, *specs: P) -> tuple[NamedSharding, ...]:
+    """PartitionSpecs -> NamedShardings on ``mesh``, one per spec.
+
+    The single constructor both the engine (``GSEngine.sharded``) and the
+    suite planner (``plan.ShardedExecutor``) use to place gather/scatter
+    operands, so placement policy lives in one spot.
+    """
+    return tuple(NamedSharding(mesh, s) for s in specs)
+
+
 # -- context ----------------------------------------------------------------
 
 @contextlib.contextmanager

@@ -179,6 +179,37 @@ def test_padded_lanes_stay_in_scratch():
     assert np.all(outs[0][untouched] == 0)
 
 
+def test_suite_stats_table_respects_metric():
+    stats = run_suite(_suite(n_gather=2, n_scatter=0), backend="xla",
+                      runs=1, cache=ExecutorCache())
+    measured = stats.table("measured")
+    modeled = stats.table("modeled")
+    for row_m, row_v, r in zip(measured, modeled, stats.results):
+        assert row_m["gbs"] == r.measured_gbs == row_m["measured_cpu_gbs"]
+        assert row_v["gbs"] == r.modeled_gbs == row_v["modeled_v5e_gbs"]
+    # full column names work as aliases; unknown metrics raise
+    assert stats.table("modeled_v5e_gbs") == modeled
+    try:
+        stats.table("bogus")
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("table() accepted an unknown metric")
+
+
+def test_run_suite_rejects_unknown_metric():
+    pats = _suite(n_gather=1, n_scatter=0)
+    try:
+        run_suite(pats, metric="measurd", runs=1, cache=ExecutorCache())
+    except ValueError as e:
+        assert "metric" in str(e)
+    else:
+        raise AssertionError("run_suite accepted a typo'd metric")
+    # the modeled alias orders stats by the modeled column
+    stats = run_suite(pats, metric="modeled", runs=1, cache=ExecutorCache())
+    assert stats.min_gbs == stats.results[0].modeled_gbs
+
+
 def test_run_plan_bandwidth_uses_useful_bytes_only():
     # pattern with heavy padding: numerator must still be count*index_len
     p = make_pattern("UNIFORM:5:1", kind="gather", delta=5, count=13)
