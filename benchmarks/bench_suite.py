@@ -1,0 +1,117 @@
+"""Canonical suite benchmark -> BENCH_suite.json (perf trajectory).
+
+Runs a JSON suite (default ``suites/demo.json``) through the planner on
+each backend and writes one machine-readable record per (pattern, backend):
+measured/modeled GB/s, attributed wall time, plus per-backend compile
+counts (ExecutorCache.misses — exact) and the pallas one-launch-per-bucket
+census (pallas_call primitives in each store/gather bucket executable's
+jaxpr).  CI uploads the file as an artifact so the perf trajectory is
+tracked across PRs; compare against the committed baseline with::
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only suite
+
+``--quick`` scales pattern counts down (recorded in ``meta.count_cap``) so
+the pallas interpret-mode grids stay small on CPU; absolute numbers are
+only comparable within a matching ``meta`` block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ExecutorCache, SuitePlan, load_suite, run_suite
+from repro.core.plan import _assemble_bucket, _build_executable
+from repro.core.tracing import count_primitives
+
+from .harness import emit
+
+DEFAULT_SUITE = "suites/demo.json"
+DEFAULT_OUT = "BENCH_suite.json"
+BACKENDS = ("xla", "onehot", "scalar", "pallas")
+
+
+def _pallas_launch_census(plan: SuitePlan) -> list[dict]:
+    """pallas_call count per bucket executable (acceptance: store == 1)."""
+    rows = []
+    for bucket in plan.buckets:
+        spec = bucket.spec
+        mode = "store" if spec.kind == "scatter" else ""
+        args, _ = _assemble_bucket(plan, bucket, jnp.float32, 1, 0)
+        fn = _build_executable("pallas", spec.kind, mode or "store")
+        counts = count_primitives(jax.make_jaxpr(fn)(*args))
+        rows.append({
+            "kind": spec.kind, "idx_len": spec.idx_len,
+            "footprint": spec.footprint, "batch": args[1].shape[0],
+            "pallas_calls": counts.get("pallas_call", 0),
+            "sort_prims": counts.get("sort", 0),
+        })
+    return rows
+
+
+def run(runs: int = 3, *, suite: str = DEFAULT_SUITE,
+        out_path: str | None = DEFAULT_OUT, count_cap: int | None = None,
+        backends=BACKENDS) -> dict:
+    quick = runs <= 3
+    if count_cap is None:
+        count_cap = 512 if quick else 0          # 0 = uncapped
+    patterns = load_suite(suite)
+    if count_cap:
+        patterns = [dataclasses.replace(p, count=min(p.count, count_cap))
+                    for p in patterns]
+    plan = SuitePlan.build(patterns)
+
+    results = []
+    per_backend = {}
+    for backend in backends:
+        cache = ExecutorCache()
+        t0 = time.perf_counter()
+        stats = run_suite(patterns, backend=backend, runs=runs, cache=cache)
+        wall = time.perf_counter() - t0
+        per_backend[backend] = {
+            "compiles": cache.misses,
+            "n_buckets": stats.plan.n_buckets,
+            "wall_s": wall,
+            "hmean_measured_gbs": stats.hmean_gbs,
+        }
+        for r in stats.results:
+            results.append({
+                "pattern": r.pattern.name,
+                "kind": r.pattern.kind,
+                "type": r.pattern.classify(),
+                "backend": backend,
+                "measured_gbs": r.measured_gbs,
+                "modeled_gbs": r.modeled_gbs,
+                "time_s": r.time_s,
+            })
+        emit(f"suite/{backend}", wall * 1e6,
+             f"{cache.misses}compiles;hmean={stats.hmean_gbs:.3f}gbs")
+
+    doc = {
+        "meta": {
+            "suite": suite,
+            "runs": runs,
+            "count_cap": count_cap,
+            "n_patterns": len(patterns),
+            "n_buckets": plan.n_buckets,
+            "jax": jax.__version__,
+            "device": jax.devices()[0].platform,
+            "host": platform.machine(),
+        },
+        "backends": per_backend,
+        "pallas_bucket_launches": _pallas_launch_census(plan),
+        "results": results,
+    }
+    if out_path:                       # None = CSV only, no trajectory write
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        emit("suite/json", 0.0, out_path)
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -6,6 +6,11 @@ Emits ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §7):
     Fig 3/5  -> bench_uniform_stride     Table 4 -> bench_app_patterns
     Fig 4    -> bench_prefetch           Table 3 STREAM -> bench_stream
     Fig 6    -> bench_vector_vs_scalar   beyond-paper   -> bench_llm_gs
+
+The ``suite`` bench additionally writes ``BENCH_suite.json`` (per-pattern
+measured/modeled GB/s, per-backend compile counts, pallas launch census) —
+the canonical cross-PR perf trajectory record; CI uploads it as an
+artifact.  ``--suite-json`` overrides the output path.
 """
 from __future__ import annotations
 
@@ -20,13 +25,25 @@ def main() -> None:
                     help="fewer timing repetitions")
     ap.add_argument("--only", default=None,
                     help="run a single bench by name")
+    ap.add_argument("--suite-json", default=None, metavar="PATH",
+                    help="output path for the suite bench's "
+                         "BENCH_suite.json record")
     args = ap.parse_args()
     runs = 3 if args.quick else 5
 
     from . import (bench_app_patterns, bench_llm_gs, bench_prefetch,
                    bench_roofline, bench_sharded_suite, bench_stream,
-                   bench_suite_scaling, bench_uniform_stride,
+                   bench_suite, bench_suite_scaling, bench_uniform_stride,
                    bench_vector_vs_scalar)
+    # only an explicit request (--suite-json or --only suite) writes the
+    # canonical BENCH_suite.json; a full CSV sweep must not silently
+    # clobber a committed baseline in the cwd
+    if args.suite_json:
+        suite_kw = {"out_path": args.suite_json}
+    elif args.only == "suite":
+        suite_kw = {}
+    else:
+        suite_kw = {"out_path": None}
     benches = {
         "stream": lambda: bench_stream.run(runs=runs),
         "uniform_stride": lambda: bench_uniform_stride.run(runs=runs),
@@ -37,6 +54,7 @@ def main() -> None:
         "roofline": lambda: bench_roofline.run(runs=runs),
         "suite_scaling": lambda: bench_suite_scaling.run(runs=runs),
         "sharded_suite": lambda: bench_sharded_suite.run(runs=runs),
+        "suite": lambda: bench_suite.run(runs=runs, **suite_kw),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -21,6 +21,15 @@ All backends share one contract:
 
 The *row* (R) is the TPU element unit (DESIGN.md §2): Spatter's 8-byte double
 becomes a lane-aligned row here.  R=1 recovers the paper's scalar semantics.
+
+Store-mode duplicate handling (DESIGN.md §2.1): the paper's parallel scatter
+leaves duplicate-index order unspecified; we pin it to last-write-wins so
+backends are cross-checkable.  The keep mask that implements it is a pure
+function of the (static) index buffer, so it is computed ONCE on the host
+(``keep_last_mask``) at build/plan time and threaded through every store
+scatter as a regular operand — the timed executable contains no sort, no
+dedup, nothing but the access under test (paper §3.5 measurement
+discipline).
 """
 from __future__ import annotations
 
@@ -29,6 +38,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 BACKENDS = ("xla", "onehot", "scalar", "pallas")
@@ -79,55 +89,80 @@ def gather_pallas(src: jax.Array, idx: jax.Array) -> jax.Array:
 # Scatter
 # ---------------------------------------------------------------------------
 
-def _dedup_keep_last(idx: jax.Array, vals: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Mask out all but the last occurrence of each duplicate index.
+def keep_last_mask(idx: np.ndarray) -> np.ndarray:
+    """Host-side last-write-wins keep mask: True at the last occurrence of
+    each distinct index value, False elsewhere.
 
-    Gives deterministic last-write-wins store semantics on every backend
-    (the paper's parallel scatter leaves duplicate order unspecified; we pin
-    it down so backends are cross-checkable).
+    Pattern indices are static at build/plan time, so this runs ONCE in
+    numpy — never inside a timed executable (DESIGN.md §2.1).
+    """
+    idx = np.asarray(idx)
+    n = idx.shape[0]
+    if n == 0:
+        return np.zeros((0,), bool)
+    order = np.argsort(idx, kind="stable")       # stable: ties keep position
+    sidx = idx[order]
+    is_last = np.concatenate([sidx[1:] != sidx[:-1], np.ones((1,), bool)])
+    keep = np.zeros((n,), bool)
+    keep[order[is_last]] = True
+    return keep
+
+
+def _keep_last_traced(idx: jax.Array, footprint: int) -> jax.Array:
+    """Sort-free traced fallback for ad-hoc store scatters without a
+    precomputed mask: scatter-max each lane's position into a (F,) table,
+    keep the lanes that hold their row's max.  O(N + F), no sort primitive.
+
+    The engine/planner hot paths never hit this — they pass the host mask.
     """
     n = idx.shape[0]
-    positions = jnp.arange(n, dtype=jnp.int32)
-    # last position at which each index value occurs
-    last_pos = jnp.full((n,), -1, dtype=jnp.int32)
-    # segment_max over idx as segment ids is unbounded; instead compare pairwise
-    # via sort: sort by (idx, pos); the last element of each run wins.
-    order = jnp.lexsort((positions, idx))
-    sidx = idx[order]
-    is_last = jnp.concatenate([sidx[1:] != sidx[:-1], jnp.ones((1,), bool)])
-    keep = jnp.zeros((n,), bool).at[order].set(is_last)
-    del last_pos
-    return keep, order
+    pos = jnp.arange(n, dtype=jnp.int32)
+    last = jnp.zeros((footprint,), jnp.int32).at[idx].max(pos, mode="drop")
+    return last[idx] == pos
+
+
+def _store_keep(keep, idx: jax.Array, footprint: int) -> jax.Array:
+    """Resolve a store scatter's keep mask: the caller-provided operand, the
+    host mask when indices are concrete, else the traced fallback."""
+    if keep is not None:
+        return keep
+    if isinstance(idx, jax.core.Tracer):   # indices unknown at trace time
+        return _keep_last_traced(idx, footprint)
+    return jnp.asarray(keep_last_mask(np.asarray(idx)))
 
 
 def scatter_xla(dst: jax.Array, idx: jax.Array, vals: jax.Array,
-                mode: str = "store") -> jax.Array:
+                mode: str = "store", keep: jax.Array | None = None
+                ) -> jax.Array:
     if mode == "add":
         return dst.at[idx].add(vals)
-    keep, _ = _dedup_keep_last(idx, vals)
-    # route dropped writes to a scratch row one past the end
     f = dst.shape[0]
-    padded = jnp.concatenate([dst, jnp.zeros((1, dst.shape[1]), dst.dtype)])
+    keep = _store_keep(keep, idx, f)
+    # route dropped writes out of range; drop-mode scatter discards them
     safe_idx = jnp.where(keep, idx, f)
-    return padded.at[safe_idx].set(vals)[:f]
+    return dst.at[safe_idx].set(vals, mode="drop")
 
 
 def scatter_onehot(dst: jax.Array, idx: jax.Array, vals: jax.Array,
-                   mode: str = "store") -> jax.Array:
+                   mode: str = "store", keep: jax.Array | None = None
+                   ) -> jax.Array:
     f = dst.shape[0]
     if f > _ONEHOT_MAX_FOOTPRINT:
         raise ValueError(f"onehot backend: footprint {f} too large")
     if mode == "add":
         oh = jax.nn.one_hot(idx, f, dtype=vals.dtype)      # (N, F)
         return dst + oh.T @ vals
-    keep, _ = _dedup_keep_last(idx, vals)
+    keep = _store_keep(keep, idx, f)
     oh = jax.nn.one_hot(idx, f, dtype=vals.dtype) * keep[:, None].astype(vals.dtype)
     covered = jnp.clip(oh.sum(axis=0), 0, 1)[:, None]      # (F, 1) in {0,1}
     return dst * (1 - covered) + oh.T @ vals
 
 
 def scatter_scalar(dst: jax.Array, idx: jax.Array, vals: jax.Array,
-                   mode: str = "store") -> jax.Array:
+                   mode: str = "store", keep: jax.Array | None = None
+                   ) -> jax.Array:
+    # sequential loop: store order IS last-write-wins; no mask needed
+    del keep
     n = idx.shape[0]
     r = dst.shape[1]
 
@@ -142,20 +177,16 @@ def scatter_scalar(dst: jax.Array, idx: jax.Array, vals: jax.Array,
 
 
 def scatter_pallas(dst: jax.Array, idx: jax.Array, vals: jax.Array,
-                   mode: str = "store") -> jax.Array:
+                   mode: str = "store", keep: jax.Array | None = None
+                   ) -> jax.Array:
     from repro.kernels.scatter_rows import ops as scatter_ops
     if mode == "add":
         return dst + scatter_ops.scatter_add_rows(idx, vals, dst.shape[0])
-    # store semantics: dedup then delegate to the add kernel on a zero base,
-    # masking covered rows.
-    keep, _ = _dedup_keep_last(idx, vals)
-    zeros = jnp.zeros_like(vals)
-    masked_vals = jnp.where(keep[:, None], vals, zeros)
-    written = scatter_ops.scatter_add_rows(idx, masked_vals, dst.shape[0])
-    ones = jnp.where(keep[:, None], jnp.ones_like(vals[:, :1]), zeros[:, :1])
-    covered = jnp.clip(
-        scatter_ops.scatter_add_rows(idx, ones, dst.shape[0]), 0, 1)
-    return dst * (1 - covered) + written
+    # store: one single-pass kernel launch; dropped lanes are routed out of
+    # range so the kernel's one-hot never matches them
+    keep = _store_keep(keep, idx, dst.shape[0])
+    safe_idx = jnp.where(keep, idx, jnp.iinfo(jnp.int32).max)
+    return scatter_ops.scatter_store_rows(dst, safe_idx, vals)
 
 
 # ---------------------------------------------------------------------------
@@ -182,24 +213,54 @@ def gather(src: jax.Array, idx: jax.Array, *, backend: str = "xla") -> jax.Array
 
 
 def scatter(dst: jax.Array, idx: jax.Array, vals: jax.Array, *,
-            mode: str = "store", backend: str = "xla") -> jax.Array:
-    return SCATTER_FNS[backend](dst, idx, vals, mode)
+            mode: str = "store", backend: str = "xla",
+            keep: jax.Array | None = None) -> jax.Array:
+    return SCATTER_FNS[backend](dst, idx, vals, mode, keep)
 
 
 # ---------------------------------------------------------------------------
-# Batched dispatch (suite planner, core/plan.py): one vmapped launch runs a
-# whole shape bucket of patterns.  Leading dim is the pattern-batch dim.
+# Batched dispatch (suite planner, core/plan.py): one launch runs a whole
+# shape bucket of patterns.  Leading dim is the pattern-batch dim.  The
+# pallas backend gets batch-native kernels — a real grid over
+# (pattern-batch x tiles) with the index buffers scalar-prefetched once —
+# instead of jax.vmap over a per-pattern pallas_call.
 # ---------------------------------------------------------------------------
 
 def gather_batched(src: jax.Array, idx: jax.Array, *,
                    backend: str = "xla") -> jax.Array:
     """src: (B, F, R), idx: (B, N) -> (B, N, R); one launch for B patterns."""
+    if backend == "pallas":
+        from repro.kernels.gather_rows import ops as gather_ops
+        return gather_ops.gather_rows_batched(src, idx)
     return jax.vmap(lambda s, i: gather(s, i, backend=backend))(src, idx)
 
 
 def scatter_batched(dst: jax.Array, idx: jax.Array, vals: jax.Array, *,
-                    mode: str = "store", backend: str = "xla") -> jax.Array:
-    """dst: (B, F, R), idx: (B, N), vals: (B, N, R) -> (B, F, R)."""
+                    mode: str = "store", backend: str = "xla",
+                    keep: jax.Array | None = None) -> jax.Array:
+    """dst: (B, F, R), idx: (B, N), vals: (B, N, R) -> (B, F, R).
+
+    ``keep`` is the (B, N) host-precomputed last-write-wins mask for store
+    mode (plan._assemble_bucket computes it over the padded index buffer);
+    without it each pattern falls back to per-row resolution.
+    """
+    if backend == "pallas":
+        from repro.kernels.scatter_rows import ops as scatter_ops
+        if mode == "add":
+            return dst + scatter_ops.scatter_add_rows_batched(
+                idx, vals, dst.shape[1])
+        if keep is None:
+            keep = jax.vmap(
+                lambda i: _store_keep(None, i, dst.shape[1]))(idx)
+        safe_idx = jnp.where(keep, idx, jnp.iinfo(jnp.int32).max)
+        return scatter_ops.scatter_store_rows_batched(dst, safe_idx, vals)
+    if mode == "add":
+        return jax.vmap(
+            lambda d, i, v: scatter(d, i, v, mode="add", backend=backend)
+        )(dst, idx, vals)
+    if keep is None:
+        keep = jax.vmap(lambda i: _store_keep(None, i, dst.shape[1]))(idx)
     return jax.vmap(
-        lambda d, i, v: scatter(d, i, v, mode=mode, backend=backend)
-    )(dst, idx, vals)
+        lambda d, i, v, k: scatter(d, i, v, mode="store", backend=backend,
+                                   keep=k)
+    )(dst, idx, vals, keep)

@@ -38,13 +38,16 @@ def gs_shardings(mesh: Mesh, axis: str, kind: str, *, batched: bool = False):
     pattern-batch dim of a bucket launch, and a whole pattern — indices,
     its private table, its payload — lives on one shard, so *everything*
     shards on dim 0 and no cross-device writes exist by construction.
+
+    Scatter executables take four operands (dst, idx, vals, keep): the
+    host-precomputed last-write-wins keep mask rides with the indices.
     """
     if kind not in ("gather", "scatter"):
         raise ValueError(f"kind must be gather|scatter, got {kind!r}")
     from repro.runtime.sharding import named_shardings
     shard, rep = P(axis), P()
     if batched:
-        n_in = 2 if kind == "gather" else 3
+        n_in = 2 if kind == "gather" else 4
         in_sh = named_shardings(mesh, *([shard] * n_in))
         (out_sh,) = named_shardings(mesh, shard)
         return in_sh, out_sh
@@ -52,17 +55,21 @@ def gs_shardings(mesh: Mesh, axis: str, kind: str, *, batched: bool = False):
         in_sh = named_shardings(mesh, rep, shard)     # table replicated
         (out_sh,) = named_shardings(mesh, shard)      # rows land per-shard
         return in_sh, out_sh
-    in_sh = named_shardings(mesh, rep, shard, shard)  # dst, idx, vals
+    # dst, idx, vals, keep: lane-dim operands shard with the lanes
+    in_sh = named_shardings(mesh, rep, shard, shard, shard)
     (out_sh,) = named_shardings(mesh, rep)            # any shard, any row
     return in_sh, out_sh
 
 
 def make_host_buffers(pattern: Pattern, row_width: int, seed: int = 0):
-    """Host-side buffers for one pattern: (src, abs_idx, vals_or_None).
+    """Host-side buffers for one pattern: (src, abs_idx, vals, keep).
 
     ``src`` is the (footprint, row_width) float32 table, ``abs_idx`` the
-    flattened (count*index_len,) int32 absolute indices, and ``vals`` the
-    scatter payload (None for gathers).  Both GSEngine and the suite
+    flattened (count*index_len,) int32 absolute indices, ``vals`` the
+    scatter payload (None for gathers), and ``keep`` the last-write-wins
+    keep mask over ``abs_idx`` (None for gathers).  The mask is computed
+    HERE, on the host, once per pattern — static-index preprocessing never
+    enters a timed executable (paper §3.5).  Both GSEngine and the suite
     planner (plan.py) build their device buffers from this one function so
     batched and per-pattern execution see bit-identical inputs.
     """
@@ -71,10 +78,10 @@ def make_host_buffers(pattern: Pattern, row_width: int, seed: int = 0):
     abs_idx = pattern.absolute_indices().reshape(-1)
     src = rng.standard_normal((f, row_width), dtype=np.float32)
     if pattern.kind == "gather":
-        return src, abs_idx, None
+        return src, abs_idx, None, None
     vals = rng.standard_normal((abs_idx.shape[0], row_width),
                                dtype=np.float32)
-    return src, abs_idx, vals
+    return src, abs_idx, vals, B.keep_last_mask(abs_idx)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,23 +137,27 @@ class GSEngine:
 
     def make_buffers(self):
         f, r = self.footprint_shape()
-        host_src, host_idx, host_vals = make_host_buffers(
+        host_src, host_idx, host_vals, host_keep = make_host_buffers(
             self.pattern, self.row_width, seed=self._seed)
         idx = jnp.asarray(host_idx, jnp.int32)
         if self.pattern.kind == "gather":
-            return jnp.asarray(host_src, self.dtype), idx, None
+            return jnp.asarray(host_src, self.dtype), idx, None, None
         vals = jnp.asarray(host_vals, self.dtype)
         dst = jnp.zeros((f, r), self.dtype)
-        return dst, idx, vals
+        return dst, idx, vals, jnp.asarray(host_keep)
 
     # -- executables ---------------------------------------------------------
     def build(self):
-        """Returns (fn, args) where fn(*args) performs the whole pattern."""
+        """Returns (fn, args) where fn(*args) performs the whole pattern.
+
+        Scatter args carry the host-precomputed keep mask as a regular
+        operand: the jitted hot path contains only the access itself.
+        """
         if self._built is not None:
             return self._built
         backend = self.backend
         if self.pattern.kind == "gather":
-            src, idx, _ = self.make_buffers()
+            src, idx, _, _ = self.make_buffers()
 
             @jax.jit
             def fn(src, idx):
@@ -154,13 +165,14 @@ class GSEngine:
 
             self._built = (fn, (src, idx))
         else:
-            dst, idx, vals = self.make_buffers()
+            dst, idx, vals, keep = self.make_buffers()
 
             @partial(jax.jit, donate_argnums=(0,))
-            def fn(dst, idx, vals):
-                return B.scatter(dst, idx, vals, mode="store", backend=backend)
+            def fn(dst, idx, vals, keep):
+                return B.scatter(dst, idx, vals, mode="store",
+                                 backend=backend, keep=keep)
 
-            self._built = (fn, (dst, idx, vals))
+            self._built = (fn, (dst, idx, vals, keep))
         return self._built
 
     def sharded(self, mesh: Mesh, axis: str = "data"):
@@ -180,9 +192,9 @@ class GSEngine:
         else:
             # mode must match build()'s "store": "add" here made sharded and
             # unsharded runs disagree whenever a pattern writes an index twice
-            def raw(dst, idx, vals):
+            def raw(dst, idx, vals, keep):
                 return B.scatter(dst, idx, vals, mode="store",
-                                 backend=backend)
+                                 backend=backend, keep=keep)
         sharded_fn = jax.jit(raw, in_shardings=in_shardings,
                              out_shardings=out_shardings)
         return sharded_fn, args
@@ -192,15 +204,15 @@ class GSEngine:
         fn, args = self.build()
         if self.pattern.kind == "scatter":
             # donation consumes dst; rebuild per run
-            dst, idx, vals = args
-            out = fn(dst, idx, vals)
+            dst, idx, vals, keep = args
+            out = fn(dst, idx, vals, keep)
             jax.block_until_ready(out)          # compile & warm
             times = []
             for _ in range(runs):
                 d = jnp.zeros_like(out)
                 jax.block_until_ready(d)
                 t0 = time.perf_counter()
-                out = fn(d, idx, vals)
+                out = fn(d, idx, vals, keep)
                 jax.block_until_ready(out)
                 times.append(time.perf_counter() - t0)
         else:

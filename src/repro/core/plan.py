@@ -67,6 +67,16 @@ function ``GSEngine`` uses — so batched results are bit-identical to
 per-pattern execution (asserted by tests/test_suite_plan.py on all four
 backends, and by tests/test_sharded_plan.py for the sharded path).
 
+Hot-path hygiene.  Store-mode scatter needs last-write-wins dedup; its
+keep mask is a pure function of the (static) padded index buffer, so
+``_assemble_bucket`` computes it once on the host (backends.keep_last_mask)
+and passes it to the executable as a fourth operand — no sort or dedup
+primitive ever appears in a timed executable's jaxpr (asserted by
+tests/test_no_sort.py).  On the pallas backend the batched ops are
+batch-NATIVE kernels (a real grid over pattern-batch x tiles with the
+index buffers scalar-prefetched once) rather than jax.vmap of per-pattern
+pallas_calls, and store mode is one single-pass kernel launch per bucket.
+
 Timing attribution.  A bucket launch is timed like GSEngine.run (min over
 K runs, §3.5); each member pattern is attributed wall time proportional to
 its share of the bucket's *launched* pattern lanes — scratch batch rows
@@ -250,15 +260,24 @@ def default_cache() -> ExecutorCache:
     return _DEFAULT_CACHE
 
 
-def _build_executable(backend: str, kind: str, mode: str) -> Callable:
+def _raw_batched_fn(backend: str, kind: str, mode: str) -> Callable:
+    """The (unjitted) bucket op — single source of truth for the bucket
+    executable's signature, shared by the single-device and sharded
+    builders so their operand lists can never drift apart."""
     if kind == "gather":
         def fn(src_b, idx_b):
             return B.gather_batched(src_b, idx_b, backend=backend)
     else:
-        def fn(dst_b, idx_b, vals_b):
+        # keep is the host-precomputed last-write-wins mask over the padded
+        # index buffer (unused in add mode); the traced body never sorts
+        def fn(dst_b, idx_b, vals_b, keep_b):
             return B.scatter_batched(dst_b, idx_b, vals_b, mode=mode,
-                                     backend=backend)
-    return jax.jit(fn)
+                                     backend=backend, keep=keep_b)
+    return fn
+
+
+def _build_executable(backend: str, kind: str, mode: str) -> Callable:
+    return jax.jit(_raw_batched_fn(backend, kind, mode))
 
 
 # ---------------------------------------------------------------------------
@@ -298,15 +317,9 @@ class ShardedExecutor:
         return gs_shardings(self.mesh, self.axis, kind, batched=True)
 
     def build(self, backend: str, kind: str, mode: str) -> Callable:
-        if kind == "gather":
-            def fn(src_b, idx_b):
-                return B.gather_batched(src_b, idx_b, backend=backend)
-        else:
-            def fn(dst_b, idx_b, vals_b):
-                return B.scatter_batched(dst_b, idx_b, vals_b, mode=mode,
-                                         backend=backend)
         in_sh, out_sh = self.shardings(kind)
-        return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        return jax.jit(_raw_batched_fn(backend, kind, mode),
+                       in_shardings=in_sh, out_shardings=out_sh)
 
     def place(self, kind: str, args: tuple) -> tuple:
         """Commit assembled host buffers to their launch shardings.
@@ -349,7 +362,8 @@ def _bucket_executable(cache: ExecutorCache, backend: str, spec: BucketSpec,
 # ---------------------------------------------------------------------------
 
 def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
-                     seed: int, batch: int | None = None):
+                     seed: int, batch: int | None = None,
+                     mode: str = "store"):
     """Stack a bucket's patterns into batched device buffers.
 
     Returns (args, real_lanes) where args feeds the bucket executable and
@@ -358,6 +372,16 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
     count; default ``pad_batch``) sets the padded pattern-batch dim: rows
     past the member count are scratch patterns — all-scratch indices, zero
     tables/payloads — whose outputs the callers drop.
+
+    Scatter buckets also carry the (B_pad, N_pad) last-write-wins keep
+    mask for store mode: real lanes reuse the per-pattern mask
+    ``make_host_buffers`` already computed (real indices never reach the
+    scratch row F_pad, so padding can't change their dedup), and of the
+    padding lanes — which ALL point at F_pad — only each row's final lane
+    keeps, so the single-pass store kernel's at-most-one-write-per-row
+    contract holds for every row including scratch.  In add mode (and in
+    gather buckets) no mask is computed; the add executable's keep
+    operand is an all-False placeholder it never reads.
     """
     spec = bucket.spec
     nb = len(bucket.members)
@@ -370,10 +394,15 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
                if spec.kind == "gather" else None)
     vals_b = (np.zeros((b_pad, n_pad, r), np.float32)
               if spec.kind == "scatter" else None)
+    keep_b = (np.zeros((b_pad, n_pad), bool)
+              if spec.kind == "scatter" else None)
+    store = spec.kind == "scatter" and mode == "store"
+    if store:
+        keep_b[:, -1] = True       # scratch row's single write (pad lanes)
     real_lanes = []
     for b, pos in enumerate(bucket.members):
         p = plan.patterns[pos]
-        src, abs_idx, vals = make_host_buffers(p, r, seed=seed)
+        src, abs_idx, vals, keep = make_host_buffers(p, r, seed=seed)
         n = abs_idx.shape[0]
         real_lanes.append(n)
         idx_b[b, :n] = abs_idx
@@ -381,11 +410,14 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
             table_b[b, :src.shape[0]] = src
         else:
             vals_b[b, :n] = vals
+            if store:
+                keep_b[b, :n] = keep      # n == n_pad overwrites the True
     idx = jnp.asarray(idx_b)
     if spec.kind == "gather":
         return (jnp.asarray(table_b, dtype), idx), real_lanes
     dst = jnp.zeros((b_pad, f_pad + 1, r), dtype)
-    return (dst, idx, jnp.asarray(vals_b, dtype)), real_lanes
+    return (dst, idx, jnp.asarray(vals_b, dtype),
+            jnp.asarray(keep_b)), real_lanes
 
 
 def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
@@ -406,7 +438,7 @@ def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
     fn, batch = _bucket_executable(cache, backend, spec, dtype, row_width,
                                    mode, len(bucket.members), sharder)
     args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width, seed,
-                                        batch=batch)
+                                        batch=batch, mode=mode)
     if sharder is not None:
         args = sharder.place(spec.kind, args)
     out = np.asarray(jax.block_until_ready(fn(*args)))
@@ -450,12 +482,12 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
                                        row_width, mode, len(bucket.members),
                                        sharder)
         args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width,
-                                            seed, batch=batch)
+                                            seed, batch=batch, mode=mode)
         if sharder is not None:
             args = sharder.place(spec.kind, args)
         if spec.kind == "scatter":
-            dst, idx, vals = args
-            jax.block_until_ready(fn(dst, idx, vals))       # compile & warm
+            dst, idx, vals, keep = args
+            jax.block_until_ready(fn(dst, idx, vals, keep))  # compile & warm
             times = []
             for _ in range(runs):
                 d = jnp.zeros_like(dst)
@@ -463,7 +495,7 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
                     d = sharder.place(spec.kind, (d,))[0]
                 jax.block_until_ready(d)
                 t0 = time.perf_counter()
-                out = fn(d, idx, vals)
+                out = fn(d, idx, vals, keep)
                 jax.block_until_ready(out)
                 times.append(time.perf_counter() - t0)
         else:

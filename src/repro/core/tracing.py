@@ -180,3 +180,32 @@ def trace_gs(fn: Callable, *args: Any, **kwargs: Any) -> TraceReport:
     totals = [0]
     _harvest(closed.jaxpr, accesses, totals)
     return TraceReport(accesses=accesses, total_bytes=totals[0])
+
+
+# ---------------------------------------------------------------------------
+# jaxpr primitive census — used by the no-sort-in-hot-path regression test
+# (tests/test_no_sort.py) and the bench trajectory (benchmarks/bench_suite)
+# ---------------------------------------------------------------------------
+
+def count_primitives(jaxpr) -> dict:
+    """Recursive primitive histogram of a (closed) jaxpr.
+
+    Walks every sub-jaxpr (pjit bodies, loop/cond branches, pallas_call
+    kernel jaxprs) so e.g. ``count_primitives(jax.make_jaxpr(fn)(*args))``
+    sees the whole executable.  Returns {primitive_name: count}.
+    """
+    counts: dict = {}
+
+    def _walk(j):
+        for eqn in j.eqns:
+            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+            for val in eqn.params.values():
+                for sub in (val if isinstance(val, (list, tuple)) else [val]):
+                    inner = getattr(sub, "jaxpr", None)
+                    if inner is not None and hasattr(inner, "eqns"):
+                        _walk(inner)
+                    elif hasattr(sub, "eqns"):
+                        _walk(sub)
+
+    _walk(getattr(jaxpr, "jaxpr", jaxpr))
+    return counts

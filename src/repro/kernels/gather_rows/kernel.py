@@ -5,9 +5,12 @@ Two regimes, mirroring the paper's cache-resident vs memory-resident split
 
   * ``dma``  — the table stays in HBM; the index buffer is scalar-prefetched
     into SMEM and drives the input ``BlockSpec.index_map``, so the *DMA
-    engine itself* performs the gather, one (1, block_d) row-slice per grid
-    step.  Pallas double-buffers these DMAs (the TPU analogue of the HW
-    prefetcher studied in paper Fig 4).
+    engine itself* performs the gather.  Each grid step covers ``block_i``
+    rows (multi-row blocking): the table operand is bound ``block_i``
+    times, each binding's index_map selecting one gathered row, so the
+    pipeline keeps ``block_i`` row DMAs in flight per step instead of one
+    — the TPU analogue of the HW prefetcher's outstanding-miss depth
+    studied in paper Fig 4.
   * ``vmem`` — small tables are staged whole into VMEM and gathered with an
     in-register ``take`` over ``block_n`` rows per step (the "cache-resident"
     regime: once the table is in VMEM, arbitrary reuse is free).
@@ -15,6 +18,11 @@ Two regimes, mirroring the paper's cache-resident vs memory-resident split
 The CUDA backend's trick of staging the index buffer in shared memory (paper
 §3.2) maps exactly onto scalar prefetch: indices live in SMEM for the whole
 kernel invocation.
+
+Both kernels are batch-NATIVE (DESIGN.md §2.2): the grid leads with the
+pattern-batch dim so a whole planner bucket — (B, V, D) tables, (B, N)
+indices — is ONE launch with the index buffers scalar-prefetched once;
+the single-pattern entry point in ops.py is just the B=1 case.
 """
 from __future__ import annotations
 
@@ -26,62 +34,75 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _copy_row_kernel(idx_ref, table_blk, out_blk):
-    # The gather already happened in the DMA (index_map read idx_ref);
-    # the kernel body is a pure VMEM->VMEM tile copy.
-    del idx_ref
-    out_blk[...] = table_blk[...]
-
-
-def gather_rows_dma(table: jax.Array, idx: jax.Array, *,
-                    block_d: int, interpret: bool) -> jax.Array:
-    """HBM-resident gather: grid (N, D/block_d), one table row-slice per step."""
-    n = idx.shape[0]
-    v, d = table.shape
-    assert d % block_d == 0, (d, block_d)
-    grid = (n, d // block_d)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_d), lambda i, j, idx_ref: (idx_ref[i], j)),
-        ],
-        out_specs=pl.BlockSpec((1, block_d), lambda i, j, idx_ref: (i, j)),
-    )
-    return pl.pallas_call(
-        _copy_row_kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
-        interpret=interpret,
-    )(idx, table)
-
-
-def _vmem_take_kernel(block_n: int, idx_ref, table_ref, out_ref):
-    i = pl.program_id(0)
-    rows = idx_ref[pl.ds(i * block_n, block_n)]
-    out_ref[...] = jnp.take(table_ref[...], rows, axis=0)
+def _vmem_take_kernel(block_n: int, idx_ref, table_blk, out_blk):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    rows = idx_ref[b, pl.ds(i * block_n, block_n)]
+    out_blk[...] = jnp.take(table_blk[0], rows, axis=0)[None]
 
 
 def gather_rows_vmem(table: jax.Array, idx: jax.Array, *,
                      block_n: int, interpret: bool) -> jax.Array:
-    """VMEM-resident gather: whole table in VMEM, block_n rows per step.
+    """VMEM-resident gather: (B, V, D) tables, (B, N) idx -> (B, N, D).
 
-    Caller guarantees n % block_n == 0 (ops.py pads).
+    One launch for the whole pattern batch; pattern b's table is staged
+    whole per b-step.  Caller guarantees n % block_n == 0 (ops.py pads).
     """
-    n = idx.shape[0]
-    v, d = table.shape
+    bsz, n = idx.shape
+    _, v, d = table.shape
     assert n % block_n == 0, (n, block_n)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n // block_n,),
-        in_specs=[pl.BlockSpec((v, d), lambda i, idx_ref: (0, 0))],
-        out_specs=pl.BlockSpec((block_n, d), lambda i, idx_ref: (i, 0)),
+        grid=(bsz, n // block_n),
+        in_specs=[pl.BlockSpec((1, v, d), lambda b, i, idx_ref: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, block_n, d),
+                               lambda b, i, idx_ref: (b, i, 0)),
     )
     return pl.pallas_call(
         functools.partial(_vmem_take_kernel, block_n),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((bsz, n, d), table.dtype),
         interpret=interpret,
     )(idx, table)
+
+
+def _copy_rows_kernel(block_i: int, idx_ref, *refs):
+    # The gather already happened in the DMA (each table binding's index_map
+    # read idx_ref); the body reassembles block_i row-slices into the tile.
+    del idx_ref
+    row_blks, out_blk = refs[:block_i], refs[block_i]
+    for r, blk in enumerate(row_blks):
+        out_blk[0, r, :] = blk[0, 0, :]
+
+
+def gather_rows_dma(table: jax.Array, idx: jax.Array, *,
+                    block_d: int, block_i: int, interpret: bool) -> jax.Array:
+    """HBM-resident gather: grid (B, N/block_i, D/block_d), block_i rows/step.
+
+    Caller guarantees n % block_i == 0 and d % block_d == 0 (ops.py pads).
+    """
+    bsz, n = idx.shape
+    _, v, d = table.shape
+    assert d % block_d == 0, (d, block_d)
+    assert n % block_i == 0, (n, block_i)
+    grid = (bsz, n // block_i, d // block_d)
+
+    def row_spec(r):
+        return pl.BlockSpec(
+            (1, 1, block_d),
+            lambda b, i, j, idx_ref, r=r: (b, idx_ref[b, i * block_i + r], j))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[row_spec(r) for r in range(block_i)],
+        out_specs=pl.BlockSpec((1, block_i, block_d),
+                               lambda b, i, j, idx_ref: (b, i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_copy_rows_kernel, block_i),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, n, d), table.dtype),
+        interpret=interpret,
+    )(idx, *([table] * block_i))

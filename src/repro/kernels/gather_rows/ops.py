@@ -1,7 +1,9 @@
-"""Public jit'd wrapper for the row-gather kernel.
+"""Public jit'd wrappers for the row-gather kernels.
 
 Picks the VMEM-resident regime for small tables and the DMA regime
 otherwise, pads ragged shapes, and defaults to interpret mode off-TPU.
+``gather_rows_batched`` runs a whole pattern batch (a planner bucket) as
+one kernel launch (DESIGN.md §2.2); ``gather_rows`` is its B=1 case.
 """
 from __future__ import annotations
 
@@ -15,7 +17,14 @@ from . import kernel
 # VMEM on v5e is ~128 MiB/core but the pipeline needs headroom; stage tables
 # whole only when they take at most this many bytes.
 _VMEM_TABLE_BYTES = 4 * 1024 * 1024
-_DEFAULT_BLOCK_N = 8
+# vmem regime: rows gathered per grid step.  64 amortizes the per-step
+# overhead over a full (8, 128)-tile-aligned output block (the old default
+# of 8 left 8x more grid steps on the table for nothing).
+_DEFAULT_BLOCK_N = 64
+# dma regime: row DMAs in flight per grid step (multi-row blocking); 8
+# concurrent row fetches keeps the DMA engine busy without exhausting the
+# double-buffered VMEM block budget.
+_DEFAULT_BLOCK_I = 8
 
 
 def _should_interpret(interpret: bool | None) -> bool:
@@ -24,47 +33,85 @@ def _should_interpret(interpret: bool | None) -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "block_n", "block_d", "interpret"))
-def _gather_rows(table, idx, mode: str, block_n: int, block_d: int,
-                 interpret: bool):
-    n = idx.shape[0]
-    v, d = table.shape
+def _pad_idx(idx, multiple: int):
+    n = idx.shape[-1]
+    pad = (-n) % multiple
+    if not pad:
+        return idx
+    fill = jnp.zeros(idx.shape[:-1] + (pad,), jnp.int32)   # row 0: harmless
+    return jnp.concatenate([idx, fill], axis=-1)
+
+
+def _pick_block_d(d: int) -> int:
+    block_d = d if d <= 512 else 512
+    while d % block_d:
+        block_d //= 2
+        if block_d == 0:
+            return d
+    return block_d
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_n", "block_d",
+                                             "block_i", "interpret"))
+def _gather_rows_batched(table, idx, mode: str, block_n: int, block_d: int,
+                         block_i: int, interpret: bool):
+    bsz, n = idx.shape
+    _, v, d = table.shape
     idx = idx.astype(jnp.int32)
     if mode == "vmem":
-        pad = (-n) % block_n
-        if pad:
-            idx_p = jnp.concatenate([idx, jnp.zeros((pad,), jnp.int32)])
-        else:
-            idx_p = idx
-        out = kernel.gather_rows_vmem(table, idx_p, block_n=block_n,
-                                      interpret=interpret)
-        return out[:n]
-    # dma mode: pad D up to a block_d multiple
+        out = kernel.gather_rows_vmem(table, _pad_idx(idx, block_n),
+                                      block_n=block_n, interpret=interpret)
+        return out[:, :n]
+    # dma mode: pad D up to a block_d multiple, N up to a block_i multiple
     pad_d = (-d) % block_d
     if pad_d:
-        table = jnp.pad(table, ((0, 0), (0, pad_d)))
-    out = kernel.gather_rows_dma(table, idx, block_d=block_d,
+        table = jnp.pad(table, ((0, 0), (0, 0), (0, pad_d)))
+    out = kernel.gather_rows_dma(table, _pad_idx(idx, block_i),
+                                 block_d=block_d, block_i=block_i,
                                  interpret=interpret)
-    return out[:, :d]
+    return out[:, :n, :d]
+
+
+def gather_rows_batched(table: jax.Array, idx: jax.Array, *,
+                        mode: str = "auto",
+                        block_n: int = _DEFAULT_BLOCK_N,
+                        block_d: int | None = None,
+                        block_i: int = _DEFAULT_BLOCK_I,
+                        interpret: bool | None = None) -> jax.Array:
+    """Batched gather: (B, V, D) tables, (B, N) idx -> (B, N, D).
+
+    One kernel launch for the whole pattern batch (a planner bucket), with
+    the index buffers scalar-prefetched once — not a vmap of per-pattern
+    launches.  The regime choice sizes VMEM per b-step, so it uses one
+    pattern's table bytes, not the whole stack's.
+    """
+    if table.ndim != 3 or idx.ndim != 2 or table.shape[0] != idx.shape[0]:
+        raise ValueError(f"expected (B,V,D) table and (B,N) idx, got "
+                         f"{table.shape} / {idx.shape}")
+    interp = _should_interpret(interpret)
+    if mode == "auto":
+        per_pattern_bytes = (table.shape[1] * table.shape[2]
+                             * table.dtype.itemsize)
+        mode = "vmem" if per_pattern_bytes <= _VMEM_TABLE_BYTES else "dma"
+    if block_d is None:
+        block_d = _pick_block_d(table.shape[2])
+    block_n = min(block_n, max(1, idx.shape[1]))
+    block_i = min(block_i, max(1, idx.shape[1]))
+    return _gather_rows_batched(table, idx, mode, block_n, block_d, block_i,
+                                interp)
 
 
 def gather_rows(table: jax.Array, idx: jax.Array, *, mode: str = "auto",
                 block_n: int = _DEFAULT_BLOCK_N, block_d: int | None = None,
+                block_i: int = _DEFAULT_BLOCK_I,
                 interpret: bool | None = None) -> jax.Array:
-    """Gather rows of ``table`` (V, D) at positions ``idx`` (N,) -> (N, D)."""
+    """Gather rows of ``table`` (V, D) at positions ``idx`` (N,) -> (N, D).
+
+    The B=1 case of the batched kernel — one code path for both.
+    """
     if table.ndim != 2 or idx.ndim != 1:
         raise ValueError(f"expected (V,D) table and (N,) idx, got "
                          f"{table.shape} / {idx.shape}")
-    interp = _should_interpret(interpret)
-    if mode == "auto":
-        table_bytes = table.size * table.dtype.itemsize
-        mode = "vmem" if table_bytes <= _VMEM_TABLE_BYTES else "dma"
-    if block_d is None:
-        d = table.shape[1]
-        block_d = d if d <= 512 else 512
-        while table.shape[1] % block_d:
-            block_d //= 2
-            if block_d == 0:
-                block_d = table.shape[1]
-                break
-    return _gather_rows(table, idx, mode, block_n, block_d, interp)
+    return gather_rows_batched(table[None], idx[None], mode=mode,
+                               block_n=block_n, block_d=block_d,
+                               block_i=block_i, interpret=interpret)[0]

@@ -1,8 +1,8 @@
-"""MXU one-hot scatter-add — the TPU-native Spatter scatter kernel.
+"""MXU one-hot scatter kernels — the TPU-native Spatter scatter backend.
 
 CPU/GPU scatter relies on hardware write combining / atomics; the TPU has
 neither at kernel level.  The TPU-native reformulation (DESIGN.md §2) turns
-scatter-add into dense compute: for each chunk of ``block_n`` (index, row)
+scatter into dense compute: for each chunk of ``block_n`` (index, row)
 pairs, build a (block_v, block_n) one-hot membership matrix for the output
 tile and contract it with the chunk's rows on the MXU:
 
@@ -12,6 +12,20 @@ The output tile revisits are *consecutive* (chunk is the innermost grid
 dim), so the accumulator stays resident in VMEM across the whole sweep —
 the analogue of keeping the scatter target cache-resident in the paper's
 CPU backend.  Duplicate indices are handled by construction (they just add).
+
+Store mode is a SINGLE PASS over the same grid (``_scatter_store_kernel``):
+the host-precomputed last-write-wins mask (backends.keep_last_mask,
+DESIGN.md §2.1) routes dropped lanes out of range before launch, so every
+surviving lane is its row's unique write — the kernel initializes each
+output tile from ``dst`` and overwrites exactly the covered rows with the
+one-hot contraction (exact: one nonzero term per row).  This replaces the
+old masked-add + coverage-count + blend *triple* launch with one kernel.
+
+All kernels are batch-NATIVE (DESIGN.md §2.2): the grid leads with the
+pattern-batch dim and the whole (B, N) index buffer is scalar-prefetched
+once, so a planner bucket is ONE launch — and the single-pattern entry
+points in ops.py are just the B=1 case of the same kernels (one code
+path, no vmap, no parallel single/batched kernel bodies to keep in sync).
 """
 from __future__ import annotations
 
@@ -25,44 +39,107 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _scatter_add_kernel(block_v: int, block_n: int,
                         idx_ref, vals_blk, out_blk):
-    vb = pl.program_id(0)
-    c = pl.program_id(1)
+    b = pl.program_id(0)
+    vb = pl.program_id(1)
+    c = pl.program_id(2)
 
     @pl.when(c == 0)
     def _init():
         out_blk[...] = jnp.zeros_like(out_blk)
 
-    chunk = idx_ref[pl.ds(c * block_n, block_n)]          # (block_n,)
+    chunk = idx_ref[b, pl.ds(c * block_n, block_n)]        # (block_n,)
     local = chunk - vb * block_v                           # relative to tile
     rows = jax.lax.broadcasted_iota(jnp.int32, (block_v, block_n), 0)
     onehot = (rows == local[None, :]).astype(vals_blk.dtype)
     out_blk[...] += jax.lax.dot(
-        onehot, vals_blk[...], precision=jax.lax.Precision.DEFAULT,
-        preferred_element_type=out_blk.dtype)
+        onehot, vals_blk[0], precision=jax.lax.Precision.DEFAULT,
+        preferred_element_type=out_blk.dtype)[None]
 
 
-def scatter_add_rows_kernel(idx: jax.Array, vals: jax.Array, v_padded: int, *,
-                            block_v: int, block_n: int,
+def scatter_add_rows_kernel(idx: jax.Array, vals: jax.Array,
+                            v_padded: int, *, block_v: int, block_n: int,
                             interpret: bool) -> jax.Array:
-    """sum-scatter ``vals`` (N, D) into a zeroed (v_padded, D) table.
+    """sum-scatter ``vals`` (B, N, D) at ``idx`` (B, N) into (B, v_padded, D).
 
-    Caller guarantees: N % block_n == 0, v_padded % block_v == 0, and padded
-    entries of ``idx`` point outside [0, v_padded) so they are dropped.
+    One launch for the whole pattern batch.  Caller guarantees:
+    N % block_n == 0, v_padded % block_v == 0, and padded entries of
+    ``idx`` point outside [0, v_padded) so the one-hot drops them.
     """
-    n, d = vals.shape
-    grid = (v_padded // block_v, n // block_n)
+    bsz, n, d = vals.shape
+    grid = (bsz, v_padded // block_v, n // block_n)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, d), lambda vb, c, idx_ref: (c, 0)),
+            pl.BlockSpec((1, block_n, d), lambda b, vb, c, idx_ref: (b, c, 0)),
         ],
-        out_specs=pl.BlockSpec((block_v, d), lambda vb, c, idx_ref: (vb, 0)),
+        out_specs=pl.BlockSpec((1, block_v, d),
+                               lambda b, vb, c, idx_ref: (b, vb, 0)),
     )
     return pl.pallas_call(
         functools.partial(_scatter_add_kernel, block_v, block_n),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((v_padded, d), vals.dtype),
+        out_shape=jax.ShapeDtypeStruct((bsz, v_padded, d), vals.dtype),
         interpret=interpret,
     )(idx, vals)
+
+
+def _scatter_store_kernel(block_v: int, block_n: int,
+                          idx_ref, vals_blk, dst_blk, out_blk):
+    b = pl.program_id(0)
+    vb = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        out_blk[...] = dst_blk[...]
+
+    chunk = idx_ref[b, pl.ds(c * block_n, block_n)]
+    local = chunk - vb * block_v
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_v, block_n), 0)
+    hit = rows == local[None, :]
+    # each surviving lane is its row's unique write (host keep mask routed
+    # duplicates out of range), so the contraction has one nonzero term per
+    # covered row — an exact select, not a sum
+    written = jax.lax.dot(
+        hit.astype(vals_blk.dtype), vals_blk[0],
+        precision=jax.lax.Precision.DEFAULT,
+        preferred_element_type=out_blk.dtype)
+    covered = hit.max(axis=1)                              # (block_v,) bool
+    out_blk[...] = jnp.where(covered[None, :, None], written[None],
+                             out_blk[...])
+
+
+def scatter_store_rows_kernel(idx: jax.Array, vals: jax.Array,
+                              dst: jax.Array, *, block_v: int, block_n: int,
+                              interpret: bool) -> jax.Array:
+    """Last-write-wins store of ``vals`` (B, N, D) into ``dst`` (B, V_pad, D).
+
+    One single-pass launch for the whole pattern batch.  Caller
+    guarantees: N % block_n == 0, V_pad % block_v == 0, dropped / padded
+    entries of ``idx`` point outside [0, V_pad), and each in-range index
+    value occurs at most once per batch row (the host keep mask's
+    contract).
+    """
+    bsz, n, d = vals.shape
+    v_padded = dst.shape[1]
+    grid = (bsz, v_padded // block_v, n // block_n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda b, vb, c, idx_ref: (b, c, 0)),
+            pl.BlockSpec((1, block_v, d),
+                         lambda b, vb, c, idx_ref: (b, vb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_v, d),
+                               lambda b, vb, c, idx_ref: (b, vb, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_store_kernel, block_v, block_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, v_padded, d), dst.dtype),
+        interpret=interpret,
+    )(idx, vals, dst)

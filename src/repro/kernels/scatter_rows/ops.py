@@ -1,4 +1,13 @@
-"""Public jit'd wrapper for the MXU scatter-add kernel."""
+"""Public jit'd wrappers for the MXU scatter kernels.
+
+``scatter_add_rows_batched`` / ``scatter_store_rows_batched`` run a whole
+pattern batch (a planner bucket) as ONE kernel launch with the (B, N)
+index buffer scalar-prefetched once (DESIGN.md §2.2); the per-pattern
+entry points are the B=1 case of the same kernels.  Store mode expects
+its index buffer pre-deduped on the host (dropped lanes routed out of
+range — backends.keep_last_mask), so the kernel is a single pass with no
+sort and no coverage-count launch.
+"""
 from __future__ import annotations
 
 import functools
@@ -12,29 +21,64 @@ _DEFAULT_BLOCK_V = 128
 _DEFAULT_BLOCK_N = 128
 
 
+def _oob() -> int:
+    return jnp.iinfo(jnp.int32).max
+
+
 def _should_interpret(interpret: bool | None) -> bool:
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
 
 
+def _clip_blocks(v: int, n: int, block_v: int, block_n: int):
+    return min(block_v, max(8, v)), min(block_n, max(8, n))
+
+
+def _pad_lanes(idx, vals, block_n: int):
+    """Pad the lane dim to a block_n multiple; pad lanes point past every
+    tile so the one-hot drops them."""
+    bsz, n = idx.shape
+    pad_n = (-n) % block_n
+    if not pad_n:
+        return idx, vals
+    idx = jnp.concatenate(
+        [idx, jnp.full((bsz, pad_n), _oob(), jnp.int32)], axis=1)
+    vals = jnp.concatenate(
+        [vals, jnp.zeros((bsz, pad_n, vals.shape[2]), vals.dtype)], axis=1)
+    return idx, vals
+
+
+# ---------------------------------------------------------------------------
+# scatter-add
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit,
                    static_argnames=("v", "block_v", "block_n", "interpret"))
-def _scatter_add(idx, vals, v: int, block_v: int, block_n: int,
-                 interpret: bool):
-    n, d = vals.shape
-    idx = idx.astype(jnp.int32)
-    pad_n = (-n) % block_n
-    if pad_n:
-        # padded entries point past every tile -> dropped by the one-hot
-        idx = jnp.concatenate(
-            [idx, jnp.full((pad_n,), jnp.iinfo(jnp.int32).max, jnp.int32)])
-        vals = jnp.concatenate([vals, jnp.zeros((pad_n, d), vals.dtype)])
+def _scatter_add_batched(idx, vals, v: int, block_v: int, block_n: int,
+                         interpret: bool):
+    idx, vals = _pad_lanes(idx.astype(jnp.int32), vals, block_n)
     v_padded = v + ((-v) % block_v)
     out = kernel.scatter_add_rows_kernel(
         idx, vals, v_padded, block_v=block_v, block_n=block_n,
         interpret=interpret)
-    return out[:v]
+    return out[:, :v]
+
+
+def scatter_add_rows_batched(idx: jax.Array, vals: jax.Array, v: int, *,
+                             block_v: int = _DEFAULT_BLOCK_V,
+                             block_n: int = _DEFAULT_BLOCK_N,
+                             interpret: bool | None = None) -> jax.Array:
+    """Batched scatter-add: idx (B, N), vals (B, N, D) -> (B, V, D).
+
+    One kernel launch for the whole pattern batch.  Out-of-range indices
+    are dropped (matching ``.at[].add(mode="drop")``).
+    """
+    if vals.ndim != 3 or idx.ndim != 2 or idx.shape != vals.shape[:2]:
+        raise ValueError(f"bad shapes idx={idx.shape} vals={vals.shape}")
+    block_v, block_n = _clip_blocks(v, idx.shape[1], block_v, block_n)
+    return _scatter_add_batched(idx, vals, v, block_v, block_n,
+                                _should_interpret(interpret))
 
 
 def scatter_add_rows(idx: jax.Array, vals: jax.Array, v: int, *,
@@ -43,11 +87,70 @@ def scatter_add_rows(idx: jax.Array, vals: jax.Array, v: int, *,
                      interpret: bool | None = None) -> jax.Array:
     """Scatter-add ``vals`` (N, D) at row indices ``idx`` (N,) into (V, D).
 
-    Out-of-range indices are dropped (matching ``.at[].add(mode="drop")``).
+    The B=1 case of the batched kernel — one code path for both.
     """
     if vals.ndim != 2 or idx.ndim != 1 or idx.shape[0] != vals.shape[0]:
         raise ValueError(f"bad shapes idx={idx.shape} vals={vals.shape}")
-    block_v = min(block_v, max(8, v))
-    block_n = min(block_n, max(8, idx.shape[0]))
-    return _scatter_add(idx, vals, v, block_v, block_n,
-                        _should_interpret(interpret))
+    return scatter_add_rows_batched(idx[None], vals[None], v,
+                                    block_v=block_v, block_n=block_n,
+                                    interpret=interpret)[0]
+
+
+# ---------------------------------------------------------------------------
+# single-pass store
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_v", "block_n", "interpret"))
+def _scatter_store_batched(dst, idx, vals, block_v: int, block_n: int,
+                           interpret: bool):
+    bsz, _, d = vals.shape
+    v = dst.shape[1]
+    idx, vals = _pad_lanes(idx.astype(jnp.int32), vals, block_n)
+    pad_v = (-v) % block_v
+    if pad_v:
+        dst = jnp.concatenate(
+            [dst, jnp.zeros((bsz, pad_v, d), dst.dtype)], axis=1)
+    out = kernel.scatter_store_rows_kernel(
+        idx, vals, dst, block_v=block_v, block_n=block_n,
+        interpret=interpret)
+    return out[:, :v]
+
+
+def scatter_store_rows_batched(dst: jax.Array, idx: jax.Array,
+                               vals: jax.Array, *,
+                               block_v: int = _DEFAULT_BLOCK_V,
+                               block_n: int = _DEFAULT_BLOCK_N,
+                               interpret: bool | None = None) -> jax.Array:
+    """Batched store: dst (B, V, D), idx (B, N), vals (B, N, D) -> (B, V, D).
+
+    One single-pass kernel launch for the whole pattern batch.  Contract:
+    each in-range index value occurs at most once per batch row (the host
+    keep mask already dropped duplicate writes by routing them out of
+    range); out-of-range indices are dropped.
+    """
+    if (vals.ndim != 3 or idx.ndim != 2 or dst.ndim != 3
+            or idx.shape != vals.shape[:2] or dst.shape[2] != vals.shape[2]):
+        raise ValueError(f"bad shapes dst={dst.shape} idx={idx.shape} "
+                         f"vals={vals.shape}")
+    block_v, block_n = _clip_blocks(dst.shape[1], idx.shape[1],
+                                    block_v, block_n)
+    return _scatter_store_batched(dst, idx, vals, block_v, block_n,
+                                  _should_interpret(interpret))
+
+
+def scatter_store_rows(dst: jax.Array, idx: jax.Array, vals: jax.Array, *,
+                       block_v: int = _DEFAULT_BLOCK_V,
+                       block_n: int = _DEFAULT_BLOCK_N,
+                       interpret: bool | None = None) -> jax.Array:
+    """Store ``vals`` (N, D) into ``dst`` (V, D) at rows ``idx`` (N,).
+
+    The B=1 case of the batched kernel — one code path for both.
+    """
+    if (vals.ndim != 2 or idx.ndim != 1 or dst.ndim != 2
+            or idx.shape[0] != vals.shape[0] or dst.shape[1] != vals.shape[1]):
+        raise ValueError(f"bad shapes dst={dst.shape} idx={idx.shape} "
+                         f"vals={vals.shape}")
+    return scatter_store_rows_batched(dst[None], idx[None], vals[None],
+                                      block_v=block_v, block_n=block_n,
+                                      interpret=interpret)[0]

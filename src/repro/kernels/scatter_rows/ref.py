@@ -7,3 +7,10 @@ def scatter_add_rows_ref(idx: jax.Array, vals: jax.Array, v: int) -> jax.Array:
     """out = zeros(V, D); out[idx[i]] += vals[i]"""
     out = jnp.zeros((v, vals.shape[1]), dtype=vals.dtype)
     return out.at[idx].add(vals, mode="drop")
+
+
+def scatter_store_rows_ref(dst: jax.Array, idx: jax.Array,
+                           vals: jax.Array) -> jax.Array:
+    """out = dst; out[idx[i]] = vals[i] — caller pre-deduped idx (at most
+    one in-range occurrence per row), out-of-range lanes dropped."""
+    return dst.at[idx].set(vals, mode="drop")

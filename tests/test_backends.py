@@ -122,8 +122,8 @@ def test_sharded_engine_subprocess():
         ps = make_pattern("UNIFORM:8:2", kind="scatter", delta=4, count=128)
         engs = GSEngine(ps, backend="xla")
         fns, argss = engs.sharded(mesh, "data")
-        dst, idx, vals = argss
-        outs = fns(dst, idx, vals)
+        dst, idx, vals, keep = argss
+        outs = fns(dst, idx, vals, keep)
         ref = np.asarray(B.scatter(jnp.zeros_like(dst), idx, vals,
                                    mode="store", backend="xla"))
         assert np.array_equal(np.asarray(outs), ref)

@@ -13,9 +13,21 @@ from repro.kernels.gather_rows.ref import gather_rows_ref
 from repro.kernels.paged_decode import ops as pops
 from repro.kernels.paged_decode.ref import paged_decode_attention_ref
 from repro.kernels.scatter_rows import ops as sops
-from repro.kernels.scatter_rows.ref import scatter_add_rows_ref
+from repro.kernels.scatter_rows.ref import (scatter_add_rows_ref,
+                                            scatter_store_rows_ref)
 
 RNG = np.random.default_rng(42)
+
+OOB = np.iinfo(np.int32).max
+
+
+def _deduped_idx(v, n):
+    """Random indices with duplicates routed out of range (the host
+    keep-mask contract scatter_store_rows expects)."""
+    from repro.core.backends import keep_last_mask
+    idx = RNG.integers(0, v, n).astype(np.int32)
+    keep = keep_last_mask(idx)
+    return np.where(keep, idx, OOB).astype(np.int32), idx, keep
 
 
 def _tol(dtype):
@@ -81,6 +93,136 @@ class TestScatterAddRows:
         vals = jnp.ones((3, 4), jnp.float32)
         out = sops.scatter_add_rows(idx, vals, 8)
         assert np.asarray(out).sum() == 8.0
+
+
+class TestScatterStoreRows:
+    """Single-pass store kernel: one launch, host-pre-deduped indices."""
+
+    @pytest.mark.parametrize("v,d,n", [
+        (8, 8, 8), (64, 16, 200), (130, 100, 57), (128, 128, 1000),
+        (1000, 32, 64),
+        (5, 3, 2),        # N and V both below the block sizes
+        (257, 130, 301),  # ragged D, ragged V, ragged N all at once
+    ])
+    def test_sweep(self, v, d, n):
+        safe_idx, _, _ = _deduped_idx(v, n)
+        vals = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+        dst = jnp.asarray(RNG.standard_normal((v, d)), jnp.float32)
+        out = sops.scatter_store_rows(dst, jnp.asarray(safe_idx), vals)
+        ref = scatter_store_rows_ref(dst, jnp.asarray(safe_idx), vals)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_matches_sequential_lww(self):
+        """With the keep mask applied, the kernel equals a sequential
+        last-write-wins loop over the RAW (duplicate-laden) indices."""
+        v, d, n = 40, 12, 150
+        safe_idx, raw_idx, _ = _deduped_idx(v, n)
+        vals = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+        dst = jnp.asarray(RNG.standard_normal((v, d)), jnp.float32)
+        ref = np.asarray(dst).copy()
+        for i, j in enumerate(raw_idx):
+            ref[j] = np.asarray(vals)[i]
+        out = sops.scatter_store_rows(dst, jnp.asarray(safe_idx), vals)
+        np.testing.assert_array_equal(np.asarray(out), ref)
+
+    def test_untouched_rows_pass_through(self):
+        v, d = 64, 8
+        dst = jnp.asarray(RNG.standard_normal((v, d)), jnp.float32)
+        idx = jnp.asarray([3, 10], jnp.int32)
+        vals = jnp.ones((2, d), jnp.float32)
+        out = np.asarray(sops.scatter_store_rows(dst, idx, vals))
+        np.testing.assert_array_equal(out[[3, 10]], np.ones((2, d)))
+        rest = [i for i in range(v) if i not in (3, 10)]
+        np.testing.assert_array_equal(out[rest], np.asarray(dst)[rest])
+
+    def test_padding_lanes_dropped(self):
+        """keep-mask padding rows: OOB lanes (dropped duplicates and lane
+        padding alike) never touch the table, wherever they fall."""
+        v, d = 16, 4
+        dst = jnp.zeros((v, d), jnp.float32)
+        idx = jnp.asarray([OOB, 2, OOB, OOB, 5, OOB], jnp.int32)
+        vals = jnp.asarray(RNG.standard_normal((6, d)), jnp.float32)
+        out = np.asarray(sops.scatter_store_rows(dst, idx, vals))
+        np.testing.assert_array_equal(out[2], np.asarray(vals)[1])
+        np.testing.assert_array_equal(out[5], np.asarray(vals)[4])
+        assert np.abs(out[[i for i in range(v) if i not in (2, 5)]]).max() == 0
+
+
+class TestBatchedKernels:
+    """Batch-native bucket kernels: one launch per pattern batch."""
+
+    @pytest.mark.parametrize("b,v,d,n", [
+        (1, 8, 8, 8), (4, 64, 16, 33), (3, 130, 100, 57), (8, 32, 8, 5),
+    ])
+    def test_gather_batched(self, b, v, d, n):
+        table = jnp.asarray(RNG.standard_normal((b, v, d)), jnp.float32)
+        idx = jnp.asarray(RNG.integers(0, v, (b, n)), jnp.int32)
+        for mode in ("vmem", "dma"):
+            out = gops.gather_rows_batched(table, idx, mode=mode)
+            ref = np.stack([np.asarray(table)[i][np.asarray(idx)[i]]
+                            for i in range(b)])
+            np.testing.assert_array_equal(np.asarray(out), ref,
+                                          err_msg=mode)
+
+    @pytest.mark.parametrize("b,v,d,n", [
+        (1, 8, 8, 8), (4, 64, 16, 200), (3, 130, 100, 57), (8, 32, 8, 5),
+    ])
+    def test_scatter_add_batched(self, b, v, d, n):
+        idx = jnp.asarray(RNG.integers(0, v, (b, n)), jnp.int32)
+        vals = jnp.asarray(RNG.standard_normal((b, n, d)), jnp.float32)
+        out = sops.scatter_add_rows_batched(idx, vals, v)
+        ref = np.stack([np.asarray(scatter_add_rows_ref(
+            idx[i], vals[i], v)) for i in range(b)])
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4,
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("b,v,d,n", [
+        (1, 8, 8, 8), (4, 64, 16, 200), (3, 130, 100, 57), (8, 32, 8, 5),
+    ])
+    def test_scatter_store_batched(self, b, v, d, n):
+        rows = [_deduped_idx(v, n)[0] for _ in range(b)]
+        safe_idx = jnp.asarray(np.stack(rows))
+        vals = jnp.asarray(RNG.standard_normal((b, n, d)), jnp.float32)
+        dst = jnp.asarray(RNG.standard_normal((b, v, d)), jnp.float32)
+        out = sops.scatter_store_rows_batched(dst, safe_idx, vals)
+        ref = np.stack([np.asarray(scatter_store_rows_ref(
+            dst[i], safe_idx[i], vals[i])) for i in range(b)])
+        np.testing.assert_array_equal(np.asarray(out), ref)
+
+    def test_batched_matches_per_pattern_launches(self):
+        """The one-launch bucket kernel is bit-identical to B separate
+        single-pattern launches (vmap-replacement contract)."""
+        b, v, d, n = 5, 48, 24, 70
+        table = jnp.asarray(RNG.standard_normal((b, v, d)), jnp.float32)
+        idx = jnp.asarray(RNG.integers(0, v, (b, n)), jnp.int32)
+        batched = gops.gather_rows_batched(table, idx)
+        for i in range(b):
+            single = gops.gather_rows(table[i], idx[i])
+            np.testing.assert_array_equal(np.asarray(batched)[i],
+                                          np.asarray(single))
+
+
+class TestGatherMultiRowBlocking:
+    """dma regime multi-row blocking (block_i rows per grid step)."""
+
+    @pytest.mark.parametrize("n", [1, 3, 7, 8, 9, 64, 513])
+    @pytest.mark.parametrize("block_i", [1, 4, 8])
+    def test_ragged_n(self, n, block_i):
+        table = jnp.asarray(RNG.standard_normal((100, 16)), jnp.float32)
+        idx = jnp.asarray(RNG.integers(0, 100, n), jnp.int32)
+        out = gops.gather_rows(table, idx, mode="dma", block_i=block_i)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(table)[np.asarray(idx)])
+
+    def test_block_i_invariance(self):
+        """Results are invariant to the blocking factor."""
+        table = jnp.asarray(RNG.standard_normal((64, 48)), jnp.float32)
+        idx = jnp.asarray(RNG.integers(0, 64, 37), jnp.int32)
+        ref = np.asarray(gops.gather_rows(table, idx, mode="dma",
+                                          block_i=1))
+        for block_i in (2, 4, 8, 16):
+            out = gops.gather_rows(table, idx, mode="dma", block_i=block_i)
+            np.testing.assert_array_equal(np.asarray(out), ref)
 
 
 class TestPagedDecode:

@@ -1,0 +1,126 @@
+"""Hot-path hygiene regression tests (ISSUE 3 tentpole).
+
+The last-write-wins keep mask for store-mode scatter is computed once on
+the host at build/plan time (backends.keep_last_mask) and threaded through
+as an operand; nothing the engine or planner times may contain a ``sort``
+primitive.  These tests pin that down for every backend on every execution
+path (per-pattern, batched bucket, sharded bucket) so the hoist can never
+silently regress.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GSEngine, SuitePlan, gs_shardings, make_pattern
+from repro.core import backends as B
+from repro.core.engine import make_host_buffers
+from repro.core.plan import ShardedExecutor, _assemble_bucket, \
+    _build_executable
+from repro.core.tracing import count_primitives
+
+# delta 2 < span 15: every pattern writes rows more than once
+DUP = make_pattern("UNIFORM:8:2", kind="scatter", delta=2, count=32,
+                   name="dup")
+
+
+def _assert_no_sort(jaxpr, label):
+    counts = count_primitives(jaxpr)
+    assert counts.get("sort", 0) == 0, \
+        f"{label}: sort primitive in hot path ({counts})"
+    assert counts.get("sort_p", 0) == 0, label
+
+
+# ---------------------------------------------------------------------------
+# the host mask itself
+# ---------------------------------------------------------------------------
+
+def test_keep_last_mask_semantics():
+    idx = np.asarray([3, 1, 3, 2, 1, 1], np.int32)
+    keep = B.keep_last_mask(idx)
+    assert keep.tolist() == [False, False, True, True, False, True]
+    # no duplicates: everything keeps
+    assert B.keep_last_mask(np.asarray([5, 1, 9])).all()
+    # empty buffer: empty mask, no crash
+    assert B.keep_last_mask(np.zeros((0,), np.int32)).shape == (0,)
+    # all duplicates: only the last survives
+    assert B.keep_last_mask(np.full(7, 4)).tolist() == [False] * 6 + [True]
+
+
+def test_make_host_buffers_carries_keep():
+    _, abs_idx, vals, keep = make_host_buffers(DUP, 2)
+    assert keep is not None and keep.dtype == bool
+    assert keep.shape == abs_idx.shape
+    np.testing.assert_array_equal(keep, B.keep_last_mask(abs_idx))
+    # gathers carry no mask
+    g = make_pattern("UNIFORM:8:2", kind="gather", delta=2, count=32)
+    assert make_host_buffers(g, 2)[3] is None
+
+
+# ---------------------------------------------------------------------------
+# per-pattern executables (GSEngine.build)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", B.BACKENDS)
+def test_engine_store_executable_has_no_sort(backend):
+    fn, args = GSEngine(DUP, backend=backend).build()
+    _assert_no_sort(jax.make_jaxpr(fn)(*args), f"engine/{backend}")
+
+
+# ---------------------------------------------------------------------------
+# batched bucket executables (plan._build_executable), store mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", B.BACKENDS)
+def test_bucket_store_executable_has_no_sort(backend):
+    plan = SuitePlan.build([DUP])
+    bucket = plan.buckets[0]
+    args, _ = _assemble_bucket(plan, bucket, jnp.float32, 1, 0)
+    fn = _build_executable(backend, "scatter", "store")
+    _assert_no_sort(jax.make_jaxpr(fn)(*args), f"bucket/{backend}")
+
+
+@pytest.mark.parametrize("backend", B.BACKENDS)
+def test_sharded_bucket_store_executable_has_no_sort(backend):
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = SuitePlan.build([DUP])
+    bucket = plan.buckets[0]
+    args, _ = _assemble_bucket(plan, bucket, jnp.float32, 1, 0)
+    sharder = ShardedExecutor(mesh, "data")
+    fn = sharder.build(backend, "scatter", "store")
+    args = sharder.place("scatter", args)
+    _assert_no_sort(jax.make_jaxpr(fn)(*args), f"sharded/{backend}")
+
+
+def test_sharded_engine_store_has_no_sort():
+    mesh = jax.make_mesh((1,), ("data",))
+    fn, args = GSEngine(DUP, backend="xla").sharded(mesh, "data")
+    _assert_no_sort(jax.make_jaxpr(fn)(*args), "engine-sharded/xla")
+
+
+# ---------------------------------------------------------------------------
+# one-launch property: the pallas store bucket executable issues exactly
+# one pallas_call per bucket (was three: masked-add + count + blend)
+# ---------------------------------------------------------------------------
+
+def test_pallas_store_bucket_is_single_launch():
+    plan = SuitePlan.build([DUP])
+    args, _ = _assemble_bucket(plan, plan.buckets[0], jnp.float32, 1, 0)
+    fn = _build_executable("pallas", "scatter", "store")
+    counts = count_primitives(jax.make_jaxpr(fn)(*args))
+    assert counts.get("pallas_call", 0) == 1, counts
+
+
+def test_pallas_store_engine_is_single_launch():
+    fn, args = GSEngine(DUP, backend="pallas").build()
+    counts = count_primitives(jax.make_jaxpr(fn)(*args))
+    assert counts.get("pallas_call", 0) == 1, counts
+
+
+def test_pallas_gather_bucket_is_single_launch():
+    g = make_pattern("UNIFORM:8:2", kind="gather", delta=2, count=32)
+    plan = SuitePlan.build([g])
+    args, _ = _assemble_bucket(plan, plan.buckets[0], jnp.float32, 1, 0)
+    fn = _build_executable("pallas", "gather", "")
+    counts = count_primitives(jax.make_jaxpr(fn)(*args))
+    assert counts.get("pallas_call", 0) == 1, counts

@@ -145,8 +145,9 @@ def test_gs_shardings_specs():
     in_sh, out_sh = gs_shardings(mesh, "data", "gather", batched=True)
     assert [s.spec for s in in_sh] == [P("data"), P("data")]
     assert out_sh.spec == P("data")
+    # scatter executables take (dst, idx, vals, keep) — four operands
     in_sh, out_sh = gs_shardings(mesh, "data", "scatter", batched=True)
-    assert [s.spec for s in in_sh] == [P("data")] * 3
+    assert [s.spec for s in in_sh] == [P("data")] * 4
     assert out_sh.spec == P("data")
     # unbatched (GSEngine.sharded): lane dim shards, gather table and
     # scatter result stay replicated
@@ -154,7 +155,7 @@ def test_gs_shardings_specs():
     assert [s.spec for s in in_sh] == [P(), P("data")]
     assert out_sh.spec == P("data")
     in_sh, out_sh = gs_shardings(mesh, "data", "scatter")
-    assert [s.spec for s in in_sh] == [P(), P("data"), P("data")]
+    assert [s.spec for s in in_sh] == [P(), P("data"), P("data"), P("data")]
     assert out_sh.spec == P()
     with pytest.raises(ValueError):
         gs_shardings(mesh, "data", "neither")

@@ -144,7 +144,7 @@ def test_batched_scatter_matches_unbatched_both_modes():
                                       mode=mode, cache=cache)
                 for out, pos in zip(outs, bucket.members):
                     p = pats[pos]
-                    _, abs_idx, vals = make_host_buffers(p, 1)
+                    _, abs_idx, vals, _ = make_host_buffers(p, 1)
                     dst = jnp.zeros((p.footprint(), 1), jnp.float32)
                     ref = np.asarray(B.scatter(
                         dst, jnp.asarray(abs_idx), jnp.asarray(vals),
@@ -169,7 +169,7 @@ def test_padded_lanes_stay_in_scratch():
     spec = plan.buckets[0].spec
     assert spec.idx_len == 32 and spec.footprint == 16
     outs = execute_bucket(plan, plan.buckets[0], backend="xla", mode="store")
-    _, abs_idx, vals = make_host_buffers(p, 1)
+    _, abs_idx, vals, _ = make_host_buffers(p, 1)
     dst = jnp.zeros((p.footprint(), 1), jnp.float32)
     ref = np.asarray(B.scatter(dst, jnp.asarray(abs_idx),
                                jnp.asarray(vals), mode="store",
