@@ -1,0 +1,55 @@
+"""spatterd cold-vs-warm request latency (the serving layer's point).
+
+Starts an in-process daemon on an ephemeral port with a fresh
+ExecutorCache, POSTs the demo suite through a real HTTP round trip
+twice, and reports:
+
+    serve/cold_request   first request: compiles n_buckets executables
+    serve/warm_request   identical repeat: compiles ZERO (asserted)
+    serve/warm_speedup   cold/warm wall-clock ratio
+
+The warm request is the product regime — "many scenarios per process
+from millions of users" — where request latency is execute-only.  Bit
+identity between the two responses is asserted via the per-pattern
+output digests.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core import ExecutorCache
+from repro.serve import SpatterClient, SpatterDaemon
+
+from .harness import emit
+
+DEFAULT_SUITE = "suites/demo.json"
+
+
+def run(runs: int = 3, suite: str = DEFAULT_SUITE, count_cap: int = 512):
+    with open(suite) as f:
+        pats = json.load(f)
+    # cap pattern counts like bench_suite's --quick: the point here is
+    # compile-vs-execute latency, not lane throughput
+    for p in pats:
+        p["count"] = min(int(p.get("count", 1)), count_cap)
+
+    with SpatterDaemon(port=0, cache=ExecutorCache()) as d:
+        client = SpatterClient(d.url)
+        t0 = time.perf_counter()
+        r1 = client.run_suite(pats, backend="xla", runs=runs)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r2 = client.run_suite(pats, backend="xla", runs=runs)
+        warm = time.perf_counter() - t0
+
+    assert r2["cache"]["misses"] == 0, r2["cache"]
+    d1 = [row["digest"] for row in r1["stats"]["table"]]
+    d2 = [row["digest"] for row in r2["stats"]["table"]]
+    assert d1 == d2 and all(d1), "repeat request not bit-identical"
+
+    emit("serve/cold_request", cold * 1e6,
+         f"compiles={r1['cache']['misses']}")
+    emit("serve/warm_request", warm * 1e6,
+         f"compiles={r2['cache']['misses']}")
+    emit("serve/warm_speedup", 0.0, f"{cold / warm:.1f}x")

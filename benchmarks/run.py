@@ -32,9 +32,9 @@ def main() -> None:
     runs = 3 if args.quick else 5
 
     from . import (bench_app_patterns, bench_llm_gs, bench_prefetch,
-                   bench_roofline, bench_sharded_suite, bench_stream,
-                   bench_suite, bench_suite_scaling, bench_uniform_stride,
-                   bench_vector_vs_scalar)
+                   bench_roofline, bench_serve, bench_sharded_suite,
+                   bench_stream, bench_suite, bench_suite_scaling,
+                   bench_uniform_stride, bench_vector_vs_scalar)
     # only an explicit request (--suite-json or --only suite) writes the
     # canonical BENCH_suite.json; a full CSV sweep must not silently
     # clobber a committed baseline in the cwd
@@ -55,6 +55,7 @@ def main() -> None:
         "suite_scaling": lambda: bench_suite_scaling.run(runs=runs),
         "sharded_suite": lambda: bench_sharded_suite.run(runs=runs),
         "suite": lambda: bench_suite.run(runs=runs, **suite_kw),
+        "serve": lambda: bench_serve.run(runs=runs),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

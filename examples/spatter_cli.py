@@ -15,56 +15,175 @@ core/plan.py).  On a CPU-only host, force fake devices first:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python examples/spatter_cli.py --json suite.json --mesh 8
+
+Scatter write semantics: ``--mode store`` (last-write-wins, the paper's
+default) or ``--mode add`` (accumulation), on both single-pattern and
+suite runs.
+
+spatterd quickstart (the serving layer, DESIGN.md §10) — one process
+keeps the ExecutorCache warm across requests, so only the FIRST request
+for a suite shape compiles anything:
+
+    # terminal 1: the daemon (add XLA_FLAGS=...device_count=8 for --mesh 8)
+    PYTHONPATH=src python examples/spatter_cli.py --serve --port 8089
+    # terminal 2: any number of clients, any number of times
+    PYTHONPATH=src python examples/spatter_cli.py \\
+        --client http://127.0.0.1:8089 --json suites/demo.json
+    # the response prints "cache ... misses 0" from the second request on,
+    # with per-pattern sha256 digests proving bit-identical results
 """
 import argparse
 
-import jax.numpy as jnp
-
-from repro.core import GSEngine, load_suite, make_pattern, run_suite
+# argparse defaults are None sentinels so the --serve/--client branches
+# can tell "flag omitted" from "flag given" exactly (comparing against a
+# real default would silently drop an explicit `--runs 10`); LOCAL_DEFAULTS
+# is applied only on the local execution path, and the help text is the
+# single place each default is narrated.
+LOCAL_DEFAULTS = dict(kernel="Gather", pattern="UNIFORM:8:1", delta=8,
+                      count=1 << 16, backend="xla", runs=10, row_width=1,
+                      mesh=0, mode="store", host="127.0.0.1", port=8089)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("-k", "--kernel", default="Gather",
-                    choices=["Gather", "Scatter", "gather", "scatter"])
-    ap.add_argument("-p", "--pattern", default="UNIFORM:8:1",
+    ap.add_argument("-k", "--kernel", default=None,
+                    choices=["Gather", "Scatter", "gather", "scatter"],
+                    help="access kind (default Gather)")
+    ap.add_argument("-p", "--pattern", default=None,
                     help="UNIFORM:N:S | MS1:N:B:G | LAPLACIAN:D:L:S | "
-                         "BROADCAST:N:R | i0,i1,...")
-    ap.add_argument("-d", "--delta", type=int, default=8)
-    ap.add_argument("-l", "--count", type=int, default=1 << 16)
-    ap.add_argument("-b", "--backend", default="xla",
-                    choices=["xla", "onehot", "scalar", "pallas"])
-    ap.add_argument("-r", "--runs", type=int, default=10,
+                         "BROADCAST:N:R | i0,i1,...  (default UNIFORM:8:1)")
+    ap.add_argument("-d", "--delta", type=int, default=None,
+                    help="stride between accesses (default 8)")
+    ap.add_argument("-l", "--count", type=int, default=None,
+                    help="access count (default 65536)")
+    ap.add_argument("-b", "--backend", default=None,
+                    choices=["xla", "onehot", "scalar", "pallas"],
+                    help="backend (default xla)")
+    ap.add_argument("-r", "--runs", type=int, default=None,
                     help="min-of-K timing (paper §3.5, default 10)")
-    ap.add_argument("--row-width", type=int, default=1,
-                    help="TPU row granularity (1 = paper's scalar element)")
+    ap.add_argument("--row-width", type=int, default=None,
+                    help="TPU row granularity (default 1 = paper's scalar "
+                         "element)")
     ap.add_argument("--json", default=None,
                     help="run a JSON suite file instead (paper §3.3)")
     ap.add_argument("--no-batch", action="store_true",
                     help="suite mode: one compile per pattern instead of "
                          "the bucketed planner (plan.py)")
-    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
                     help="suite mode: shard bucket launches' pattern-batch "
-                         "dim over a 1-D mesh of N devices (0 = off)")
+                         "dim over a 1-D mesh of N devices (default 0 = "
+                         "off)")
+    ap.add_argument("--mode", default=None, choices=["store", "add"],
+                    help="scatter write semantics: last-write-wins store "
+                         "(paper default) or add accumulation")
+    ap.add_argument("--stream-r", action="store_true",
+                    help="suite mode: also time a STREAM-like reference "
+                         "and report paper Eq. 1 Pearson's R")
+    ap.add_argument("--serve", action="store_true",
+                    help="run spatterd: serve JSON suites over HTTP off "
+                         "the warm executor cache (repro.serve)")
+    ap.add_argument("--client", default=None, metavar="URL",
+                    help="POST --json to a running spatterd instead of "
+                         "executing locally")
+    ap.add_argument("--host", default=None,
+                    help="--serve bind address (default 127.0.0.1)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="--serve port (default 8089)")
     args = ap.parse_args()
 
+    def _given(names):
+        # identity checks: 0 is a legitimate explicit value (--port 0
+        # binds ephemeral), and 0 == False would swallow it
+        return [f"--{n.replace('_', '-')}" for n in names
+                if getattr(args, n) is not None
+                and getattr(args, n) is not False]
+
+    if args.serve:
+        if args.client:
+            ap.error("--serve and --client are exclusive modes: run the "
+                     "daemon OR talk to one")
+        # execution options are PER-REQUEST in serve mode (they ride in
+        # each POST body): refuse them rather than dropping them silently
+        dropped = _given(("json", "no_batch", "mesh", "mode", "backend",
+                          "row_width", "runs", "kernel", "pattern",
+                          "delta", "count", "stream_r"))
+        if dropped:
+            ap.error(f"{', '.join(dropped)}: per-request options — pass "
+                     f"them to --client (or in the POST body), not --serve")
+        from repro.serve import daemon
+        host = LOCAL_DEFAULTS["host"] if args.host is None else args.host
+        port = LOCAL_DEFAULTS["port"] if args.port is None else args.port
+        daemon.main(["--host", host, "--port", str(port)])
+        return
+
+    if args.client:
+        if not args.json:
+            ap.error("--client needs --json SUITE to post")
+        if args.no_batch:
+            ap.error("--no-batch is local-only: spatterd always runs the "
+                     "bucketed planner")
+        single = _given(("kernel", "pattern", "delta", "count"))
+        if single:
+            ap.error(f"{', '.join(single)}: single-pattern options don't "
+                     f"apply to --client suite posts (use --json)")
+        local = _given(("host", "port"))
+        if local:
+            ap.error(f"{', '.join(local)}: --serve options — the target "
+                     f"daemon is the --client URL")
+        # delegate to the client CLI (like --serve delegates to
+        # daemon.main): this wrapper forwards the paper CLI's common
+        # options; the FULL wire surface (--metric, --seed, --stream-n,
+        # --no-digest, envelope files) lives on `python -m
+        # repro.serve.client`.  Only flags the user gave are forwarded
+        # (None = omitted), so an envelope suite file's own fields are
+        # never silently overridden by CLI defaults
+        from repro.serve import client as sc
+        argv = ["--url", args.client, "--json", args.json]
+        for flag, name in (("--backend", "backend"), ("--runs", "runs"),
+                           ("--mode", "mode"), ("--mesh", "mesh"),
+                           ("--row-width", "row_width")):
+            v = getattr(args, name)
+            if v is not None:
+                argv += [flag, str(v)]
+        if args.stream_r:
+            argv += ["--stream-r"]
+        sc.main(argv)
+        return
+
+    stray = _given(("host", "port"))
+    if stray:
+        ap.error(f"{', '.join(stray)}: --serve options (add --serve, or "
+                 f"target a running daemon with --client URL)")
+
+    # local execution from here on: resolve the omitted flags to the
+    # paper defaults, then pay the JAX startup the --serve/--client
+    # branches above deliberately avoid
+    opt = {k: v if getattr(args, k) is None else getattr(args, k)
+           for k, v in LOCAL_DEFAULTS.items()}
+    if opt["runs"] < 1:
+        ap.error("--runs must be >= 1 (min-of-K timing needs a run)")
+    if args.stream_r and not args.json:
+        ap.error("--stream-r only applies to --json suite mode")
+    from repro.core import GSEngine, load_suite, make_pattern, run_suite
+
     mesh = None
-    if args.mesh:
+    if opt["mesh"]:
         if not args.json:
             ap.error("--mesh only applies to --json suite mode")
         if args.no_batch:
             ap.error("--mesh requires the bucketed planner (drop --no-batch)")
         import jax
         n_dev = len(jax.devices())
-        if args.mesh > n_dev:
-            ap.error(f"--mesh {args.mesh} > {n_dev} visible devices "
+        if opt["mesh"] > n_dev:
+            ap.error(f"--mesh {opt['mesh']} > {n_dev} visible devices "
                      f"(set XLA_FLAGS=--xla_force_host_platform_device_"
-                     f"count={args.mesh} on CPU)")
-        mesh = jax.make_mesh((args.mesh,), ("data",))
+                     f"count={opt['mesh']} on CPU)")
+        mesh = jax.make_mesh((opt["mesh"],), ("data",))
 
     if args.json:
-        stats = run_suite(load_suite(args.json), backend=args.backend,
-                          runs=args.runs, row_width=args.row_width,
+        stats = run_suite(load_suite(args.json), backend=opt["backend"],
+                          runs=opt["runs"], row_width=opt["row_width"],
+                          mode=opt["mode"], stream_r=args.stream_r,
                           batch=not args.no_batch, mesh=mesh)
         print(f"{'name':24s} {'type':16s} {'cpu GB/s':>9s} {'v5e GB/s':>9s} "
               f"{'tile_eff':>8s}")
@@ -74,24 +193,27 @@ def main():
                   f"{r.tile_efficiency:8.3f}")
         print(f"\nsuite: min {stats.min_gbs:.2f}  max {stats.max_gbs:.2f}  "
               f"harmonic-mean {stats.hmean_gbs:.2f} GB/s   (paper §3.5)")
+        if stats.stream_gbs is not None:
+            print(f"stream: {stats.stream_gbs:.2f} GB/s reference   "
+                  f"Pearson R={stats.stream_r:.3f} (paper Eq. 1)")
         if stats.plan is not None:
             print(f"plan : {len(stats.results)} patterns -> "
                   f"{stats.plan.n_buckets} shape buckets "
-                  f"(pad waste {stats.plan.pad_waste(args.mesh or 1):.1%})")
+                  f"(pad waste {stats.plan.pad_waste(opt['mesh'] or 1):.1%})")
         if mesh is not None:
-            print(f"mesh : pattern-batch dim sharded over {args.mesh} "
+            print(f"mesh : pattern-batch dim sharded over {opt['mesh']} "
                   f"devices (aggregate GB/s above; per-device = /"
-                  f"{args.mesh})")
+                  f"{opt['mesh']})")
         return
 
-    p = make_pattern(args.pattern, kind=args.kernel.lower(),
-                     delta=args.delta, count=args.count)
+    p = make_pattern(opt["pattern"], kind=opt["kernel"].lower(),
+                     delta=opt["delta"], count=opt["count"])
     print(f"pattern  : {list(p.index)}")
     print(f"type     : {p.classify()}   delta={p.delta}  count={p.count}")
     print(f"footprint: {p.footprint()} elems   reuse={p.reuse_factor():.2f}x")
-    r = GSEngine(p, backend=args.backend,
-                 row_width=args.row_width).run(runs=args.runs)
-    print(f"time     : {r.time_s*1e6:.1f} us (min of {args.runs})")
+    r = GSEngine(p, backend=opt["backend"], mode=opt["mode"],
+                 row_width=opt["row_width"]).run(runs=opt["runs"])
+    print(f"time     : {r.time_s*1e6:.1f} us (min of {opt['runs']})")
     print(f"bandwidth: {r.measured_gbs:.2f} GB/s measured(cpu)   "
           f"{r.modeled_gbs:.1f} GB/s modeled(v5e)   "
           f"tile_eff={r.tile_efficiency:.3f}")

@@ -11,8 +11,8 @@ Public API:
 from .pattern import (Pattern, make_pattern, generate_index, load_suite,
                       dump_suite, uniform, ms1, laplacian, broadcast)
 from .backends import gather, scatter, BACKENDS
-from .engine import GSEngine, RunResult, gs_shardings
-from .plan import (SuitePlan, BucketSpec, Bucket, ExecutorCache,
+from .engine import GSEngine, RunResult, gs_shardings, SCATTER_MODES
+from .plan import (SuitePlan, BucketSpec, Bucket, ExecutorCache, CacheStats,
                    ShardedExecutor, run_plan, execute_bucket, default_cache,
                    pad_batch)
 from .suite import run_suite, run_suite_file, stream_reference, \
@@ -24,8 +24,9 @@ __all__ = [
     "Pattern", "make_pattern", "generate_index", "load_suite", "dump_suite",
     "uniform", "ms1", "laplacian", "broadcast",
     "gather", "scatter", "BACKENDS",
-    "GSEngine", "RunResult", "gs_shardings",
-    "SuitePlan", "BucketSpec", "Bucket", "ExecutorCache", "ShardedExecutor",
+    "GSEngine", "RunResult", "gs_shardings", "SCATTER_MODES",
+    "SuitePlan", "BucketSpec", "Bucket", "ExecutorCache", "CacheStats",
+    "ShardedExecutor",
     "run_plan", "execute_bucket", "default_cache", "pad_batch",
     "run_suite", "run_suite_file", "stream_reference", "harmonic_mean",
     "pearson_r", "SuiteStats",

@@ -95,6 +95,10 @@ class RunResult:
     measured_gbs: float           # paper formula over measured CPU time
     modeled_gbs: float            # paper formula over modeled v5e time
     tile_efficiency: float
+    out_digest: str | None = None   # sha256 of the computed output
+                                    # (run_plan(digest=True)); timing-free,
+                                    # so it is the bit-identity witness for
+                                    # repeated serving requests
 
     def row(self) -> dict:
         return {
@@ -109,20 +113,33 @@ class RunResult:
             "measured_cpu_gbs": self.measured_gbs,
             "modeled_v5e_gbs": self.modeled_gbs,
             "tile_eff": self.tile_efficiency,
+            "digest": self.out_digest,
         }
 
 
+SCATTER_MODES = ("store", "add")
+
+
 class GSEngine:
-    """Executable form of one Spatter pattern."""
+    """Executable form of one Spatter pattern.
+
+    ``mode`` selects the scatter write semantics ("store" last-write-wins,
+    the paper's default, or "add" accumulation); gathers ignore it.
+    """
 
     def __init__(self, pattern: Pattern, *, backend: str = "xla",
-                 dtype=jnp.float32, row_width: int = 1, seed: int = 0):
+                 dtype=jnp.float32, row_width: int = 1, seed: int = 0,
+                 mode: str = "store"):
         if backend not in B.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
+        if mode not in SCATTER_MODES:
+            raise ValueError(f"unknown mode {mode!r}; "
+                             f"expected one of {SCATTER_MODES}")
         self.pattern = pattern
         self.backend = backend
         self.dtype = jnp.dtype(dtype)
         self.row_width = row_width
+        self.mode = mode
         self._seed = seed
         self._abs_idx = pattern.absolute_indices().reshape(-1)   # (count*L,)
         self._built = None
@@ -136,15 +153,18 @@ class GSEngine:
         return (self.pattern.footprint(), self.row_width)
 
     def make_buffers(self):
-        f, r = self.footprint_shape()
+        """Device operands: (src, idx, None, None) for gathers,
+        (None, idx, vals, keep) for scatters.  The scatter dst is NOT
+        allocated here — the executable donates it, so ``build()`` hands
+        out a fresh zero dst per call; materializing one here too would
+        be a dead device allocation the size of the footprint."""
         host_src, host_idx, host_vals, host_keep = make_host_buffers(
             self.pattern, self.row_width, seed=self._seed)
         idx = jnp.asarray(host_idx, jnp.int32)
         if self.pattern.kind == "gather":
             return jnp.asarray(host_src, self.dtype), idx, None, None
         vals = jnp.asarray(host_vals, self.dtype)
-        dst = jnp.zeros((f, r), self.dtype)
-        return dst, idx, vals, jnp.asarray(host_keep)
+        return None, idx, vals, jnp.asarray(host_keep)
 
     # -- executables ---------------------------------------------------------
     def build(self):
@@ -152,28 +172,38 @@ class GSEngine:
 
         Scatter args carry the host-precomputed keep mask as a regular
         operand: the jitted hot path contains only the access itself.
+
+        The scatter executable DONATES its dst operand (argnum 0), so a
+        scatter's args are single-use: every ``build()`` call hands out a
+        fresh zero dst, and only the executable plus the non-donated
+        operands are cached.  Caching the dst itself made the second
+        ``run()`` (or ``sharded()`` after ``run()``) die with "buffer has
+        been deleted or donated" — the repeated-execution regime the
+        serving layer depends on.
         """
-        if self._built is not None:
-            return self._built
-        backend = self.backend
-        if self.pattern.kind == "gather":
-            src, idx, _, _ = self.make_buffers()
+        if self._built is None:
+            backend, mode = self.backend, self.mode
+            if self.pattern.kind == "gather":
+                src, idx, _, _ = self.make_buffers()
 
-            @jax.jit
-            def fn(src, idx):
-                return B.gather(src, idx, backend=backend)
+                @jax.jit
+                def fn(src, idx):
+                    return B.gather(src, idx, backend=backend)
 
-            self._built = (fn, (src, idx))
-        else:
-            dst, idx, vals, keep = self.make_buffers()
+                self._built = (fn, (src, idx))
+            else:
+                _, idx, vals, keep = self.make_buffers()
 
-            @partial(jax.jit, donate_argnums=(0,))
-            def fn(dst, idx, vals, keep):
-                return B.scatter(dst, idx, vals, mode="store",
-                                 backend=backend, keep=keep)
+                @partial(jax.jit, donate_argnums=(0,))
+                def fn(dst, idx, vals, keep):
+                    return B.scatter(dst, idx, vals, mode=mode,
+                                     backend=backend, keep=keep)
 
-            self._built = (fn, (dst, idx, vals, keep))
-        return self._built
+                self._built = (fn, (idx, vals, keep))
+        fn, args = self._built
+        if self.pattern.kind == "scatter":
+            args = (jnp.zeros(self.footprint_shape(), self.dtype),) + args
+        return fn, args
 
     def sharded(self, mesh: Mesh, axis: str = "data"):
         """Shard the count dimension over ``axis`` (paper's thread dim)."""
@@ -185,15 +215,15 @@ class GSEngine:
                              f"{n_shards} shards")
         in_shardings, out_shardings = gs_shardings(mesh, axis,
                                                    self.pattern.kind)
-        backend = self.backend
+        backend, mode = self.backend, self.mode
         if self.pattern.kind == "gather":
             def raw(src, idx):
                 return B.gather(src, idx, backend=backend)
         else:
-            # mode must match build()'s "store": "add" here made sharded and
+            # mode must match build()'s: a fixed "add" here made sharded and
             # unsharded runs disagree whenever a pattern writes an index twice
             def raw(dst, idx, vals, keep):
-                return B.scatter(dst, idx, vals, mode="store",
+                return B.scatter(dst, idx, vals, mode=mode,
                                  backend=backend, keep=keep)
         sharded_fn = jax.jit(raw, in_shardings=in_shardings,
                              out_shardings=out_shardings)

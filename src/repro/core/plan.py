@@ -88,7 +88,9 @@ reports the bandwidth the launch achieved.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
+import threading
 import time
 from collections import OrderedDict
 from typing import Callable, Sequence
@@ -100,7 +102,8 @@ from jax.sharding import Mesh
 
 from . import backends as B
 from . import bandwidth as bw
-from .engine import RunResult, gs_shardings, make_host_buffers
+from .engine import (SCATTER_MODES, RunResult, gs_shardings,
+                     make_host_buffers)
 from .pattern import Pattern
 
 
@@ -112,18 +115,24 @@ def next_pow2(n: int) -> int:
 
 
 def pad_batch(nb: int, n_shards: int = 1) -> int:
-    """Padded pattern-batch dim: next pow2 >= nb, divisible by n_shards.
+    """Padded pattern-batch dim: the smallest multiple of ``n_shards`` that
+    is >= ``next_pow2(nb)`` (with ``n_shards=1`` that is exactly the next
+    pow2).
 
-    Pow-2 padding makes bucket executables batch-polymorphic in practice
+    Pow-2 bracketing makes bucket executables batch-polymorphic in practice
     (member-count drift between suite runs lands on the same padded batch);
     the shard-count multiple keeps a sharded launch's batch split even.
+    The shard round-up is applied ON TOP of the pow-2 bracket — never
+    instead of it — so every member count in a bracket maps to ONE padded
+    batch per shard count.  (The old behavior rounded ``ceil(nb/n_shards)``
+    to a pow2 and could land *below* the bracket: nb=5, n_shards=3 gave 6
+    while nb=7 gave 12, fragmenting the ``ExecKey.batch`` values that
+    ``ExecutorCache.best_batch`` assumes are bracket-stable.)
     """
     if n_shards < 1:
         raise ValueError(f"need n_shards >= 1, got {n_shards}")
     b = next_pow2(nb)
-    if b % n_shards:
-        b = n_shards * next_pow2(max(1, math.ceil(nb / n_shards)))
-    return b
+    return math.ceil(b / n_shards) * n_shards
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +209,31 @@ class ExecKey:
     placement: str      # ShardedExecutor.placement, "" = single-device
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    """Point-in-time ``ExecutorCache`` counters (one consistent snapshot).
+
+    ``misses`` is the exact compile count (see ExecutorCache).  The
+    serving layer brackets each request with two snapshots and reports
+    ``after.delta(before)`` — the request's own hits/misses — so a warm
+    repeat request can *prove* it compiled nothing.
+    """
+    hits: int
+    misses: int
+    size: int
+
+    def delta(self, before: "CacheStats") -> "CacheStats":
+        """Elementwise difference — every field of the result is a delta
+        (``size`` is net entry growth, which eviction can make negative);
+        report absolute occupancy from the *after* snapshot instead."""
+        return CacheStats(hits=self.hits - before.hits,
+                          misses=self.misses - before.misses,
+                          size=self.size - before.size)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 class ExecutorCache:
     """LRU of compiled bucket executables; ``misses`` counts compiles.
 
@@ -207,29 +241,40 @@ class ExecutorCache:
     mesh placement), so one entry is only ever invoked with one trace:
     ``misses`` equals the number of XLA compiles performed through the
     cache, exactly.
+
+    Thread safety: all structure mutation (the LRU order, eviction, the
+    hit/miss counters) happens under one internal lock, because the
+    serving daemon's request handlers share the process-wide cache from
+    multiple threads.  ``get`` holds the lock across ``builder()`` too —
+    builders only wrap ``jax.jit`` (tracing/compilation is deferred to the
+    first call), so the critical section stays cheap while guaranteeing a
+    key is built at most once and ``misses`` never double-counts a race.
     """
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
         self._entries: OrderedDict[ExecKey, Callable] = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def get(self, key: ExecKey, builder: Callable[[], Callable]) -> Callable:
-        fn = self._entries.get(key)
-        if fn is not None:
-            self._entries.move_to_end(key)
-            self.hits += 1
+        with self._lock:
+            fn = self._entries.get(key)
+            if fn is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return fn
+            self.misses += 1
+            fn = builder()
+            self._entries[key] = fn
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
             return fn
-        self.misses += 1
-        fn = builder()
-        self._entries[key] = fn
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-        return fn
 
     def best_batch(self, key: ExecKey) -> ExecKey | None:
         """Smallest cached key differing from ``key`` only by a >= batch.
@@ -238,18 +283,26 @@ class ExecutorCache:
         larger pattern-batch serves a smaller bucket by padding with more
         scratch patterns, so bucket-membership shrink never compiles.
         """
-        best = None
-        for k in self._entries:
-            if (k.batch >= key.batch
-                    and dataclasses.replace(k, batch=key.batch) == key
-                    and (best is None or k.batch < best.batch)):
-                best = k
-        return best
+        with self._lock:
+            best = None
+            for k in self._entries:
+                if (k.batch >= key.batch
+                        and dataclasses.replace(k, batch=key.batch) == key
+                        and (best is None or k.batch < best.batch)):
+                    best = k
+            return best
+
+    def stats(self) -> CacheStats:
+        """Consistent (hits, misses, size) snapshot."""
+        with self._lock:
+            return CacheStats(hits=self.hits, misses=self.misses,
+                              size=len(self._entries))
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
 
 
 _DEFAULT_CACHE = ExecutorCache()
@@ -432,6 +485,9 @@ def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
     (footprint, R) result table (scratch row trimmed).  With ``mesh`` the
     launch's pattern-batch dim is split over ``mesh_axis``.
     """
+    if mode not in SCATTER_MODES:
+        raise ValueError(f"unknown mode {mode!r}; "
+                         f"expected one of {SCATTER_MODES}")
     cache = cache if cache is not None else default_cache()
     sharder = ShardedExecutor(mesh, mesh_axis) if mesh is not None else None
     spec = bucket.spec
@@ -456,7 +512,8 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
              seed: int = 0,
              cache: ExecutorCache | None = None,
              mesh: Mesh | None = None,
-             mesh_axis: str = "data") -> list[RunResult]:
+             mesh_axis: str = "data",
+             digest: bool = False) -> list[RunResult]:
     """Execute a SuitePlan with paper-style timing (min over ``runs``).
 
     Returns one RunResult per pattern, in the suite's original order.
@@ -467,9 +524,19 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
     ``mesh_axis`` (ShardedExecutor) — the multi-device suite regime.
     Reported bandwidth stays the paper's useful-bytes formula over the
     *aggregate* launch: divide by the shard count for per-device numbers.
+
+    With ``digest``, each RunResult carries the sha256 of its trimmed
+    computed output (``out_digest``).  The output is a pure function of
+    (pattern, seed, mode, dtype) — batch padding and best_batch reuse
+    never reach real rows — so equal digests across runs/processes mean
+    bit-identical results; the serving layer uses this as its warm-repeat
+    identity proof.
     """
     if backend not in B.BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
+    if mode not in SCATTER_MODES:
+        raise ValueError(f"unknown mode {mode!r}; "
+                         f"expected one of {SCATTER_MODES}")
     dtype = jnp.dtype(dtype or jnp.float32)
     cache = cache if cache is not None else default_cache()
     sharder = ShardedExecutor(mesh, mesh_axis) if mesh is not None else None
@@ -507,6 +574,7 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
                 jax.block_until_ready(out)
                 times.append(time.perf_counter() - t0)
         t_bucket = min(times)                                # paper §3.5
+        out_np = np.asarray(out) if digest else None
 
         # attribution denominator counts scratch batch rows' lanes too, so
         # a member's reported bandwidth does not depend on how much batch
@@ -518,11 +586,18 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
             p = plan.patterns[pos]
             t_i = t_bucket * real_lanes[b] / total_lanes
             tm = bw.tpu_tile_model(p, elem_bytes)
+            dg = None
+            if digest:
+                trim = (out_np[b, :real_lanes[b]] if spec.kind == "gather"
+                        else out_np[b, :p.footprint()])
+                dg = hashlib.sha256(
+                    np.ascontiguousarray(trim).tobytes()).hexdigest()
             results[pos] = RunResult(
                 pattern=p, backend=backend, elem_bytes=elem_bytes,
                 row_width=row_width, runs=runs, time_s=t_i,
                 measured_gbs=bw.paper_bandwidth(p, t_i, elem_bytes) / 1e9,
                 modeled_gbs=tm.modeled_gbs,
                 tile_efficiency=tm.tile_efficiency,
+                out_digest=dg,
             )
     return results  # type: ignore[return-value]

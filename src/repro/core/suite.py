@@ -1,8 +1,11 @@
 """Multi-pattern suite runner — the paper's JSON-input mode (§3.3, §3.5).
 
 Runs many patterns, then reports the aggregate stats the paper reports:
-per-pattern bandwidths, suite min/max, harmonic mean, and Pearson's R
-against a STREAM-like reference (paper Eq. 1 / Table 4).
+per-pattern bandwidths, suite min/max, harmonic mean, and — opt-in via
+``stream_r=True`` — Pearson's R against a STREAM-like reference (paper
+Eq. 1 / Table 4): the suite runs alongside ``stream_reference()`` and
+``SuiteStats.stream_r`` correlates each pattern's measured-over-STREAM
+fraction with its modeled-over-STREAM fraction.
 
 Execution goes through the suite planner by default (``batch=True``):
 patterns are grouped into shape buckets and each bucket runs as one
@@ -13,6 +16,8 @@ compile -> execute design and the padding/scratch-row semantics.
 ``batch=False`` restores the original one-GSEngine-per-pattern path.
 ``mesh=``/``mesh_axis=`` split every bucket launch's pattern-batch dim
 over a mesh axis (plan.ShardedExecutor) for multi-device suite runs.
+``mode=`` selects scatter write semantics ("store" last-write-wins —
+the paper's default — or "add" accumulation) on every path.
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import math
 
 import numpy as np
 
-from .engine import GSEngine, RunResult
+from .engine import SCATTER_MODES, GSEngine, RunResult
 from .pattern import Pattern, load_suite, make_pattern
 from .plan import ExecutorCache, SuitePlan, run_plan
 
@@ -50,6 +55,10 @@ class SuiteStats:
     max_gbs: float
     hmean_gbs: float
     plan: SuitePlan | None = None        # set when the batched path ran
+    stream_gbs: float | None = None      # measured STREAM-like GB/s
+                                         # (run_suite(stream_r=True))
+    stream_r: float | None = None        # paper Eq. 1 Pearson's R of the
+                                         # STREAM-normalized bandwidths
 
     def table(self, metric: str = "measured_cpu_gbs") -> list[dict]:
         """Per-pattern rows with ``gbs`` set to the requested metric.
@@ -65,6 +74,30 @@ class SuiteStats:
             row["gbs"] = row[col]
             rows.append(row)
         return rows
+
+    def to_json(self, metric: str = "measured") -> dict:
+        """JSON-safe dict: aggregates + the per-pattern ``table(metric)``.
+
+        Non-finite aggregates (e.g. a NaN ``stream_r`` on a degenerate
+        suite) serialize as null so the document stays strict JSON — the
+        serving daemon's response embeds this verbatim.
+        """
+        def _f(x):
+            return x if x is not None and math.isfinite(x) else None
+        table = [{k: (_f(v) if isinstance(v, float) else v)
+                  for k, v in row.items()}
+                 for row in self.table(metric)]
+        return {
+            "metric": _metric_column(metric),
+            "n_patterns": len(self.results),
+            "min_gbs": _f(self.min_gbs),
+            "max_gbs": _f(self.max_gbs),
+            "hmean_gbs": _f(self.hmean_gbs),
+            "stream_gbs": _f(self.stream_gbs),
+            "stream_r": _f(self.stream_r),
+            "n_buckets": self.plan.n_buckets if self.plan else None,
+            "table": table,
+        }
 
 
 def harmonic_mean(xs) -> float:
@@ -84,37 +117,77 @@ def pearson_r(xs, ys) -> float:
 
 def run_suite(patterns: list[Pattern], *, backend: str = "xla",
               dtype=None, row_width: int = 1, runs: int = 10,
-              metric: str = "measured", batch: bool = True,
+              metric: str = "measured", mode: str = "store",
+              batch: bool = True, seed: int = 0,
               cache: ExecutorCache | None = None,
-              mesh=None, mesh_axis: str = "data") -> SuiteStats:
+              mesh=None, mesh_axis: str = "data",
+              stream_r: bool = False, stream_n: int = 2 ** 22,
+              stream_ref: RunResult | None = None,
+              digest: bool = False) -> SuiteStats:
+    """Run a pattern suite and aggregate the paper's §3.5 statistics.
+
+    ``mode`` applies to every scatter in the suite on both execution
+    paths (the planner and ``batch=False``'s per-pattern engines).
+    ``stream_r`` additionally times a STREAM-like reference
+    (``stream_reference(n=stream_n)``) and reports paper Eq. 1: Pearson's
+    R between each pattern's measured/STREAM fraction and its
+    modeled/STREAM fraction (``SuiteStats.stream_r``; NaN for suites with
+    fewer than two patterns or zero variance).  Passing a precomputed
+    ``stream_ref`` RunResult skips the reference run — the serving daemon
+    memoizes one per (backend, stream_n, runs) so warm requests stay
+    execute-only.  ``digest`` attaches a
+    sha256 of each pattern's computed output (planner path only) — the
+    serving layer's bit-identity proof for repeated requests.
+    """
     import jax.numpy as jnp
     if not patterns:
         raise ValueError("run_suite needs at least one pattern")
     col = _metric_column(metric)            # reject typos up front
+    if mode not in SCATTER_MODES:           # mirror the metric validation
+        raise ValueError(f"unknown mode {mode!r}; "
+                         f"expected one of {SCATTER_MODES}")
     if mesh is not None and not batch:
         raise ValueError("mesh execution requires the batched planner "
+                         "(batch=True)")
+    if digest and not batch:
+        raise ValueError("digest requires the batched planner "
                          "(batch=True)")
     dtype = dtype or jnp.float32
     plan = None
     if batch:
         plan = SuitePlan.build(patterns)
         results = run_plan(plan, backend=backend, dtype=dtype,
-                           row_width=row_width, runs=runs, cache=cache,
-                           mesh=mesh, mesh_axis=mesh_axis)
+                           row_width=row_width, runs=runs, mode=mode,
+                           seed=seed, cache=cache,
+                           mesh=mesh, mesh_axis=mesh_axis, digest=digest)
     else:
         results = []
         for p in patterns:
             eng = GSEngine(p, backend=backend, dtype=dtype,
-                           row_width=row_width)
+                           row_width=row_width, mode=mode, seed=seed)
             results.append(eng.run(runs=runs))
     key = (lambda r: r.measured_gbs) if col == "measured_cpu_gbs" \
         else (lambda r: r.modeled_gbs)
     vals = [key(r) for r in results]
+    stream_gbs = r_val = None
+    if stream_r:
+        ref = stream_ref if stream_ref is not None else \
+            stream_reference(n=stream_n, runs=runs, backend=backend)
+        # paper Eq. 1: R over the STREAM-normalized bandwidth fractions —
+        # does the model rank the suite the way the measured platform
+        # does?  Pearson's R is scale-invariant, so dividing each series
+        # by its platform's STREAM bandwidth cannot change it; compute it
+        # on the raw columns and keep the reference run for the
+        # paper-style stream_gbs anchor the fractions are read against.
+        stream_gbs = ref.measured_gbs
+        r_val = pearson_r([r.measured_gbs for r in results],
+                          [r.modeled_gbs for r in results])
     return SuiteStats(
         results=results,
         min_gbs=min(vals), max_gbs=max(vals),
         hmean_gbs=harmonic_mean(vals),
         plan=plan,
+        stream_gbs=stream_gbs, stream_r=r_val,
     )
 
 

@@ -1,0 +1,31 @@
+"""repro.serve — spatterd, the long-lived suite-serving layer.
+
+The "many scenarios per process" product of the planner PRs: a daemon
+that accepts streamed JSON suites over HTTP, runs them through the
+process-wide warm ``ExecutorCache`` (single-device or mesh-sharded), and
+returns SuiteStats as JSON with exact per-request cache telemetry.
+See daemon.py and DESIGN.md §10.
+
+Exports resolve lazily (PEP 562) so ``python -m repro.serve.daemon`` /
+``python -m repro.serve.client`` — the documented entry points — don't
+re-import their own module through the package and trip runpy's
+double-import RuntimeWarning.
+"""
+import importlib
+
+_EXPORTS = {
+    "SpatterDaemon": ".daemon",
+    "SpatterClient": ".client",
+    "ServerError": ".client",
+    "SuiteRequest": ".schema",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    return getattr(importlib.import_module(mod, __name__), name)

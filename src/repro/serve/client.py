@@ -1,0 +1,165 @@
+"""Client for spatterd (stdlib urllib; see daemon.py / DESIGN.md §10).
+
+Library::
+
+    from repro.serve import SpatterClient
+    c = SpatterClient("http://127.0.0.1:8089")
+    r1 = c.run_suite(json.load(open("suites/demo.json")), runs=3)
+    r2 = c.run_suite(json.load(open("suites/demo.json")), runs=3)
+    assert r2["cache"]["misses"] == 0            # warm: zero compiles
+    assert [t["digest"] for t in r1["stats"]["table"]] == \
+           [t["digest"] for t in r2["stats"]["table"]]   # bit-identical
+
+CLI::
+
+    PYTHONPATH=src python -m repro.serve.client \
+        --url http://127.0.0.1:8089 --json suites/demo.json [--mesh 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import urllib.error
+import urllib.request
+
+from .schema import SuiteRequest
+
+
+class ServerError(RuntimeError):
+    """A failed spatterd exchange; ``.status`` is the HTTP code (0 when
+    the daemon could not be reached at all)."""
+
+    def __init__(self, status: int, message: str):
+        prefix = f"spatterd returned {status}" if status \
+            else "cannot reach spatterd"
+        super().__init__(f"{prefix}: {message}")
+        self.status = status
+
+
+class SpatterClient:
+    def __init__(self, url: str, timeout: float = 600.0):
+        self.url = url.rstrip("/")
+        self.timeout = timeout
+
+    def _request(self, path: str, body: dict | None = None) -> dict:
+        req = urllib.request.Request(
+            self.url + path,
+            data=None if body is None else json.dumps(body).encode(),
+            headers={"Content-Type": "application/json"},
+            method="GET" if body is None else "POST")
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                return json.loads(resp.read())
+        except urllib.error.HTTPError as e:
+            try:
+                msg = json.loads(e.read()).get("error", str(e))
+            except Exception:
+                msg = str(e)
+            raise ServerError(e.code, msg) from None
+        except urllib.error.URLError as e:      # refused / DNS / timeout
+            raise ServerError(0, f"{self.url}: {e.reason}") from None
+
+    def health(self) -> dict:
+        return self._request("/healthz")
+
+    def cache(self) -> dict:
+        return self._request("/cache")
+
+    def run_suite(self, patterns, **options) -> dict:
+        """POST a suite; ``patterns`` is a list of suite-JSON dicts, a
+        full ``{"patterns": [...], ...}`` envelope, or a JSON string of
+        either, and ``options`` are the SuiteRequest fields (backend=,
+        runs=, mode=, metric=, mesh=, stream_r=, ...) — keyword options
+        override same-named envelope fields.
+
+        The request is validated client-side first, so a typo'd option
+        fails fast with the same message the server would give.
+        """
+        if isinstance(patterns, str):
+            patterns = json.loads(patterns)
+        if isinstance(patterns, dict):          # envelope document
+            doc = {**patterns, **options}
+        else:
+            doc = {"patterns": list(patterns), **options}
+        return self._request("/run", SuiteRequest.from_json(doc).to_json())
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="POST a JSON suite to a running spatterd")
+    ap.add_argument("--url", default="http://127.0.0.1:8089")
+    ap.add_argument("--json", required=True, help="suite file (paper §3.3)")
+    # option defaults are None = "not given": an envelope suite file's own
+    # fields must not be silently overridden by CLI defaults
+    ap.add_argument("-b", "--backend", default=None)
+    ap.add_argument("-r", "--runs", type=int, default=None)
+    ap.add_argument("--mode", default=None, help="scatter mode store|add")
+    ap.add_argument("--mesh", type=int, default=None)
+    ap.add_argument("--row-width", type=int, default=None)
+    ap.add_argument("--metric", default=None,
+                    help="gbs column: measured|modeled")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="host-buffer RNG seed")
+    ap.add_argument("--stream-r", action="store_true",
+                    help="include paper Eq. 1 Pearson R vs STREAM")
+    ap.add_argument("--stream-n", type=int, default=None,
+                    help="STREAM reference size (elements)")
+    ap.add_argument("--no-digest", action="store_true",
+                    help="skip the per-pattern output digests")
+    args = ap.parse_args(argv)
+    opts = {name: v for name, v in
+            [("backend", args.backend), ("runs", args.runs),
+             ("mode", args.mode), ("mesh", args.mesh),
+             ("row_width", args.row_width), ("metric", args.metric),
+             ("seed", args.seed), ("stream_n", args.stream_n)]
+            if v is not None}
+    if args.stream_r:
+        opts["stream_r"] = True
+    if args.no_digest:
+        opts["digest"] = False
+    c = SpatterClient(args.url)
+    # ValueError covers client-side schema rejections AND a malformed
+    # --json file (JSONDecodeError): both get the same clean one-liner
+    # a server-rejected request would
+    try:
+        with open(args.json) as f:
+            pats = json.load(f)
+        resp = c.run_suite(pats, **opts)
+    except (ServerError, ValueError) as e:
+        raise SystemExit(f"error: {e}")
+    print_response(resp)
+
+
+def print_response(resp: dict) -> None:
+    stats, cache = resp["stats"], resp["cache"]
+
+    def _n(x):
+        # to_json serializes non-finite floats as null (strict JSON);
+        # render them as nan rather than crashing the formatter
+        return float("nan") if x is None else x
+
+    print(f"{'name':24s} {'type':16s} {'cpu GB/s':>9s} {'v5e GB/s':>9s} "
+          f"{'digest':>12s}")
+    for row in stats["table"]:
+        print(f"{row['name']:24s} {row['type']:16s} "
+              f"{_n(row['measured_cpu_gbs']):9.2f} "
+              f"{_n(row['modeled_v5e_gbs']):9.1f} "
+              f"{(row['digest'] or '')[:12]:>12s}")
+    extra = ""
+    if stats.get("stream_gbs") is not None:
+        # gate on stream_gbs: R itself may be null (NaN on a degenerate
+        # suite) while the reference run still happened and is worth
+        # showing — same gate as the local CLI path
+        extra = (f"   stream {_n(stats['stream_gbs']):.2f} GB/s "
+                 f"R={_n(stats['stream_r']):.3f}")
+    print(f"\nsuite: min {_n(stats['min_gbs']):.2f}  "
+          f"max {_n(stats['max_gbs']):.2f}  "
+          f"harmonic-mean {_n(stats['hmean_gbs']):.2f} GB/s{extra}")
+    print(f"serve: {resp['plan']['n_buckets']} buckets  "
+          f"pad waste {resp['plan']['pad_waste']:.1%}  "
+          f"cache hits {cache['hits']} misses {cache['misses']} "
+          f"(exact compiles this request)  {resp['elapsed_s']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

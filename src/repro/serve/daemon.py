@@ -1,0 +1,322 @@
+"""spatterd — a long-lived suite-serving daemon on the warm ExecutorCache.
+
+The paper's value proposition is sweeping *many* configurations cheaply
+(§3.3 JSON suites, §3.5 min-over-K timing); the planner PRs made a repeat
+suite run compile nothing, but only inside one-shot scripts.  spatterd is
+the process that makes repeated execution the product (DESIGN.md §10):
+it holds the process-wide ``ExecutorCache`` open across HTTP requests, so
+the FIRST identical suite request compiles ``n_buckets`` executables and
+every later one — from any client — compiles zero, and each response
+carries the telemetry that proves it (per-request cache hits/misses,
+where ``misses`` is an exact compile count, plus per-pattern output
+digests for bit-identity).
+
+Endpoints (all JSON; stdlib ``http.server``, no dependencies):
+
+    POST /run      run a suite (schema.SuiteRequest; bare ``suites/*.json``
+                   lists work as-is).  ``mesh: N`` in the request shards
+                   every bucket launch over N devices (plan.ShardedExecutor).
+    GET  /healthz  liveness + device/backend inventory + lifetime stats
+    GET  /cache    lifetime ExecutorCache counters
+
+Quickstart::
+
+    PYTHONPATH=src python -m repro.serve.daemon --port 8089 &
+    PYTHONPATH=src python -m repro.serve.client --url http://127.0.0.1:8089 \
+        --json suites/demo.json
+
+Concurrency model: request *handling* is multi-threaded
+(``ThreadingHTTPServer`` — parsing, validation, and serialization overlap
+freely), but suite *execution* is serialized by one run lock.  Two
+reasons: concurrent XLA executions would contend for the same device and
+corrupt each other's min-over-K timings (§3.5), and bracketing each run
+with ``ExecutorCache.stats()`` snapshots under the lock is what makes the
+per-request hits/misses delta exact rather than approximate.  The cache
+itself is additionally lock-protected (plan.ExecutorCache) so /cache and
+/healthz can read counters mid-run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.core import backends as B
+from repro.core.plan import ExecutorCache, default_cache
+from repro.core.suite import run_suite, stream_reference
+
+from .schema import SuiteRequest
+
+
+def _bounded_put(memo: dict, key, value, bound: int = 32) -> None:
+    """FIFO-bounded insert: client-controlled memo keys must never grow a
+    long-lived daemon's memory without limit."""
+    while len(memo) >= bound:
+        memo.pop(next(iter(memo)))
+    memo[key] = value
+
+
+class SpatterDaemon:
+    """The serving process around one (usually process-wide) ExecutorCache.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port``) —
+    tests and benchmarks use that to avoid collisions.  ``start()`` serves
+    from a background thread; ``serve_forever()`` blocks (the CLI path).
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 8089, *,
+                 cache: ExecutorCache | None = None, quiet: bool = True):
+        self.cache = cache if cache is not None else default_cache()
+        self.quiet = quiet
+        self.started_at = time.time()
+        self.n_requests = 0
+        self._run_lock = threading.Lock()
+        self._memo_lock = threading.Lock()     # guards _meshes mutation
+        self._meshes: dict[tuple[int, str], object] = {}
+        self._stream_refs: dict[tuple, object] = {}   # memoized STREAM runs
+        self._thread: threading.Thread | None = None
+        self._httpd = ThreadingHTTPServer((host, port), _make_handler(self))
+        # ThreadingHTTPServer defaults block process exit on hung handlers
+        self._httpd.daemon_threads = True
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def host(self) -> str:
+        return self._httpd.server_address[0]
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "SpatterDaemon":
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="spatterd", daemon=True)
+        self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self._httpd.serve_forever()
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def __enter__(self) -> "SpatterDaemon":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- request execution ---------------------------------------------------
+    def _mesh(self, n: int, axis: str):
+        """Mesh per (size, axis), memoized: the placement string — not the
+        Mesh object's identity — keys the ExecutorCache, but reusing the
+        object keeps sharding construction out of repeat requests.
+        Called OUTSIDE the run lock so an oversized mesh fails fast even
+        while a long run is in flight; _memo_lock covers the check +
+        bounded FIFO eviction + insert (concurrent handler threads)."""
+        import jax
+        key = (n, axis)
+        with self._memo_lock:
+            if key not in self._meshes:
+                n_dev = len(jax.devices())
+                if n > n_dev:
+                    raise ValueError(
+                        f"mesh={n} > {n_dev} visible devices (start the "
+                        f"daemon under XLA_FLAGS=--xla_force_host_platform_"
+                        f"device_count={n} to fake devices on CPU)")
+                _bounded_put(self._meshes, key,
+                             jax.make_mesh((n,), (axis,)))
+            return self._meshes[key]
+
+    def run_request(self, req: SuiteRequest) -> dict:
+        """Execute one validated request; returns the response document.
+
+        Raises ValueError for request-shaped problems (bad pattern entry,
+        mesh larger than the device count) — the handler maps those to
+        400s — and lets genuine execution failures propagate to a 500.
+        """
+        # request-shaped failures (bad patterns, oversized mesh) resolve
+        # BEFORE the run lock: a 400 never queues behind an in-flight run
+        patterns = req.build_patterns()
+        mesh = self._mesh(req.mesh, req.mesh_axis) if req.mesh else None
+        with self._run_lock:
+            # timed inside the lock: elapsed_s is THIS request's
+            # execution, not time spent queued behind other requests
+            t0 = time.perf_counter()
+            stream_ref = None
+            if req.stream_r:
+                # the STREAM reference is its own jitted engine, outside
+                # the ExecutorCache; memoize its RunResult so only the
+                # FIRST stream_r request per (backend, n, runs) compiles
+                # and times it — warm requests stay execute-only, keeping
+                # the misses==0 warm-repeat proof honest
+                skey = (req.backend, req.stream_n, req.runs)
+                stream_ref = self._stream_refs.get(skey)
+                if stream_ref is None:
+                    stream_ref = stream_reference(
+                        n=req.stream_n, runs=req.runs, backend=req.backend)
+                    _bounded_put(self._stream_refs, skey, stream_ref)
+            before = self.cache.stats()
+            stats = run_suite(
+                patterns, backend=req.backend, runs=req.runs,
+                row_width=req.row_width, metric=req.metric, mode=req.mode,
+                seed=req.seed, cache=self.cache, mesh=mesh,
+                mesh_axis=req.mesh_axis, stream_r=req.stream_r,
+                stream_n=req.stream_n, stream_ref=stream_ref,
+                digest=req.digest)
+            after = self.cache.stats()
+            self.n_requests += 1
+        delta = after.delta(before)
+        return {
+            "ok": True,
+            "stats": stats.to_json(req.metric),
+            "cache": {
+                # this request's traffic; misses == exact compile count
+                "hits": delta.hits,
+                "misses": delta.misses,
+                "size": after.size,
+                "lifetime": after.to_json(),
+            },
+            "plan": {
+                "n_buckets": stats.plan.n_buckets,
+                # the plan's static padding waste at exact-fit batches — a
+                # lower bound when best_batch serves a larger warm
+                # executable (member bandwidth attribution already uses
+                # the actual launched batch, plan.run_plan)
+                "pad_waste": stats.plan.pad_waste(req.mesh or 1),
+            },
+            "elapsed_s": time.perf_counter() - t0,
+        }
+
+    def health(self) -> dict:
+        import jax
+        return {
+            "ok": True,
+            "service": "spatterd",
+            "n_devices": len(jax.devices()),
+            "backends": sorted(B.BACKENDS),
+            "n_requests": self.n_requests,
+            "uptime_s": time.time() - self.started_at,
+            "cache": self.cache.stats().to_json(),
+        }
+
+    def _log(self, fmt: str, *args) -> None:
+        if not self.quiet:
+            print(f"spatterd: {fmt % args}", flush=True)
+
+
+MAX_BODY_BYTES = 64 << 20     # one request can't OOM a long-lived daemon
+
+
+def _make_handler(daemon: SpatterDaemon):
+    class Handler(BaseHTTPRequestHandler):
+        server_version = "spatterd/1.0"
+        protocol_version = "HTTP/1.1"
+        # socket timeout: a stalled upload or an idle keep-alive
+        # connection must not pin a handler thread forever (the
+        # stdlib default is no timeout at all)
+        timeout = 120
+
+        def log_message(self, fmt, *args):          # route through the daemon
+            daemon._log(fmt, *args)
+
+        def _reply(self, code: int, doc: dict) -> None:
+            body = json.dumps(doc).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            if self.path in ("/healthz", "/health"):
+                self._reply(200, daemon.health())
+            elif self.path == "/cache":
+                self._reply(200, {"ok": True,
+                                  "cache": daemon.cache.stats().to_json()})
+            else:
+                self._reply(404, {"ok": False,
+                                  "error": f"no such path {self.path!r}"})
+
+        def do_POST(self):
+            # a body we cannot fully drain would desync HTTP/1.1
+            # keep-alive (leftover bytes parse as the NEXT request's
+            # start line): bad framing gets an error AND a closed
+            # connection
+            te = (self.headers.get("Transfer-Encoding") or "").lower()
+            if "chunked" in te:
+                self.close_connection = True
+                self._reply(411, {"ok": False,
+                                  "error": "chunked bodies unsupported; "
+                                           "send Content-Length"})
+                return
+            try:
+                length = int(self.headers.get("Content-Length", 0))
+                if length < 0:
+                    raise ValueError(length)
+            except (TypeError, ValueError):
+                self.close_connection = True
+                self._reply(400, {"ok": False,
+                                  "error": "bad Content-Length header"})
+                return
+            if length > MAX_BODY_BYTES:
+                self.close_connection = True
+                self._reply(413, {"ok": False,
+                                  "error": f"body {length} bytes > "
+                                           f"{MAX_BODY_BYTES} limit"})
+                return
+            # drain the body unconditionally: on HTTP/1.1 keep-alive an
+            # unread body would be parsed as the NEXT request's start line
+            body = self.rfile.read(length)
+            if self.path != "/run":
+                self._reply(404, {"ok": False,
+                                  "error": f"no such path {self.path!r}; "
+                                           f"POST /run"})
+                return
+            try:
+                doc = json.loads(body)
+                req = SuiteRequest.from_json(doc)
+            except (ValueError, KeyError, TypeError) as e:
+                self._reply(400, {"ok": False, "error": f"bad request: {e}"})
+                return
+            try:
+                self._reply(200, daemon.run_request(req))
+            except ValueError as e:
+                self._reply(400, {"ok": False, "error": str(e)})
+            except Exception as e:   # execution failure: report, stay alive
+                self._reply(500, {"ok": False,
+                                  "error": f"{type(e).__name__}: {e}"})
+
+    return Handler
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="spatterd: long-lived Spatter suite server "
+                    "(warm ExecutorCache across requests)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8089)
+    ap.add_argument("--verbose", action="store_true",
+                    help="log one line per handled request")
+    args = ap.parse_args(argv)
+    daemon = SpatterDaemon(args.host, args.port, quiet=not args.verbose)
+    print(f"spatterd listening on {daemon.url}  "
+          f"(POST /run, GET /healthz)", flush=True)
+    try:
+        daemon.serve_forever()
+    except KeyboardInterrupt:
+        daemon.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+"""Request/response schema for spatterd (DESIGN.md §10).
+
+One request = one JSON suite run.  The wire format accepts either the
+bare suite format ``load_suite`` already reads — a JSON list of
+``{name, kernel, pattern, delta, count}`` dicts, so every existing
+``suites/*.json`` file POSTs unmodified — or an envelope::
+
+    {"patterns": [...],            # required, same entries as the bare list
+     "backend": "xla",             # any of core.backends.BACKENDS
+     "runs": 3,                    # min-of-K timing (paper §3.5)
+     "mode": "store",              # scatter semantics: "store" | "add"
+     "metric": "measured",         # table's uniform gbs column
+     "row_width": 1,
+     "mesh": 0,                    # >0: shard bucket launches over N devices
+     "mesh_axis": "data",
+     "seed": 0,                    # host-buffer RNG seed
+     "stream_r": false,            # paper Eq. 1 vs a STREAM-like reference
+     "stream_n": 4194304}
+
+Every field is validated HERE, before any JAX work starts, so a bad
+request is a 400 with a one-line reason and never occupies the daemon's
+run lock.  Unknown envelope keys are rejected too — the missing-``mode=``
+bug class this PR fixes started life as a silently-dropped option.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+# repro.core imports live INSIDE the validators (not at module top):
+# importing core pulls in jax, and the client path — SpatterClient and
+# the --client CLI validate requests with this schema before POSTing —
+# must stay stdlib-only so a thin HTTP client never pays the multi-second
+# JAX import it exists to avoid.
+
+# upper bound on any single pattern's flattened lanes x row_width and
+# table footprint x row_width (and on stream_n).  A request at the full
+# 2**28-unit budget peaks at several GiB, not 1: each counted unit backs
+# ~4-6 concurrent float32/int32 buffers (host idx/vals/table, their
+# device copies, the output, and the digest pull), so size serving hosts
+# for that — the bound's job is making the ceiling finite and known, a
+# handful of request bytes can never allocate unboundedly.  The whole
+# suite shares the same budget (summed below): per-pattern caps alone
+# would let 64 max-size patterns stack into one bucket launch.
+MAX_PATTERN_LANES = 1 << 28
+MAX_SUITE_LANES = MAX_PATTERN_LANES
+MAX_RUNS = 1000
+
+# wire-level choice sets (duplicated from core to stay import-light;
+# tests/test_serve.py asserts they match the real definitions)
+WIRE_BACKENDS = ("xla", "onehot", "scalar", "pallas")
+WIRE_MODES = ("store", "add")
+WIRE_METRICS = ("measured", "measured_cpu_gbs", "modeled",
+                "modeled_v5e_gbs")
+
+
+# the declared index-buffer length is bounded much tighter than lanes:
+# generate_index materializes it as a PYTHON TUPLE (~36 bytes/element)
+# during parsing, so a lanes-sized budget would still admit ~10 GiB of
+# boxed ints.  Real Spatter index buffers are small (the paper's are
+# tens of elements); scale belongs on the count axis.
+MAX_INDEX_LEN = 1 << 22
+
+
+def _spec_index_len(spec) -> int:
+    """Upper-bound a pattern spec's index-buffer length WITHOUT
+    materializing it (mirrors core.pattern.generate_index's grammar:
+    UNIFORM/MS1/BROADCAST/STREAM carry N first, LAPLACIAN:D:L yields at
+    most 2*D*L+1 offsets, comma lists count their commas).  Fails
+    CLOSED: a generator-shaped spec with an unrecognized head — e.g. a
+    future core generator this mirror hasn't learned — reports
+    oversized, so eager expansion can never sneak past the bound
+    (tests/test_serve.py pins the mirror against generate_index).
+    Malformed argument lists return 0 and Pattern.from_json raises the
+    real error later."""
+    if not isinstance(spec, str):
+        try:
+            return len(spec)
+        except TypeError:
+            return 0
+    s = spec.strip()
+    head, sep, rest = s.partition(":")
+    args = [a for a in rest.split(":") if a]
+    try:
+        if head in ("UNIFORM", "MS1", "BROADCAST", "STREAM"):
+            return int(args[0])
+        if head == "LAPLACIAN":
+            return 2 * int(args[0]) * int(args[1]) + 1
+        if head == "CUSTOM":
+            return rest.count(",") + 1
+    except (IndexError, ValueError):
+        return 0
+    if sep and head.isupper():          # unknown generator head
+        return MAX_INDEX_LEN + 1
+    return s.count(",") + 1             # bare comma list
+
+@dataclasses.dataclass(frozen=True)
+class SuiteRequest:
+    """A validated spatterd run request."""
+    patterns: tuple[dict, ...]
+    backend: str = "xla"
+    runs: int = 3
+    mode: str = "store"
+    metric: str = "measured"
+    row_width: int = 1
+    mesh: int = 0
+    mesh_axis: str = "data"
+    seed: int = 0
+    stream_r: bool = False
+    stream_n: int = 2 ** 22
+    digest: bool = True      # per-pattern sha256 bit-identity proof;
+                             # opt out to skip the device->host pull +
+                             # hash on latency-critical sweeps
+
+    def __post_init__(self):
+        # choice sets mirrored from core (backends.BACKENDS,
+        # engine.SCATTER_MODES, suite._METRIC_COLUMNS) rather than
+        # imported — see the module-top note on staying jax-free; the
+        # round-trip tests pin these against the real definitions
+        if not self.patterns:
+            raise ValueError("request needs at least one pattern")
+        for i, d in enumerate(self.patterns):
+            if not isinstance(d, dict):
+                raise ValueError(f"patterns[{i}] is not an object: {d!r}")
+        if self.backend not in WIRE_BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {sorted(WIRE_BACKENDS)}")
+        if self.mode not in WIRE_MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             f"expected one of {WIRE_MODES}")
+        if self.metric not in WIRE_METRICS:
+            raise ValueError(f"unknown metric {self.metric!r}; "
+                             f"expected one of {sorted(WIRE_METRICS)}")
+        # runs bounds the min-over-K timing loop executed under the run
+        # lock (paper uses 10); row_width multiplies every buffer and is
+        # additionally folded into the per-pattern geometry bound below
+        for name, hi in (("runs", MAX_RUNS), ("row_width", 4096)):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) \
+                    or not 1 <= v <= hi:
+                raise ValueError(f"{name} must be an int in [1, {hi}], "
+                                 f"got {v!r}")
+        # stream_reference is UNIFORM:8:1 with count = n // 8: below 8 it
+        # blows up holding the run lock, and an uncapped n lets a few
+        # request bytes allocate terabytes (the body-size limit can't see
+        # it) — bound both ends here, before any JAX work
+        if not isinstance(self.stream_n, int) or isinstance(self.stream_n,
+                                                            bool) \
+                or not 8 <= self.stream_n <= MAX_PATTERN_LANES:
+            raise ValueError(f"stream_n must be an int in "
+                             f"[8, {MAX_PATTERN_LANES}], "
+                             f"got {self.stream_n!r}")
+        if not isinstance(self.mesh, int) or isinstance(self.mesh, bool) \
+                or self.mesh < 0:
+            raise ValueError(f"mesh must be an int >= 0, got {self.mesh!r}")
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool) \
+                or self.seed < 0:
+            raise ValueError(f"seed must be an int >= 0, got {self.seed!r}")
+        if not self.mesh_axis.isidentifier():
+            raise ValueError(f"mesh_axis must be an identifier-like axis "
+                             f"name, got {self.mesh_axis!r}")
+        for name in ("stream_r", "digest"):
+            if not isinstance(getattr(self, name), bool):
+                raise ValueError(f"{name} must be a bool, "
+                                 f"got {getattr(self, name)!r}")
+
+    @staticmethod
+    def from_json(doc) -> "SuiteRequest":
+        """Parse a decoded request body (bare pattern list or envelope)."""
+        if isinstance(doc, str):
+            doc = json.loads(doc)
+        if isinstance(doc, list):
+            return SuiteRequest(patterns=tuple(doc))
+        if not isinstance(doc, dict):
+            raise ValueError(f"request must be a JSON list or object, "
+                             f"got {type(doc).__name__}")
+        if "patterns" not in doc:
+            raise ValueError('request object needs a "patterns" list')
+        unknown = set(doc) - set(_OPTION_FIELDS) - {"patterns"}
+        if unknown:
+            raise ValueError(f"unknown request fields {sorted(unknown)}; "
+                             f"expected {sorted(_OPTION_FIELDS)}")
+        kw = {}
+        for name, ty in _OPTION_FIELDS.items():
+            if name in doc:
+                v = doc[name]
+                # bool is an int subclass: keep the check strict both ways
+                if ty is int and isinstance(v, bool):
+                    raise ValueError(f"{name} must be an int, got {v!r}")
+                if not isinstance(v, ty):
+                    raise ValueError(f"{name} must be {ty.__name__}, "
+                                     f"got {v!r}")
+                kw[name] = v
+        pats = doc["patterns"]
+        if not isinstance(pats, list):
+            raise ValueError('"patterns" must be a list')
+        return SuiteRequest(patterns=tuple(pats), **kw)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["patterns"] = list(d["patterns"])
+        return d
+
+    def build_patterns(self) -> list[Pattern]:
+        """Materialize the suite (ValueError on malformed entries).
+
+        Also bounds the buffer geometry — per pattern AND summed over the
+        suite (patterns stack into bucket launches, so 64 individually-ok
+        patterns could still assemble one enormous batch): a tiny JSON
+        body can declare an astronomically large ``count``, and the first
+        place it would fail is a host-buffer allocation big enough to OOM
+        the daemon — reject it here instead, before any JAX work.
+        """
+        # bound the declared index-buffer length BEFORE materializing:
+        # Pattern.from_json expands generator specs eagerly, so
+        # "UNIFORM:2000000000:1" would build a 2-billion-element tuple
+        # during parsing — ahead of any size check on the result
+        for d in self.patterns:
+            n = _spec_index_len(d.get("pattern", ()))
+            if n > MAX_INDEX_LEN:
+                raise ValueError(
+                    f"pattern {d.get('name', '?')!r} declares a "
+                    f">{MAX_INDEX_LEN}-element (or unrecognized-"
+                    f"generator) index buffer; put scale in count=")
+        from repro.core.pattern import Pattern   # lazy: jax-free client
+        try:
+            pats = [Pattern.from_json(d) for d in self.patterns]
+        except (IndexError, KeyError, TypeError, ValueError) as e:
+            # IndexError: generator specs with too few args ("UNIFORM",
+            # "MS1:8") index into their missing argument list
+            raise ValueError(f"bad pattern entry: {e}") from e
+        total = 0
+        for p in pats:
+            lanes = p.count * p.index_len
+            size = max(lanes, p.footprint()) * self.row_width
+            total += size
+            if size > MAX_PATTERN_LANES:
+                raise ValueError(
+                    f"pattern {p.name!r} too large to serve: "
+                    f"count*index_len={lanes}, footprint={p.footprint()}, "
+                    f"row_width={self.row_width} (limit: lanes x "
+                    f"row_width <= {MAX_PATTERN_LANES})")
+        if total > MAX_SUITE_LANES:
+            raise ValueError(
+                f"suite too large to serve: {total} total lanes x "
+                f"row_width > {MAX_SUITE_LANES} budget")
+        return pats
+
+
+# envelope option keys -> wire type, derived from the dataclass itself so
+# the two can never drift (a new SuiteRequest field is automatically
+# accepted by from_json); patterns is handled separately
+_WIRE_TYPES = {"str": str, "int": int, "bool": bool}
+_OPTION_FIELDS: dict[str, type] = {
+    f.name: _WIRE_TYPES[f.type]
+    for f in dataclasses.fields(SuiteRequest) if f.name != "patterns"
+}

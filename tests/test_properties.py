@@ -105,3 +105,36 @@ def test_chunked_attention_matches_naive(b, s, kvh, g, causal, window, cap):
                             attn_softcap=cap)
     ref = _naive_attention(q, k, v, causal, window, cap)
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pad_batch contract (plan.py): smallest n_shards-multiple >= the pow-2
+# bracket.  The bracket-stability property is what ExecutorCache.best_batch
+# assumes — every member count in one pow-2 bracket must map to ONE padded
+# batch per shard count, or streamed suite runs fragment the ExecKey space
+# and recompile on membership drift.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 64))
+def test_pad_batch_contract(nb, n_shards):
+    from repro.core.plan import next_pow2, pad_batch
+    b = pad_batch(nb, n_shards)
+    bracket = next_pow2(nb)
+    assert b >= nb                          # fits every member
+    assert b % n_shards == 0                # even sharded split
+    assert b >= bracket                     # never below the pow-2 bracket
+    assert b - n_shards < bracket           # minimal such multiple
+    # unsharded: exactly the pow-2 bracket
+    assert pad_batch(nb) == bracket
+    # pow-2 shard counts keep pow-2 batches (max of the two brackets)
+    if n_shards & (n_shards - 1) == 0:
+        assert b == max(bracket, n_shards)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 2048), st.integers(1, 2048), st.integers(1, 64))
+def test_pad_batch_bracket_stability(nb1, nb2, n_shards):
+    from repro.core.plan import next_pow2, pad_batch
+    if next_pow2(nb1) == next_pow2(nb2):
+        assert pad_batch(nb1, n_shards) == pad_batch(nb2, n_shards)

@@ -1,0 +1,371 @@
+"""spatterd serving layer (repro/serve, DESIGN.md §10).
+
+In-process daemon on an ephemeral port with its OWN ExecutorCache (never
+the process-wide default — tests must not warm or read global state).
+The acceptance regime — second identical request compiles nothing and
+returns bit-identical results — is pinned here for the single-device
+path in-process and for the 8-device --mesh path in a subprocess (the
+tier-1 suite must see one device; same pattern as test_sharded_plan).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import pytest
+
+from repro.core import ExecutorCache
+from repro.serve import ServerError, SpatterClient, SpatterDaemon
+from repro.serve.schema import SuiteRequest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SUITE = [
+    {"name": "g1", "kernel": "Gather", "pattern": "UNIFORM:4:1",
+     "delta": 4, "count": 64},
+    {"name": "g2", "kernel": "Gather", "pattern": "UNIFORM:4:2",
+     "delta": 4, "count": 64},
+    {"name": "s1", "kernel": "Scatter", "pattern": "UNIFORM:4:2",
+     "delta": 2, "count": 64},
+]
+
+
+@pytest.fixture()
+def served():
+    with SpatterDaemon(port=0, cache=ExecutorCache()) as d:
+        yield SpatterClient(d.url)
+
+
+# ---------------------------------------------------------------------------
+# request schema
+# ---------------------------------------------------------------------------
+
+def test_schema_accepts_bare_suite_list():
+    req = SuiteRequest.from_json(SUITE)
+    assert req.patterns == tuple(SUITE)
+    assert req.backend == "xla" and req.mode == "store"
+    assert len(req.build_patterns()) == 3
+
+
+def test_schema_envelope_roundtrip():
+    req = SuiteRequest.from_json({"patterns": SUITE, "backend": "scalar",
+                                  "mode": "add", "runs": 5, "mesh": 2,
+                                  "stream_r": True})
+    assert (req.backend, req.mode, req.runs, req.mesh,
+            req.stream_r) == ("scalar", "add", 5, 2, True)
+    assert SuiteRequest.from_json(req.to_json()) == req
+
+
+def test_schema_rejects_bad_requests():
+    cases = [
+        ([], "at least one pattern"),
+        ({"patterns": SUITE, "backend": "cuda"}, "backend"),
+        ({"patterns": SUITE, "mode": "max"}, "mode"),
+        ({"patterns": SUITE, "metric": "measurd"}, "metric"),
+        ({"patterns": SUITE, "runs": 0}, "runs"),
+        ({"patterns": SUITE, "runs": "3"}, "runs"),
+        ({"patterns": SUITE, "runs": 10 ** 9}, "runs"),
+        ({"patterns": SUITE, "row_width": 10 ** 6}, "row_width"),
+        ({"patterns": SUITE, "mesh": -1}, "mesh"),
+        ({"patterns": SUITE, "mesh": True}, "mesh"),
+        ({"patterns": SUITE, "stream_r": 1}, "stream_r"),
+        ({"patterns": SUITE, "stream_n": 4}, "stream_n"),
+        ({"patterns": SUITE, "stream_n": 2 ** 40}, "stream_n"),
+        ({"patterns": SUITE, "seed": -1}, "seed"),
+        ({"patterns": SUITE, "mesh_axis": "a b"}, "mesh_axis"),
+        ({"patterns": SUITE, "mod": "add"}, "unknown request fields"),
+        ({"backend": "xla"}, "patterns"),
+        ("42", "list or object"),
+        ([{"name": "x"}, 7], r"patterns\[1\] is not an object"),
+    ]
+    for doc, needle in cases:
+        with pytest.raises(ValueError, match=needle):
+            SuiteRequest.from_json(doc)
+
+
+def test_schema_bad_pattern_entry_is_value_error():
+    req = SuiteRequest.from_json([{"name": "nope", "kernel": "Gather"}])
+    with pytest.raises(ValueError, match="bad pattern entry"):
+        req.build_patterns()
+    # generator spec with too few args raises IndexError internally —
+    # still a ValueError here (the daemon maps ValueError to a 400)
+    for spec in ("UNIFORM", "MS1:8"):
+        short = SuiteRequest.from_json(
+            [{"name": "short", "kernel": "Gather", "pattern": spec,
+              "delta": 1, "count": 1}])
+        with pytest.raises(ValueError, match="bad pattern entry"):
+            short.build_patterns()
+
+
+def test_schema_bounds_pattern_geometry():
+    # a few request bytes must not be able to declare a terabyte pattern:
+    # geometry is bounded before any host buffer is allocated
+    huge = [{"name": "huge", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+             "delta": 8, "count": 2 ** 40}]
+    with pytest.raises(ValueError, match="too large to serve"):
+        SuiteRequest.from_json(huge).build_patterns()
+    # an enormous generator spec is rejected BEFORE materialization — a
+    # 90-byte body must not build a 2-billion-element tuple while parsing
+    gen = [{"name": "gen", "kernel": "Gather",
+            "pattern": "UNIFORM:2000000000:1", "delta": 8, "count": 1}]
+    with pytest.raises(ValueError, match="index buffer"):
+        SuiteRequest.from_json(gen).build_patterns()
+    # row_width multiplies the allocation: a lanes-ok pattern times a
+    # huge row_width is rejected too
+    wide = {"patterns": [{"name": "w", "kernel": "Gather",
+                          "pattern": "UNIFORM:8:1", "delta": 8,
+                          "count": 2 ** 20}], "row_width": 4096}
+    with pytest.raises(ValueError, match="too large to serve"):
+        SuiteRequest.from_json(wide).build_patterns()
+
+
+def test_spec_index_len_mirror_tracks_generate_index():
+    # the pre-materialization bound mirrors core's generator grammar;
+    # this drift guard keeps the mirror honest: estimates must never
+    # under-count a real buffer, and unknown generator heads must fail
+    # CLOSED (oversized) rather than slip past the bound
+    from repro.core.pattern import generate_index
+    from repro.serve.schema import MAX_INDEX_LEN, _spec_index_len
+    for spec in ("UNIFORM:8:1", "UNIFORM:128:4", "MS1:8:4:64",
+                 "LAPLACIAN:2:2:100", "LAPLACIAN:3:1:10", "BROADCAST:8:4",
+                 "STREAM:16", "CUSTOM:0,4,8,12", "0,4,8,12", [0, 3, 10]):
+        est, real = _spec_index_len(spec), len(generate_index(spec))
+        assert est >= real, (spec, est, real)
+    assert _spec_index_len("HASH:2000000000:1") > MAX_INDEX_LEN
+
+
+def test_wire_choice_sets_match_core():
+    # schema duplicates core's choice sets to keep the client jax-free;
+    # this is the drift guard that duplication relies on
+    from repro.core import SCATTER_MODES
+    from repro.core import backends as B
+    from repro.core.suite import _METRIC_COLUMNS
+    from repro.serve.schema import WIRE_BACKENDS, WIRE_METRICS, WIRE_MODES
+    assert set(WIRE_BACKENDS) == set(B.BACKENDS)
+    assert WIRE_MODES == SCATTER_MODES
+    assert set(WIRE_METRICS) == set(_METRIC_COLUMNS)
+
+
+def test_client_import_is_jax_free():
+    # the thin HTTP client (and its schema validation) must not pay the
+    # multi-second jax import — that is the whole point of --client
+    code = ("import sys; sys.path.insert(0, %r); "
+            "import repro.serve.client, repro.serve.schema; "
+            "assert 'jax' not in sys.modules, 'client imports jax'; "
+            "print('OK')" % SRC)
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# daemon round trips
+# ---------------------------------------------------------------------------
+
+def test_health_and_cache_endpoints(served):
+    h = served.health()
+    assert h["ok"] and h["service"] == "spatterd"
+    assert h["n_devices"] >= 1 and "xla" in h["backends"]
+    assert served.cache()["cache"] == {"hits": 0, "misses": 0, "size": 0}
+
+
+def test_second_request_compiles_nothing_and_is_bit_identical(served):
+    r1 = served.run_suite(SUITE, backend="xla", runs=2)
+    r2 = served.run_suite(SUITE, backend="xla", runs=2)
+    assert r1["ok"] and r2["ok"]
+    # cold: exactly one compile per bucket; warm: exactly zero
+    assert r1["cache"]["misses"] == r1["plan"]["n_buckets"]
+    assert r2["cache"]["misses"] == 0
+    assert r2["cache"]["hits"] == r2["plan"]["n_buckets"]
+    d1 = [row["digest"] for row in r1["stats"]["table"]]
+    d2 = [row["digest"] for row in r2["stats"]["table"]]
+    assert d1 == d2 and all(d1)
+    # lifetime telemetry accumulates across requests
+    assert r2["cache"]["lifetime"]["misses"] == r1["cache"]["misses"]
+
+
+def test_client_accepts_envelope_documents(served):
+    # the wire format's envelope form works through the client too, with
+    # keyword options overriding same-named envelope fields
+    env = {"patterns": SUITE, "runs": 1, "mode": "store"}
+    r = served.run_suite(env)
+    assert r["ok"] and r["stats"]["n_patterns"] == len(SUITE)
+    r2 = served.run_suite(json.dumps(env), metric="modeled")
+    assert r2["stats"]["metric"] == "modeled_v5e_gbs"
+    # digest is opt-out on the wire
+    r3 = served.run_suite(env, digest=False)
+    assert all(row["digest"] is None for row in r3["stats"]["table"])
+
+
+def test_response_stats_document(served):
+    r = served.run_suite(SUITE, backend="xla", runs=1, metric="modeled")
+    stats = r["stats"]
+    assert stats["metric"] == "modeled_v5e_gbs"
+    assert stats["n_patterns"] == len(SUITE)
+    assert [row["name"] for row in stats["table"]] == ["g1", "g2", "s1"]
+    for row in stats["table"]:
+        assert row["gbs"] == row["modeled_v5e_gbs"] > 0
+    assert 0 <= r["plan"]["pad_waste"] < 1
+    assert r["elapsed_s"] > 0
+
+
+def test_mode_add_reaches_the_executable(served):
+    # duplicate-write suite: store and add must differ, and the two modes
+    # must not share cache entries (mode is part of ExecKey)
+    dup = [{"name": "dup", "kernel": "Scatter", "pattern": "BROADCAST:4:2",
+            "delta": 0, "count": 8}]
+    r_store = served.run_suite(dup, runs=1, mode="store")
+    r_add = served.run_suite(dup, runs=1, mode="add")
+    assert r_add["cache"]["misses"] > 0      # distinct executable
+    assert r_store["stats"]["table"][0]["digest"] != \
+        r_add["stats"]["table"][0]["digest"]
+    # and each mode is itself warm-repeatable
+    again = served.run_suite(dup, runs=1, mode="add")
+    assert again["cache"]["misses"] == 0
+    assert again["stats"]["table"][0]["digest"] == \
+        r_add["stats"]["table"][0]["digest"]
+
+
+def test_stream_r_surfaces_in_response(served):
+    # row_width 8 + stride spread: the modeled column gets real variance,
+    # so R is defined (a 1-pattern or uniform suite serializes null)
+    pats = [{"name": f"g{s}", "kernel": "Gather",
+             "pattern": f"UNIFORM:8:{s}", "delta": 8, "count": 64}
+            for s in (1, 16, 64)]
+    r = served.run_suite(pats, runs=1, row_width=8, stream_r=True,
+                         stream_n=1024)
+    assert r["stats"]["stream_gbs"] and r["stats"]["stream_gbs"] > 0
+    assert -1.0 <= r["stats"]["stream_r"] <= 1.0
+    # off by default
+    r2 = served.run_suite(pats, runs=1)
+    assert r2["stats"]["stream_gbs"] is None
+    assert r2["stats"]["stream_r"] is None
+    # the reference run is memoized per (backend, n, runs): a repeat
+    # stream_r request reuses its RunResult, so the measured stream_gbs
+    # is byte-for-byte the first one's (a re-run would re-time it)
+    r3 = served.run_suite(pats, runs=1, row_width=8, stream_r=True,
+                          stream_n=1024)
+    assert r3["stats"]["stream_gbs"] == r["stats"]["stream_gbs"]
+    assert r3["cache"]["misses"] == 0
+
+
+def test_mesh_request_single_device(served):
+    r1 = served.run_suite(SUITE, runs=1, mesh=1)
+    r2 = served.run_suite(SUITE, runs=1, mesh=1)
+    assert r2["cache"]["misses"] == 0
+    # sharded results bit-identical to the single-device launch
+    r0 = served.run_suite(SUITE, runs=1)
+    assert [t["digest"] for t in r0["stats"]["table"]] == \
+        [t["digest"] for t in r1["stats"]["table"]]
+
+
+def test_http_error_codes(served):
+    with pytest.raises(ServerError) as e:
+        served._request("/run", {"patterns": SUITE, "mode": "max"})
+    assert e.value.status == 400
+    with pytest.raises(ServerError) as e:
+        served.run_suite(SUITE, mesh=4096)      # > visible devices
+    assert e.value.status == 400
+    with pytest.raises(ServerError) as e:
+        served._request("/nope", {})
+    assert e.value.status == 404
+    # client-side validation gives the same message without a round trip
+    with pytest.raises(ValueError, match="mode"):
+        served.run_suite(SUITE, mode="max")
+    # and the daemon is still healthy afterwards
+    assert served.health()["ok"]
+
+
+def test_keep_alive_connection_survives_404(served):
+    # the daemon speaks HTTP/1.1 (persistent connections): a wrong-path
+    # POST must still drain its body, or the leftover bytes would be
+    # parsed as the next request's start line on the same connection
+    import http.client
+    host, port = served.url[len("http://"):].rsplit(":", 1)
+    conn = http.client.HTTPConnection(host, int(port), timeout=60)
+    try:
+        hdr = {"Content-Type": "application/json"}
+        conn.request("POST", "/runs", body=json.dumps(SUITE), headers=hdr)
+        r1 = conn.getresponse()
+        assert r1.status == 404 and not json.loads(r1.read())["ok"]
+        # same connection: a valid request right behind the 404
+        conn.request("POST", "/run", headers=hdr,
+                     body=json.dumps({"patterns": SUITE, "runs": 1}))
+        r2 = conn.getresponse()
+        doc = json.loads(r2.read())
+        assert r2.status == 200 and doc["ok"]
+    finally:
+        conn.close()
+
+
+def test_bad_framing_gets_an_error_response(served):
+    # a malformed Content-Length must produce an HTTP error (and close
+    # the connection), never an unhandled handler crash with no response
+    import socket
+    host, port = served.url[len("http://"):].rsplit(":", 1)
+    with socket.create_connection((host, int(port)), timeout=60) as s:
+        s.sendall(b"POST /run HTTP/1.1\r\nHost: x\r\n"
+                  b"Content-Length: abc\r\n\r\n")
+        head = s.recv(4096).decode()
+    assert head.startswith("HTTP/1.1 400"), head
+    assert served.health()["ok"]               # daemon unharmed
+
+
+def test_concurrent_requests_serialize_with_exact_telemetry(served):
+    # N identical concurrent requests: the run lock serializes execution,
+    # so exactly ONE request compiles each bucket and the others are pure
+    # hits — per-request deltas must sum to one cold + (N-1) warm runs.
+    results = []
+
+    def post():
+        results.append(served.run_suite(SUITE, runs=1))
+
+    threads = [threading.Thread(target=post) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(results) == 4 and all(r["ok"] for r in results)
+    n_buckets = results[0]["plan"]["n_buckets"]
+    assert sum(r["cache"]["misses"] for r in results) == n_buckets
+    digests = {tuple(t["digest"] for t in r["stats"]["table"])
+               for r in results}
+    assert len(digests) == 1                  # all four bit-identical
+
+
+# ---------------------------------------------------------------------------
+# acceptance: sharded serving, 8 fake devices, real daemon process
+# ---------------------------------------------------------------------------
+
+SHARDED_SERVE = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, %r)
+    import jax
+    assert len(jax.devices()) == 8, jax.devices()
+    from repro.core import ExecutorCache
+    from repro.serve import SpatterClient, SpatterDaemon
+
+    SUITE = %s
+    with SpatterDaemon(port=0, cache=ExecutorCache()) as d:
+        c = SpatterClient(d.url)
+        base = c.run_suite(SUITE, runs=1)
+        r1 = c.run_suite(SUITE, runs=1, mesh=8)
+        r2 = c.run_suite(SUITE, runs=1, mesh=8)
+        assert r2["cache"]["misses"] == 0, r2["cache"]
+        d0 = [t["digest"] for t in base["stats"]["table"]]
+        d1 = [t["digest"] for t in r1["stats"]["table"]]
+        d2 = [t["digest"] for t in r2["stats"]["table"]]
+        assert d1 == d2 == d0 and all(d1), (d0, d1, d2)
+    print("OK")
+    """)
+
+
+def test_acceptance_sharded_serve_8dev_subprocess():
+    code = SHARDED_SERVE % (SRC, json.dumps(SUITE))
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    assert "OK" in r.stdout

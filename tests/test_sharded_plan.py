@@ -47,11 +47,17 @@ def _mesh1():
 def test_pad_batch():
     assert [pad_batch(n) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == \
         [1, 2, 4, 4, 8, 8, 8, 16]
-    # shard-count multiple: even split for any mesh size
+    # shard-count multiple: even split for any mesh size, applied ON TOP
+    # of the pow-2 bracket (smallest n_shards-multiple >= next_pow2(nb))
     assert pad_batch(5, 8) == 8
     assert pad_batch(9, 8) == 16
-    assert pad_batch(5, 6) == 6        # non-pow2 shard counts work too
-    assert pad_batch(13, 6) == 24      # 6 * next_pow2(ceil(13/6))
+    assert pad_batch(1, 3) == 3        # non-pow2 shard counts work too
+    assert pad_batch(5, 6) == 12       # bracket 8 -> first multiple of 6
+    assert pad_batch(13, 6) == 18      # bracket 16 -> first multiple of 6
+    # the anti-fragmentation property best_batch relies on: every member
+    # count in a pow-2 bracket maps to ONE padded batch (5 and 7 share
+    # bracket 8; the old code gave them 6 and 12 with n_shards=3)
+    assert pad_batch(5, 3) == pad_batch(7, 3) == 9
     with pytest.raises(ValueError):
         pad_batch(0)
     with pytest.raises(ValueError):

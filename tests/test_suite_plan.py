@@ -218,3 +218,76 @@ def test_run_plan_bandwidth_uses_useful_bytes_only():
     useful = p.index_len * p.count * 4
     np.testing.assert_allclose(res.measured_gbs,
                                useful / res.time_s / 1e9, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# run_suite mode= / stream_r / digest / to_json (PR 4 satellites)
+# ---------------------------------------------------------------------------
+
+def test_run_suite_mode_reaches_scatters():
+    # duplicate-write pattern: add accumulates, store keeps the last write,
+    # so the two modes must produce different outputs (witnessed by digest)
+    dup = [Pattern("dup", "scatter", (0, 0, 1), delta=0, count=8)]
+    st_store = run_suite(dup, runs=1, mode="store", cache=ExecutorCache(),
+                         digest=True)
+    st_add = run_suite(dup, runs=1, mode="add", cache=ExecutorCache(),
+                       digest=True)
+    assert st_store.results[0].out_digest != st_add.results[0].out_digest
+    # the unbatched path takes mode= too and agrees with the planner
+    st_nb = run_suite(dup, runs=1, mode="add", batch=False)
+    assert st_nb.results[0].measured_gbs > 0
+
+
+def test_run_suite_rejects_unknown_mode():
+    pats = _suite(n_gather=1, n_scatter=0)
+    try:
+        run_suite(pats, mode="min", runs=1, cache=ExecutorCache())
+    except ValueError as e:
+        assert "mode" in str(e)
+    else:
+        raise AssertionError("run_suite accepted an unknown mode")
+
+
+def test_run_suite_stream_r_wires_the_reference():
+    # row_width 8: the v5e tile model separates stride 1 / 64 / MS1, so
+    # both correlated columns have variance and R is defined
+    pats = [make_pattern(f"UNIFORM:8:{s}", kind="gather", delta=8,
+                         count=64, name=f"g{s}") for s in (1, 16, 64)]
+    pats.append(make_pattern("MS1:8:4:64", kind="gather", delta=8,
+                             count=64, name="ms1"))
+    stats = run_suite(pats, runs=1, row_width=8, cache=ExecutorCache(),
+                      stream_r=True, stream_n=1024)
+    assert stats.stream_gbs is not None and stats.stream_gbs > 0
+    # R is a correlation: defined and bounded
+    assert -1.0 <= stats.stream_r <= 1.0
+    # default: the reference never runs and the fields stay None
+    stats2 = run_suite(pats, runs=1, cache=ExecutorCache())
+    assert stats2.stream_gbs is None and stats2.stream_r is None
+
+
+def test_suite_stats_to_json_is_strict_json():
+    import json as _json
+    pats = _suite(n_gather=2, n_scatter=1)
+    stats = run_suite(pats, runs=1, cache=ExecutorCache(), digest=True)
+    doc = stats.to_json("measured")
+    _json.loads(_json.dumps(doc, allow_nan=False))    # strict JSON
+    assert doc["n_patterns"] == 3 and doc["n_buckets"] == stats.plan.n_buckets
+    assert [r["name"] for r in doc["table"]] == [p.name for p in pats]
+    assert all(len(r["digest"]) == 64 for r in doc["table"])
+    # NaN stream_r serializes as null
+    one = run_suite(pats[:1], runs=1, cache=ExecutorCache(),
+                    stream_r=True, stream_n=1024)
+    assert np.isnan(one.stream_r)
+    assert one.to_json()["stream_r"] is None
+
+
+def test_run_plan_digest_deterministic_across_caches():
+    pats = _suite(n_gather=2, n_scatter=2)
+    plan = SuitePlan.build(pats)
+    r1 = run_plan(plan, runs=1, cache=ExecutorCache(), digest=True)
+    r2 = run_plan(plan, runs=1, cache=ExecutorCache(), digest=True)
+    assert [r.out_digest for r in r1] == [r.out_digest for r in r2]
+    assert all(r.out_digest for r in r1)
+    # digest off by default: results carry None
+    r3 = run_plan(plan, runs=1, cache=ExecutorCache())
+    assert all(r.out_digest is None for r in r3)
