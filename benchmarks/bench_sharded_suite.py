@@ -1,17 +1,25 @@
-"""Multi-device suite execution: sharded bucket launches vs the
-single-device planner (core/plan.py ShardedExecutor).
+"""Multi-device suite execution: the 2-D placement layer's mesh-shape
+sweep (core/plan.py Placement, DESIGN.md §11).
 
-Runs the same bucketed suite twice inside a subprocess that forces
-``N_DEV`` fake host devices (XLA_FLAGS must be set before jax initializes,
-so this cannot run in the parent process): once through the single-device
-planner, once with every bucket launch's pattern-batch dim sharded over a
-1-D mesh.  Reports suite harmonic-mean GB/s aggregate and per-device, and
-end-to-end wall clock for both paths.
+Runs the two placement-sensitive suites — ``suites/apps.json`` (Table 5
+appdb proxies, many near-singleton buckets) and ``suites/widelane.json``
+(few patterns, huge counts) — inside a subprocess that forces ``N_DEV``
+fake host devices (XLA_FLAGS must be set before jax initializes, so this
+cannot run in the parent process).  Each suite runs single-device and at
+every mesh shape in ``SHAPES`` (``8x1``, ``4x2``, ``2x4``, ``1x8``);
+per shape we record aggregate harmonic-mean GB/s, wall clock, exact
+compile count, and the plan's pad waste at that ``(batch, lane)`` grid —
+the number the 2-D layer exists to shrink (a ``8x1`` launch of a
+2-member bucket wastes 6/8 of the mesh on scratch patterns; ``4x2``
+moves half of that parallelism onto the lane axis).
 
-On a CPU host the fake devices share the same cores, so wall-clock parity
-(not speedup) is the expected result — the bench verifies the sharded
-path's overhead structure; the per-device split is the number that scales
-on real multi-chip hardware.
+The per-shape records merge into ``BENCH_suite.json`` (key
+``mesh_sweep``) so the shape trajectory rides the canonical perf record.
+
+On a CPU host the fake devices share the same cores, so wall-clock
+parity (not speedup) is the expected result — the bench verifies the
+placement layer's overhead structure and padding accounting; the
+per-device split is the number that scales on real multi-chip hardware.
 """
 from __future__ import annotations
 
@@ -24,71 +32,102 @@ import textwrap
 from .harness import emit
 
 N_DEV = 8
+SHAPES = ((8, 1), (4, 2), (2, 4), (1, 8))
+SUITES = ("apps", "widelane")
+OUT_PATH = "BENCH_suite.json"
 
 _CHILD = textwrap.dedent("""\
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(n_dev)d"
-    import sys, time, json
+    import dataclasses, json, sys, time
     sys.path.insert(0, %(src)r)
     import jax
-    from repro.core import ExecutorCache, SuitePlan, make_pattern, run_suite
+    from repro.core import ExecutorCache, SuitePlan, load_suite, run_suite
 
-    def make_suite(n=16, count=1 << 14):
-        pats = []
-        for i in range(n):
-            kind = "gather" if i %% 2 == 0 else "scatter"
-            stride = (i // 2) %% 8 + 1
-            pats.append(make_pattern("UNIFORM:8:%%d" %% stride, kind=kind,
-                                     delta=8, count=count,
-                                     name="%%s%%d" %% (kind[0], i)))
-        return pats
-
-    pats = make_suite()
     runs = %(runs)d
-    mesh = jax.make_mesh((%(n_dev)d,), ("data",))
+    cap = %(cap)d
+    shapes = %(shapes)r
+    out = {}
+    for name in %(suites)r:
+        pats = load_suite(%(root)r + "/suites/" + name + ".json")
+        if cap:
+            pats = [dataclasses.replace(p, count=min(p.count, cap))
+                    for p in pats]
+        plan = SuitePlan.build(pats)
 
-    cache = ExecutorCache()
-    t0 = time.perf_counter()
-    single = run_suite(pats, backend="xla", runs=runs, cache=cache)
-    t_single = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    sharded = run_suite(pats, backend="xla", runs=runs, cache=cache,
-                        mesh=mesh)
-    t_sharded = time.perf_counter() - t0
-
-    print(json.dumps({
-        "n_dev": %(n_dev)d,
-        "n_buckets": single.plan.n_buckets,
-        "single_hmean_gbs": single.hmean_gbs,
-        "sharded_hmean_gbs": sharded.hmean_gbs,
-        "wall_single_s": t_single,
-        "wall_sharded_s": t_sharded,
-        "compiles": cache.misses,
-    }))
+        cache = ExecutorCache()
+        t0 = time.perf_counter()
+        single = run_suite(pats, backend="xla", runs=runs, cache=cache)
+        rec = {"n_patterns": len(pats), "n_buckets": plan.n_buckets,
+               "single": {"hmean_gbs": single.hmean_gbs,
+                          "wall_s": time.perf_counter() - t0,
+                          "compiles": cache.stats().misses,
+                          "pad_waste": plan.pad_waste()},
+               "shapes": {}}
+        for b, l in shapes:
+            cache = ExecutorCache()
+            t0 = time.perf_counter()
+            stats = run_suite(pats, backend="xla", runs=runs, cache=cache,
+                              mesh=(b, l))
+            rec["shapes"]["%%dx%%d" %% (b, l)] = {
+                "hmean_gbs": stats.hmean_gbs,
+                "wall_s": time.perf_counter() - t0,
+                "compiles": cache.stats().misses,
+                "pad_waste": plan.pad_waste(b, l),
+            }
+        out[name] = rec
+    print(json.dumps(out))
     """)
 
 
-def run(runs: int = 3) -> dict:
-    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    code = _CHILD % {"n_dev": N_DEV, "src": src, "runs": runs}
+def run(runs: int = 3, *, out_path: str | None = OUT_PATH) -> dict:
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    cap = 2048 if runs <= 3 else 0          # quick mode: count cap
+    code = _CHILD % {
+        "n_dev": N_DEV, "src": os.path.join(root, "src"), "root": root,
+        "runs": runs, "cap": cap,
+        "shapes": tuple(SHAPES), "suites": tuple(SUITES),
+    }
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=540)
     if r.returncode != 0:
         raise RuntimeError(f"sharded-suite child failed: {r.stderr[-2000:]}")
-    stats = json.loads(r.stdout.strip().splitlines()[-1])
+    sweep = json.loads(r.stdout.strip().splitlines()[-1])
 
-    agg = stats["sharded_hmean_gbs"]
-    emit("sharded_suite/single_dev_hmean", stats["wall_single_s"] * 1e6,
-         f"{stats['single_hmean_gbs']:.2f}GB/s")
-    emit("sharded_suite/sharded_agg_hmean", stats["wall_sharded_s"] * 1e6,
-         f"{agg:.2f}GB/s")
-    emit("sharded_suite/sharded_per_dev", 0.0,
-         f"{agg / stats['n_dev']:.2f}GB/s x{stats['n_dev']}dev")
-    emit("sharded_suite/compiles", 0.0,
-         f"{stats['compiles']}for{stats['n_buckets']}buckets_x2paths")
-    return stats
+    for name, rec in sweep.items():
+        emit(f"sharded_suite/{name}_single",
+             rec["single"]["wall_s"] * 1e6,
+             f"{rec['single']['hmean_gbs']:.2f}GB/s;"
+             f"waste={rec['single']['pad_waste']:.0%}")
+        for shape, row in rec["shapes"].items():
+            emit(f"sharded_suite/{name}_{shape}",
+                 row["wall_s"] * 1e6,
+                 f"{row['hmean_gbs']:.2f}GB/s;"
+                 f"waste={row['pad_waste']:.0%};"
+                 f"{row['compiles']}compiles")
+
+    # merge the sweep into the canonical trajectory record (bench_suite
+    # owns the rest of the file; a missing file still gets the sweep).
+    # ``out_path=None`` skips the write — run.py passes it on full CSV
+    # sweeps so the committed baseline is never silently clobbered (the
+    # same guard bench_suite honors).  Resolved against the repo root
+    # like the suite inputs, so an explicit write from another cwd still
+    # updates the canonical file; count_cap rides in the record because
+    # capped counts change widelane's whole geometry (pad_waste included)
+    # and the numbers are only comparable within a matching cap.
+    if out_path:
+        if not os.path.isabs(out_path):
+            out_path = os.path.join(root, out_path)
+        doc = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                doc = json.load(f)
+        doc["mesh_sweep"] = {"n_dev": N_DEV, "runs": runs,
+                             "count_cap": cap, "suites": sweep}
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        emit("sharded_suite/json", 0.0, out_path)
+    return sweep
 
 
 if __name__ == "__main__":

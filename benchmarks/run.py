@@ -44,6 +44,8 @@ def main() -> None:
         suite_kw = {}
     else:
         suite_kw = {"out_path": None}
+    # same guard for the mesh-shape sweep's merge into BENCH_suite.json
+    sharded_kw = {} if args.only == "sharded_suite" else {"out_path": None}
     benches = {
         "stream": lambda: bench_stream.run(runs=runs),
         "uniform_stride": lambda: bench_uniform_stride.run(runs=runs),
@@ -53,7 +55,8 @@ def main() -> None:
         "llm_gs": lambda: bench_llm_gs.run(runs=runs),
         "roofline": lambda: bench_roofline.run(runs=runs),
         "suite_scaling": lambda: bench_suite_scaling.run(runs=runs),
-        "sharded_suite": lambda: bench_sharded_suite.run(runs=runs),
+        "sharded_suite": lambda: bench_sharded_suite.run(runs=runs,
+                                                         **sharded_kw),
         "suite": lambda: bench_suite.run(runs=runs, **suite_kw),
         "serve": lambda: bench_serve.run(runs=runs),
     }

@@ -9,12 +9,16 @@ Prints the paper's outputs (min-time bandwidth) plus the TPU-model columns
 (modeled v5e GB/s, tile efficiency, reuse factor).
 
 Multi-device suites (--json mode): ``--mesh N`` splits every bucket
-launch's pattern-batch dim over a 1-D mesh of N devices (the paper §3.4
-thread-scaling story, scaled to devices; see the DESIGN NOTE in
-core/plan.py).  On a CPU-only host, force fake devices first:
+launch's pattern-batch dim over N devices (the paper §3.4 thread-scaling
+story, scaled to devices); ``--mesh BxL`` (e.g. ``4x2``) places launches
+on a 2-D (pattern-batch x lane) mesh — the lane axis splits *within*
+each pattern, so suites with few patterns but huge counts still fill the
+mesh (core/plan.py Placement, DESIGN.md §11).  On a CPU-only host, force
+fake devices first:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
-        PYTHONPATH=src python examples/spatter_cli.py --json suite.json --mesh 8
+        PYTHONPATH=src python examples/spatter_cli.py --json suite.json \\
+        --mesh 4x2
 
 Scatter write semantics: ``--mode store`` (last-write-wins, the paper's
 default) or ``--mode add`` (accumulation), on both single-pattern and
@@ -69,10 +73,10 @@ def main():
     ap.add_argument("--no-batch", action="store_true",
                     help="suite mode: one compile per pattern instead of "
                          "the bucketed planner (plan.py)")
-    ap.add_argument("--mesh", type=int, default=None, metavar="N",
-                    help="suite mode: shard bucket launches' pattern-batch "
-                         "dim over a 1-D mesh of N devices (default 0 = "
-                         "off)")
+    ap.add_argument("--mesh", default=None, metavar="N|BxL",
+                    help="suite mode: shard bucket launches over N devices "
+                         "(pattern-batch axis) or a BxL (batch x lane) 2-D "
+                         "placement, e.g. 4x2 (default 0 = off)")
     ap.add_argument("--mode", default=None, choices=["store", "add"],
                     help="scatter write semantics: last-write-wins store "
                          "(paper default) or add accumulation")
@@ -164,21 +168,26 @@ def main():
         ap.error("--runs must be >= 1 (min-of-K timing needs a run)")
     if args.stream_r and not args.json:
         ap.error("--stream-r only applies to --json suite mode")
-    from repro.core import GSEngine, load_suite, make_pattern, run_suite
+    from repro.core import GSEngine, Placement, load_suite, make_pattern, \
+        run_suite
 
     mesh = None
-    if opt["mesh"]:
+    mesh_grid = (1, 1)
+    from repro.serve.schema import parse_mesh
+    try:
+        mesh_shape = parse_mesh(str(opt["mesh"]))
+    except ValueError as e:
+        ap.error(f"--mesh: {e}")
+    if mesh_shape:                             # 0 = off (the default)
         if not args.json:
             ap.error("--mesh only applies to --json suite mode")
         if args.no_batch:
             ap.error("--mesh requires the bucketed planner (drop --no-batch)")
-        import jax
-        n_dev = len(jax.devices())
-        if opt["mesh"] > n_dev:
-            ap.error(f"--mesh {opt['mesh']} > {n_dev} visible devices "
-                     f"(set XLA_FLAGS=--xla_force_host_platform_device_"
-                     f"count={opt['mesh']} on CPU)")
-        mesh = jax.make_mesh((opt["mesh"],), ("data",))
+        try:
+            mesh = Placement.create(mesh_shape)   # validates device count
+        except ValueError as e:
+            ap.error(f"--mesh: {e}")
+        mesh_grid = mesh.grid
 
     if args.json:
         stats = run_suite(load_suite(args.json), backend=opt["backend"],
@@ -199,11 +208,13 @@ def main():
         if stats.plan is not None:
             print(f"plan : {len(stats.results)} patterns -> "
                   f"{stats.plan.n_buckets} shape buckets "
-                  f"(pad waste {stats.plan.pad_waste(opt['mesh'] or 1):.1%})")
+                  f"(pad waste {stats.plan.pad_waste(*mesh_grid):.1%})")
         if mesh is not None:
-            print(f"mesh : pattern-batch dim sharded over {opt['mesh']} "
-                  f"devices (aggregate GB/s above; per-device = /"
-                  f"{opt['mesh']})")
+            b, l = mesh_grid
+            n_dev = b * l
+            print(f"mesh : {mesh.placement} — pattern-batch x{b}, "
+                  f"lanes x{l} (aggregate GB/s above; per-device = /"
+                  f"{n_dev})")
         return
 
     p = make_pattern(opt["pattern"], kind=opt["kernel"].lower(),

@@ -13,8 +13,8 @@ from .pattern import (Pattern, make_pattern, generate_index, load_suite,
 from .backends import gather, scatter, BACKENDS
 from .engine import GSEngine, RunResult, gs_shardings, SCATTER_MODES
 from .plan import (SuitePlan, BucketSpec, Bucket, ExecutorCache, CacheStats,
-                   ShardedExecutor, run_plan, execute_bucket, default_cache,
-                   pad_batch)
+                   Placement, ShardedExecutor, as_placement, run_plan,
+                   execute_bucket, default_cache, pad_batch, pad_lanes)
 from .suite import run_suite, run_suite_file, stream_reference, \
     harmonic_mean, pearson_r, SuiteStats
 from .tracing import trace_gs, TraceReport, TracedAccess
@@ -26,8 +26,8 @@ __all__ = [
     "gather", "scatter", "BACKENDS",
     "GSEngine", "RunResult", "gs_shardings", "SCATTER_MODES",
     "SuitePlan", "BucketSpec", "Bucket", "ExecutorCache", "CacheStats",
-    "ShardedExecutor",
-    "run_plan", "execute_bucket", "default_cache", "pad_batch",
+    "Placement", "ShardedExecutor", "as_placement",
+    "run_plan", "execute_bucket", "default_cache", "pad_batch", "pad_lanes",
     "run_suite", "run_suite_file", "stream_reference", "harmonic_mean",
     "pearson_r", "SuiteStats",
     "trace_gs", "TraceReport", "TracedAccess",

@@ -19,7 +19,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from . import backends as B
 from . import bandwidth as bw
@@ -29,36 +29,22 @@ from .pattern import Pattern
 def gs_shardings(mesh: Mesh, axis: str, kind: str, *, batched: bool = False):
     """(in_shardings, out_sharding) for a gather/scatter executable.
 
-    Unbatched (``GSEngine.sharded``): the flattened lane dim — the paper's
-    OpenMP-thread dim — is split over ``axis``.  The gather table is
-    replicated (every shard reads anywhere); the scatter result is
-    replicated because shards may write to any row.
-
-    Batched (``plan.ShardedExecutor``): dim 0 of every operand is the
-    pattern-batch dim of a bucket launch, and a whole pattern — indices,
-    its private table, its payload — lives on one shard, so *everything*
-    shards on dim 0 and no cross-device writes exist by construction.
+    Compat shim over the placement layer (``plan.Placement`` /
+    ``runtime.sharding.gs_specs`` — DESIGN.md §11), which owns the axis
+    rules for every sharded path.  ``axis`` plays the 1-D role the
+    pre-placement code gave it: the pattern-batch axis when ``batched``
+    (each device runs whole patterns), the lane axis otherwise (the
+    paper's OpenMP-thread split ``GSEngine.sharded`` uses).
 
     Scatter executables take four operands (dst, idx, vals, keep): the
     host-precomputed last-write-wins keep mask rides with the indices.
     """
-    if kind not in ("gather", "scatter"):
-        raise ValueError(f"kind must be gather|scatter, got {kind!r}")
-    from repro.runtime.sharding import named_shardings
-    shard, rep = P(axis), P()
+    from .plan import Placement
     if batched:
-        n_in = 2 if kind == "gather" else 4
-        in_sh = named_shardings(mesh, *([shard] * n_in))
-        (out_sh,) = named_shardings(mesh, shard)
-        return in_sh, out_sh
-    if kind == "gather":
-        in_sh = named_shardings(mesh, rep, shard)     # table replicated
-        (out_sh,) = named_shardings(mesh, shard)      # rows land per-shard
-        return in_sh, out_sh
-    # dst, idx, vals, keep: lane-dim operands shard with the lanes
-    in_sh = named_shardings(mesh, rep, shard, shard, shard)
-    (out_sh,) = named_shardings(mesh, rep)            # any shard, any row
-    return in_sh, out_sh
+        placement = Placement(mesh, batch_axis=axis, lane_axis=None)
+    else:
+        placement = Placement(mesh, batch_axis=None, lane_axis=axis)
+    return placement.shardings(kind, batched=batched)
 
 
 def make_host_buffers(pattern: Pattern, row_width: int, seed: int = 0):
@@ -205,16 +191,31 @@ class GSEngine:
             args = (jnp.zeros(self.footprint_shape(), self.dtype),) + args
         return fn, args
 
-    def sharded(self, mesh: Mesh, axis: str = "data"):
-        """Shard the count dimension over ``axis`` (paper's thread dim)."""
+    def sharded(self, mesh, axis: str = "data"):
+        """Shard the count dimension over ``axis`` (paper's thread dim).
+
+        The lane-only degenerate form of the placement layer: ``mesh``
+        may be a raw ``Mesh`` (its ``axis`` becomes the lane axis) or a
+        lane-only ``plan.Placement``; batch-sharded placements belong to
+        the suite planner (a single pattern has no batch dim).
+        """
+        from .plan import Placement
         fn, args = self.build()
-        n_shards = mesh.shape[axis]
+        if isinstance(mesh, Placement):
+            placement = mesh
+            if placement.batch_axis is not None:
+                raise ValueError(
+                    "GSEngine.sharded is per-pattern: the placement must "
+                    f"be lane-only, got {placement.placement}")
+        else:
+            placement = Placement(mesh, batch_axis=None, lane_axis=axis)
+        n_shards = placement.lane_shards
         total = self._abs_idx.shape[0]
         if total % n_shards:
             raise ValueError(f"count*index_len={total} not divisible by "
                              f"{n_shards} shards")
-        in_shardings, out_shardings = gs_shardings(mesh, axis,
-                                                   self.pattern.kind)
+        in_shardings, out_shardings = placement.shardings(
+            self.pattern.kind, batched=False)
         backend, mode = self.backend, self.mode
         if self.pattern.kind == "gather":
             def raw(src, idx):

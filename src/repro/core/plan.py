@@ -45,16 +45,24 @@ the scratch table row, their tables/payloads are zeros, and their vmap
 outputs are dropped before results are attributed — the same
 can't-touch-real-data / never-in-the-numerator semantics as padded lanes.
 
-Sharded launches.  ``run_plan(..., mesh=..., mesh_axis=...)`` splits every
-bucket launch's pattern-batch dim over a mesh axis (the multi-device form
-of the paper's §3.4 thread scaling): ``ShardedExecutor`` jits the same
-batched op with ``NamedSharding``s from ``engine.gs_shardings(batched=
-True)``, so each device runs the whole gather/scatter for its slice of
-the bucket's patterns — a pattern never straddles devices, hence sharded
-results are bit-identical to the single-device launch.  ``pad_batch``
-additionally rounds the batch up to a multiple of the shard count so the
-split is always even.  The mesh placement is part of the ``ExecKey``
-(sharded and unsharded executables never collide).
+Sharded launches.  ``run_plan(..., mesh=...)`` places every bucket launch
+on a ``Placement`` — a device mesh of shape ``(batch, lane)`` with either
+axis degenerate (DESIGN.md §11).  ``mesh=`` accepts an int ``N`` (batch-
+only, the PR 2 behavior), a ``(b, l)`` tuple, a raw ``Mesh`` (batch-only
+over ``mesh_axis``), or a ``Placement``.  The batch axis splits the
+pattern-batch dim — each device runs whole patterns, the multi-device
+form of the paper's §3.4 thread scaling — and the lane axis splits the
+flattened lane dim *within* each pattern, the same split
+``GSEngine.sharded`` applies to a single pattern, so buckets with few
+members but huge lanes still fill the mesh.  Axis semantics live in ONE
+rule table (``runtime.sharding.gs_specs``) shared by every sharded path.
+``pad_batch`` rounds the batch up to a shard-multiple of the batch axis
+and ``pad_lanes`` rounds the launched lane dim up to a shard-multiple of
+the lane axis, so both splits are always even; results stay bit-identical
+to the single-device launch (store-mode scatter dedup is decided by the
+host keep mask *before* the lane split, so at most one write per row
+survives globally).  The canonical placement string is part of the
+``ExecKey`` (differently-placed executables never collide).
 
 Execute.  Same-bucket patterns are stacked: indices into a (B_pad, N_pad)
 int32 array, tables into (B_pad, F_pad + 1, R).  Row ``F_pad`` of every
@@ -102,8 +110,7 @@ from jax.sharding import Mesh
 
 from . import backends as B
 from . import bandwidth as bw
-from .engine import (SCATTER_MODES, RunResult, gs_shardings,
-                     make_host_buffers)
+from .engine import SCATTER_MODES, RunResult, make_host_buffers
 from .pattern import Pattern
 
 
@@ -112,6 +119,15 @@ def next_pow2(n: int) -> int:
     if n < 1:
         raise ValueError(f"need n >= 1, got {n}")
     return 1 << (n - 1).bit_length()
+
+
+def _bracket_multiple(n: int, n_shards: int) -> int:
+    """Smallest multiple of ``n_shards`` >= ``next_pow2(n)`` — the ONE
+    padding contract both mesh axes share (``pad_batch``/``pad_lanes``),
+    so the bracket-stability rule can never drift between them."""
+    if n_shards < 1:
+        raise ValueError(f"need n_shards >= 1, got {n_shards}")
+    return math.ceil(next_pow2(n) / n_shards) * n_shards
 
 
 def pad_batch(nb: int, n_shards: int = 1) -> int:
@@ -129,10 +145,20 @@ def pad_batch(nb: int, n_shards: int = 1) -> int:
     while nb=7 gave 12, fragmenting the ``ExecKey.batch`` values that
     ``ExecutorCache.best_batch`` assumes are bracket-stable.)
     """
-    if n_shards < 1:
-        raise ValueError(f"need n_shards >= 1, got {n_shards}")
-    b = next_pow2(nb)
-    return math.ceil(b / n_shards) * n_shards
+    return _bracket_multiple(nb, n_shards)
+
+
+def pad_lanes(n: int, n_shards: int = 1) -> int:
+    """Padded flattened-lane dim: the lane-axis twin of ``pad_batch``,
+    sharing the same bracket-multiple contract (``_bracket_multiple``).
+
+    ``BucketSpec.idx_len`` is already a pow2, so with a pow-2 lane-shard
+    count this is the identity; non-pow2 lane axes (e.g. ``--mesh 2x3``)
+    pad the launched lane dim up to the next shard multiple, and the
+    extra lanes are ordinary padding lanes (they point at the scratch
+    row and never enter the bandwidth numerator).
+    """
+    return _bracket_multiple(n, n_shards)
 
 
 # ---------------------------------------------------------------------------
@@ -179,15 +205,17 @@ class SuitePlan:
     def n_buckets(self) -> int:
         return len(self.buckets)
 
-    def pad_waste(self, n_shards: int = 1) -> float:
+    def pad_waste(self, n_shards: int = 1, lane_shards: int = 1) -> float:
         """Fraction of launched lanes that are padding (0 = no waste).
 
-        Counts both lane padding and the scratch patterns added by
-        batch-dim padding (``pad_batch``, including the shard-multiple
-        round-up when ``n_shards`` > 1).
+        Counts lane padding (pow-2 bracket plus the ``lane_shards``
+        multiple on the lane axis) and the scratch patterns added by
+        batch-dim padding (``pad_batch``, including the ``n_shards``
+        multiple on the batch axis).
         """
         real = sum(p.count * p.index_len for p in self.patterns)
-        launched = sum(b.spec.idx_len * pad_batch(len(b.members), n_shards)
+        launched = sum(pad_lanes(b.spec.idx_len, lane_shards)
+                       * pad_batch(len(b.members), n_shards)
                        for b in self.buckets)
         return 1.0 - real / max(1, launched)
 
@@ -206,7 +234,7 @@ class ExecKey:
     row_width: int
     mode: str           # "store" | "add" for scatter, "" for gather
     batch: int          # padded pattern-batch dim (pad_batch)
-    placement: str      # ShardedExecutor.placement, "" = single-device
+    placement: str      # Placement.placement, "" = single-device
 
 
 @dataclasses.dataclass(frozen=True)
@@ -217,10 +245,16 @@ class CacheStats:
     serving layer brackets each request with two snapshots and reports
     ``after.delta(before)`` — the request's own hits/misses — so a warm
     repeat request can *prove* it compiled nothing.
+
+    ``batch_hits`` counts cross-batch (polymorphic) hits: launches served
+    by a warm executable with a *larger* pattern-batch via ``best_batch``
+    instead of compiling an exact-size one.  They are a subset of
+    ``hits`` — each one also counts as a plain hit on the larger key.
     """
     hits: int
     misses: int
     size: int
+    batch_hits: int = 0
 
     def delta(self, before: "CacheStats") -> "CacheStats":
         """Elementwise difference — every field of the result is a delta
@@ -228,10 +262,23 @@ class CacheStats:
         report absolute occupancy from the *after* snapshot instead."""
         return CacheStats(hits=self.hits - before.hits,
                           misses=self.misses - before.misses,
-                          size=self.size - before.size)
+                          size=self.size - before.size,
+                          batch_hits=self.batch_hits - before.batch_hits)
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
+
+
+class _BuildFuture:
+    """In-flight compile slot: the owning thread publishes the built
+    executable (or the builder's exception) and every racing thread on
+    the same key waits instead of building a duplicate."""
+    __slots__ = ("done", "fn", "exc")
+
+    def __init__(self):
+        self.done = threading.Event()
+        self.fn = None
+        self.exc = None
 
 
 class ExecutorCache:
@@ -245,36 +292,142 @@ class ExecutorCache:
     Thread safety: all structure mutation (the LRU order, eviction, the
     hit/miss counters) happens under one internal lock, because the
     serving daemon's request handlers share the process-wide cache from
-    multiple threads.  ``get`` holds the lock across ``builder()`` too —
-    builders only wrap ``jax.jit`` (tracing/compilation is deferred to the
-    first call), so the critical section stays cheap while guaranteeing a
-    key is built at most once and ``misses`` never double-counts a race.
+    multiple threads.  ``builder()`` itself runs *outside* the lock with
+    per-key build futures and double-checked locking: distinct keys
+    compile concurrently (holding the global lock across a builder used
+    to serialize every compile in the process behind a mutex meant for
+    bookkeeping), while threads racing on the SAME key wait on the one
+    in-flight future — a key is still built at most once and ``misses``
+    never double-counts a race (the waiters count as hits: they compiled
+    nothing).
+
+    ``best_batch`` is indexed: entries are grouped by their batch-
+    stripped key (``_family``), so the polymorphic lookup scans only that
+    family's candidate batches instead of every cached entry under the
+    lock on each bucket launch.
     """
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
         self._entries: OrderedDict[ExecKey, Callable] = OrderedDict()
+        self._pending: dict[ExecKey, _BuildFuture] = {}
+        self._families: dict[ExecKey, set[int]] = {}   # family -> batches
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.batch_hits = 0
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
 
+    @staticmethod
+    def _family(key: ExecKey) -> ExecKey:
+        """Batch-stripped index key (real batches are >= 1, 0 is free)."""
+        return dataclasses.replace(key, batch=0)
+
+    def _insert(self, key: ExecKey, fn: Callable) -> None:
+        # caller holds self._lock
+        self._entries[key] = fn
+        self._families.setdefault(self._family(key), set()).add(key.batch)
+        while len(self._entries) > self.maxsize:
+            old, _ = self._entries.popitem(last=False)
+            fam = self._family(old)
+            batches = self._families.get(fam)
+            if batches is not None:
+                batches.discard(old.batch)
+                if not batches:
+                    del self._families[fam]
+
+    def _hit_locked(self, key: ExecKey) -> Callable | None:
+        # caller holds self._lock
+        fn = self._entries.get(key)
+        if fn is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+        return fn
+
+    def _claim_locked(self, key: ExecKey) -> tuple[_BuildFuture, bool]:
+        # caller holds self._lock; returns (future, this thread owns build)
+        fut = self._pending.get(key)
+        if fut is None:
+            fut = _BuildFuture()
+            self._pending[key] = fut
+            self.misses += 1           # exactly one thread owns the build
+            return fut, True
+        self.hits += 1                 # raced: that build is in flight
+        return fut, False
+
+    def _await_or_build(self, key: ExecKey, fut: _BuildFuture, owner: bool,
+                        builder: Callable[[], Callable]) -> Callable:
+        # runs OUTSIDE the lock: distinct keys compile concurrently
+        if not owner:
+            fut.done.wait()
+            if fut.exc is not None:
+                raise fut.exc
+            return fut.fn
+        try:
+            fn = builder()
+        except BaseException as e:
+            fut.exc = e
+            with self._lock:
+                if self._pending.get(key) is fut:
+                    del self._pending[key]
+            fut.done.set()
+            raise
+        with self._lock:
+            # insert only if this build's claim is still current — a
+            # clear() while we compiled outside the lock emptied _pending,
+            # and re-inserting would desync the freshly reset counters
+            # (size > 0 with misses == 0)
+            if self._pending.get(key) is fut:
+                del self._pending[key]
+                self._insert(key, fn)
+        fut.fn = fn
+        fut.done.set()
+        return fn
+
     def get(self, key: ExecKey, builder: Callable[[], Callable]) -> Callable:
         with self._lock:
-            fn = self._entries.get(key)
+            fn = self._hit_locked(key)
             if fn is not None:
-                self._entries.move_to_end(key)
-                self.hits += 1
                 return fn
-            self.misses += 1
-            fn = builder()
-            self._entries[key] = fn
-            while len(self._entries) > self.maxsize:
-                self._entries.popitem(last=False)
-            return fn
+            fut, owner = self._claim_locked(key)
+        return self._await_or_build(key, fut, owner, builder)
+
+    def serve_poly(self, key: ExecKey, builder: Callable[[], Callable]
+                   ) -> tuple[Callable, ExecKey]:
+        """Batch-polymorphic fetch: ``(fn, served_key)`` where served_key
+        is ``key`` or its smallest warm larger-batch sibling.
+
+        Lookup and serve happen under ONE lock hold, so the
+        ``batch_hits`` counter records only launches actually served by a
+        larger warm executable (a lookup/serve race with eviction can
+        neither count a phantom cross-batch hit nor compile at a stale
+        larger batch), and ``misses`` stays the exact compile count.
+        """
+        with self._lock:
+            best = self._best_batch_locked(key)
+            if best is not None:
+                # the family index only tracks inserted entries, so under
+                # this same lock hold the hit cannot fail
+                fn = self._hit_locked(best)
+                if fn is not None:
+                    if best.batch > key.batch:
+                        self.batch_hits += 1
+                    return fn, best
+            fut, owner = self._claim_locked(key)
+        return self._await_or_build(key, fut, owner, builder), key
+
+    def _best_batch_locked(self, key: ExecKey) -> ExecKey | None:
+        # caller holds self._lock
+        batches = self._families.get(self._family(key))
+        if not batches:
+            return None
+        cands = [b for b in batches if b >= key.batch]
+        if not cands:
+            return None
+        return dataclasses.replace(key, batch=min(cands))
 
     def best_batch(self, key: ExecKey) -> ExecKey | None:
         """Smallest cached key differing from ``key`` only by a >= batch.
@@ -282,27 +435,30 @@ class ExecutorCache:
         The batch-polymorphic lookup: a warm executable compiled for a
         larger pattern-batch serves a smaller bucket by padding with more
         scratch patterns, so bucket-membership shrink never compiles.
+        O(candidate batches) via the family index — not O(cache size).
+        Pure lookup; the serving path (``serve_poly``) counts
+        ``batch_hits`` at actual serve time.
         """
         with self._lock:
-            best = None
-            for k in self._entries:
-                if (k.batch >= key.batch
-                        and dataclasses.replace(k, batch=key.batch) == key
-                        and (best is None or k.batch < best.batch)):
-                    best = k
-            return best
+            return self._best_batch_locked(key)
 
     def stats(self) -> CacheStats:
-        """Consistent (hits, misses, size) snapshot."""
+        """Consistent (hits, misses, size, batch_hits) snapshot."""
         with self._lock:
             return CacheStats(hits=self.hits, misses=self.misses,
-                              size=len(self._entries))
+                              size=len(self._entries),
+                              batch_hits=self.batch_hits)
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._families.clear()
+            # orphan in-flight builds: their completion sees its claim is
+            # gone and skips the insert (waiters still receive the fn)
+            self._pending.clear()
             self.hits = 0
             self.misses = 0
+            self.batch_hits = 0
 
 
 _DEFAULT_CACHE = ExecutorCache()
@@ -334,42 +490,117 @@ def _build_executable(backend: str, kind: str, mode: str) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# Sharded executor
+# Placement: the 2-D (pattern-batch x lane) distribution layer
 # ---------------------------------------------------------------------------
 
-class ShardedExecutor:
-    """Builds bucket executables whose pattern-batch dim is mesh-sharded.
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """A device placement of shape ``(batch, lane)`` for G/S executables.
 
-    Wraps a ``(mesh, axis)`` pair.  ``build`` returns the same jitted
-    batched op as the single-device path, but with in/out ``NamedSharding``s
-    (``engine.gs_shardings(batched=True)``) splitting dim 0 — the
-    pattern-batch — over ``axis``: each device executes the full
-    gather/scatter for its slice of the bucket's patterns, so results are
-    bit-identical to the unsharded launch.  ``placement`` feeds the
-    ``ExecKey`` so sharded and unsharded executables never collide in the
-    ``ExecutorCache``.
+    One abstraction serves every distributed path (DESIGN.md §11): the
+    batch axis splits a bucket launch's pattern-batch dim (whole patterns
+    per device — the PR 2 ``ShardedExecutor``), the lane axis splits the
+    flattened lane dim *within* a pattern (the paper's OpenMP-thread dim
+    — ``GSEngine.sharded``), and a 2-D placement composes both.  Either
+    axis may be degenerate (``None``); the axis *rules* live in
+    ``runtime.sharding.gs_specs``, so no sharding policy is duplicated
+    across paths.
+
+    ``placement`` is the canonical string that feeds ``ExecKey`` —
+    batch-only placements keep the PR 2 format (``data=8/8dev``) so warm
+    caches stay warm; 2-D shapes read ``data=4xlane=2/8dev``.
     """
+    mesh: Mesh
+    batch_axis: str | None = "data"
+    lane_axis: str | None = None
 
-    def __init__(self, mesh: Mesh, axis: str = "data"):
-        if axis not in mesh.axis_names:
-            raise ValueError(f"mesh has no axis {axis!r} "
-                             f"(axes: {mesh.axis_names})")
-        self.mesh = mesh
-        self.axis = axis
+    def __post_init__(self):
+        if self.batch_axis is None and self.lane_axis is None:
+            raise ValueError("placement needs at least one mesh axis")
+        if self.batch_axis == self.lane_axis:
+            raise ValueError(f"batch and lane axes must differ, both "
+                             f"{self.batch_axis!r}")
+        for ax in (self.batch_axis, self.lane_axis):
+            if ax is not None and ax not in self.mesh.axis_names:
+                raise ValueError(f"mesh has no axis {ax!r} "
+                                 f"(axes: {self.mesh.axis_names})")
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def create(shape, *, batch_axis: str = "data",
+               lane_axis: str = "lane") -> "Placement":
+        """Build a placement (and its mesh) from a shape: an int ``N``
+        (batch-only over N devices) or a ``(b, l)`` tuple.  Degenerate
+        tuple dims collapse to 1-D meshes, so ``(8, 1)`` and ``8`` give
+        the SAME canonical placement (and hence the same ``ExecKey``
+        executables), and ``(1, 8)`` is lane-only over 8 devices.
+        """
+        if isinstance(shape, int):
+            shape = (shape,)
+        shape = tuple(int(s) for s in shape)
+        if not 1 <= len(shape) <= 2 or any(s < 1 for s in shape):
+            raise ValueError(f"placement shape must be N or (b, l) with "
+                             f"b, l >= 1, got {shape}")
+        b, l = shape[0], shape[1] if len(shape) == 2 else 1
+        n_dev = len(jax.devices())
+        if b * l > n_dev:
+            raise ValueError(
+                f"placement {b}x{l} needs {b * l} devices, have {n_dev} "
+                f"(set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{b * l} to fake devices on CPU)")
+        if l == 1:
+            return Placement(jax.make_mesh((b,), (batch_axis,)),
+                             batch_axis=batch_axis, lane_axis=None)
+        if b == 1:
+            return Placement(jax.make_mesh((l,), (lane_axis,)),
+                             batch_axis=None, lane_axis=lane_axis)
+        return Placement(jax.make_mesh((b, l), (batch_axis, lane_axis)),
+                         batch_axis=batch_axis, lane_axis=lane_axis)
+
+    @staticmethod
+    def from_mesh(mesh: Mesh, *, batch_axis: str | None = None,
+                  lane_axis: str | None = None) -> "Placement":
+        """Wrap an existing mesh; name which axes play which role."""
+        return Placement(mesh, batch_axis=batch_axis, lane_axis=lane_axis)
+
+    # -- geometry ------------------------------------------------------------
+    @property
+    def batch_shards(self) -> int:
+        return self.mesh.shape[self.batch_axis] if self.batch_axis else 1
 
     @property
-    def n_shards(self) -> int:
-        return self.mesh.shape[self.axis]
+    def lane_shards(self) -> int:
+        return self.mesh.shape[self.lane_axis] if self.lane_axis else 1
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        """(batch_shards, lane_shards) — feeds pad_batch/pad_lanes."""
+        return self.batch_shards, self.lane_shards
 
     @property
     def placement(self) -> str:
-        return (f"{self.axis}={self.n_shards}"
-                f"/{len(self.mesh.devices.flat)}dev")
+        """Canonical ``ExecKey`` string; 1-D batch keeps the PR 2 form."""
+        ndev = len(self.mesh.devices.flat)
+        if self.lane_axis is None:
+            return f"{self.batch_axis}={self.batch_shards}/{ndev}dev"
+        if self.batch_axis is None:
+            return f"lane:{self.lane_axis}={self.lane_shards}/{ndev}dev"
+        return (f"{self.batch_axis}={self.batch_shards}"
+                f"x{self.lane_axis}={self.lane_shards}/{ndev}dev")
 
-    def shardings(self, kind: str):
-        return gs_shardings(self.mesh, self.axis, kind, batched=True)
+    # -- executables ---------------------------------------------------------
+    def shardings(self, kind: str, *, batched: bool = True):
+        """(in_shardings, out_sharding) on this placement's mesh."""
+        from repro.runtime.sharding import gs_specs, named_shardings
+        in_specs, out_spec = gs_specs(kind, batched=batched,
+                                      batch_axis=self.batch_axis,
+                                      lane_axis=self.lane_axis)
+        in_sh = named_shardings(self.mesh, *in_specs)
+        (out_sh,) = named_shardings(self.mesh, out_spec)
+        return in_sh, out_sh
 
     def build(self, backend: str, kind: str, mode: str) -> Callable:
+        """Jit the batched bucket op with this placement's shardings."""
         in_sh, out_sh = self.shardings(kind)
         return jax.jit(_raw_batched_fn(backend, kind, mode),
                        in_shardings=in_sh, out_shardings=out_sh)
@@ -384,30 +615,64 @@ class ShardedExecutor:
         return tuple(jax.device_put(a, s) for a, s in zip(args, in_sh))
 
 
+def ShardedExecutor(mesh: Mesh, axis: str = "data") -> Placement:
+    """Legacy PR 2 constructor: a batch-only (1-D) placement over ``axis``.
+
+    Kept as a shim so existing callers/tests keep working; the placement
+    layer (``Placement``) is the real implementation.
+    """
+    return Placement(mesh, batch_axis=axis, lane_axis=None)
+
+
+def as_placement(mesh, mesh_axis: str = "data") -> Placement | None:
+    """Normalize every accepted ``mesh=`` form to a Placement (or None).
+
+    ``None``/``0``/empty -> None; a ``Placement`` passes through; a raw
+    ``Mesh`` becomes batch-only over ``mesh_axis`` (the pre-placement
+    behavior); an int ``N`` or a ``(b, l)`` tuple goes through
+    ``Placement.create`` (which validates the device count).
+    """
+    if mesh is None or isinstance(mesh, Placement):
+        return mesh
+    if isinstance(mesh, Mesh):
+        return Placement(mesh, batch_axis=mesh_axis, lane_axis=None)
+    if isinstance(mesh, int):
+        return Placement.create(mesh, batch_axis=mesh_axis) if mesh else None
+    shape = tuple(mesh)
+    if not shape:
+        return None
+    return Placement.create(shape, batch_axis=mesh_axis)
+
+
 def _bucket_executable(cache: ExecutorCache, backend: str, spec: BucketSpec,
                        dtype, row_width: int, mode: str, n_members: int,
-                       sharder: ShardedExecutor | None
-                       ) -> tuple[Callable, int]:
-    """Fetch (or compile) a bucket executable; returns (fn, batch).
+                       placement: Placement | None
+                       ) -> tuple[Callable, int, int]:
+    """Fetch (or compile) a bucket executable; returns (fn, batch, lanes).
 
     ``batch`` is the pattern-batch dim the executable was traced for —
     ``pad_batch`` of the member count, or the smallest warm executable's
-    larger batch when one exists (``ExecutorCache.best_batch``); callers
-    must assemble the bucket at exactly that batch.
+    larger batch when one exists (``ExecutorCache.serve_poly``); callers
+    must assemble the bucket at exactly that batch.  ``lanes`` is the
+    launched lane dim — ``pad_lanes`` of the bucket's padded idx_len over
+    the placement's lane axis.  Both are pure functions of the ``ExecKey``
+    fields (``lanes`` of idx_len + placement), so one cached executable
+    still holds exactly one trace and ``misses`` stays an exact compile
+    count.
     """
+    b_shards, l_shards = placement.grid if placement else (1, 1)
     key = ExecKey(backend=backend, kind=spec.kind, idx_len=spec.idx_len,
                   footprint=spec.footprint, dtype=jnp.dtype(dtype).name,
                   row_width=row_width,
                   mode=mode if spec.kind == "scatter" else "",
-                  batch=pad_batch(n_members,
-                                  sharder.n_shards if sharder else 1),
-                  placement=sharder.placement if sharder else "")
-    key = cache.best_batch(key) or key
-    if sharder is not None:
-        builder = lambda: sharder.build(backend, spec.kind, key.mode)
+                  batch=pad_batch(n_members, b_shards),
+                  placement=placement.placement if placement else "")
+    if placement is not None:
+        builder = lambda: placement.build(backend, spec.kind, key.mode)
     else:
         builder = lambda: _build_executable(backend, spec.kind, key.mode)
-    return cache.get(key, builder), key.batch
+    fn, served = cache.serve_poly(key, builder)
+    return fn, served.batch, pad_lanes(spec.idx_len, l_shards)
 
 
 # ---------------------------------------------------------------------------
@@ -416,7 +681,7 @@ def _bucket_executable(cache: ExecutorCache, backend: str, spec: BucketSpec,
 
 def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
                      seed: int, batch: int | None = None,
-                     mode: str = "store"):
+                     mode: str = "store", lanes: int | None = None):
     """Stack a bucket's patterns into batched device buffers.
 
     Returns (args, real_lanes) where args feeds the bucket executable and
@@ -424,7 +689,11 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
     the scratch row every padded lane points at.  ``batch`` (>= member
     count; default ``pad_batch``) sets the padded pattern-batch dim: rows
     past the member count are scratch patterns — all-scratch indices, zero
-    tables/payloads — whose outputs the callers drop.
+    tables/payloads — whose outputs the callers drop.  ``lanes`` (>= the
+    bucket's idx_len; default exactly it) sets the launched lane dim —
+    ``pad_lanes`` hands a lane-sharded launch a shard-multiple here, and
+    the extra columns are ordinary padding lanes (scratch-row indices,
+    zero payloads).
 
     Scatter buckets also carry the (B_pad, N_pad) last-write-wins keep
     mask for store mode: real lanes reuse the per-pattern mask
@@ -441,7 +710,10 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
     b_pad = pad_batch(nb) if batch is None else batch
     if b_pad < nb:
         raise ValueError(f"batch {b_pad} < member count {nb}")
-    n_pad, f_pad, r = spec.idx_len, spec.footprint, row_width
+    n_pad = spec.idx_len if lanes is None else lanes
+    if n_pad < spec.idx_len:
+        raise ValueError(f"lanes {n_pad} < bucket idx_len {spec.idx_len}")
+    f_pad, r = spec.footprint, row_width
     idx_b = np.full((b_pad, n_pad), f_pad, np.int32)       # pad -> scratch
     table_b = (np.zeros((b_pad, f_pad + 1, r), np.float32)
                if spec.kind == "gather" else None)
@@ -477,26 +749,29 @@ def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
                    dtype=jnp.float32, row_width: int = 1,
                    mode: str = "store", seed: int = 0,
                    cache: ExecutorCache | None = None,
-                   mesh: Mesh | None = None,
+                   mesh=None,
                    mesh_axis: str = "data") -> list[np.ndarray]:
     """Run one bucket once and return per-member un-padded outputs.
 
     Gathers give member i its (count*index_len, R) rows; scatters give the
-    (footprint, R) result table (scratch row trimmed).  With ``mesh`` the
-    launch's pattern-batch dim is split over ``mesh_axis``.
+    (footprint, R) result table (scratch row trimmed).  ``mesh`` accepts
+    any ``as_placement`` form (int, ``(b, l)`` tuple, Mesh, Placement):
+    the batch axis splits the launch's pattern-batch dim, the lane axis
+    the lane dim.
     """
     if mode not in SCATTER_MODES:
         raise ValueError(f"unknown mode {mode!r}; "
                          f"expected one of {SCATTER_MODES}")
     cache = cache if cache is not None else default_cache()
-    sharder = ShardedExecutor(mesh, mesh_axis) if mesh is not None else None
+    placement = as_placement(mesh, mesh_axis)
     spec = bucket.spec
-    fn, batch = _bucket_executable(cache, backend, spec, dtype, row_width,
-                                   mode, len(bucket.members), sharder)
+    fn, batch, lanes = _bucket_executable(cache, backend, spec, dtype,
+                                          row_width, mode,
+                                          len(bucket.members), placement)
     args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width, seed,
-                                        batch=batch, mode=mode)
-    if sharder is not None:
-        args = sharder.place(spec.kind, args)
+                                        batch=batch, mode=mode, lanes=lanes)
+    if placement is not None:
+        args = placement.place(spec.kind, args)
     out = np.asarray(jax.block_until_ready(fn(*args)))
     trimmed = []
     for b, pos in enumerate(bucket.members):
@@ -511,7 +786,7 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
              row_width: int = 1, runs: int = 10, mode: str = "store",
              seed: int = 0,
              cache: ExecutorCache | None = None,
-             mesh: Mesh | None = None,
+             mesh=None,
              mesh_axis: str = "data",
              digest: bool = False) -> list[RunResult]:
     """Execute a SuitePlan with paper-style timing (min over ``runs``).
@@ -520,10 +795,12 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
     Wall time of a bucket launch is attributed to members proportionally
     to their real (un-padded) lanes.
 
-    With ``mesh``, every bucket launch's pattern-batch dim is split over
-    ``mesh_axis`` (ShardedExecutor) — the multi-device suite regime.
+    With ``mesh`` — any ``as_placement`` form: an int N (batch-only), a
+    ``(b, l)`` tuple, a raw Mesh (batch-only over ``mesh_axis``), or a
+    ``Placement`` — every bucket launch is placed on the 2-D
+    (pattern-batch x lane) mesh: the multi-device suite regime.
     Reported bandwidth stays the paper's useful-bytes formula over the
-    *aggregate* launch: divide by the shard count for per-device numbers.
+    *aggregate* launch: divide by the device count for per-device numbers.
 
     With ``digest``, each RunResult carries the sha256 of its trimmed
     computed output (``out_digest``).  The output is a pure function of
@@ -539,27 +816,28 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
                          f"expected one of {SCATTER_MODES}")
     dtype = jnp.dtype(dtype or jnp.float32)
     cache = cache if cache is not None else default_cache()
-    sharder = ShardedExecutor(mesh, mesh_axis) if mesh is not None else None
+    placement = as_placement(mesh, mesh_axis)
     elem_bytes = dtype.itemsize * row_width
     results: list[RunResult | None] = [None] * len(plan.patterns)
 
     for bucket in plan.buckets:
         spec = bucket.spec
-        fn, batch = _bucket_executable(cache, backend, spec, dtype,
-                                       row_width, mode, len(bucket.members),
-                                       sharder)
+        fn, batch, lanes = _bucket_executable(cache, backend, spec, dtype,
+                                              row_width, mode,
+                                              len(bucket.members), placement)
         args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width,
-                                            seed, batch=batch, mode=mode)
-        if sharder is not None:
-            args = sharder.place(spec.kind, args)
+                                            seed, batch=batch, mode=mode,
+                                            lanes=lanes)
+        if placement is not None:
+            args = placement.place(spec.kind, args)
         if spec.kind == "scatter":
             dst, idx, vals, keep = args
             jax.block_until_ready(fn(dst, idx, vals, keep))  # compile & warm
             times = []
             for _ in range(runs):
                 d = jnp.zeros_like(dst)
-                if sharder is not None:
-                    d = sharder.place(spec.kind, (d,))[0]
+                if placement is not None:
+                    d = placement.place(spec.kind, (d,))[0]
                 jax.block_until_ready(d)
                 t0 = time.perf_counter()
                 out = fn(d, idx, vals, keep)
@@ -579,9 +857,10 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
         # attribution denominator counts scratch batch rows' lanes too, so
         # a member's reported bandwidth does not depend on how much batch
         # padding the serving executable carried (best_batch may hand a
-        # small bucket a larger warm executable)
+        # small bucket a larger warm executable); scratch rows carry the
+        # LAUNCHED lane count (lane-axis padding included)
         total_lanes = (sum(real_lanes)
-                       + (batch - len(bucket.members)) * spec.idx_len)
+                       + (batch - len(bucket.members)) * lanes)
         for b, pos in enumerate(bucket.members):
             p = plan.patterns[pos]
             t_i = t_bucket * real_lanes[b] / total_lanes

@@ -14,8 +14,10 @@ suite compiles #buckets executables instead of N and repeated suite runs
 compile nothing.  See the DESIGN NOTE in plan.py for the full plan ->
 compile -> execute design and the padding/scratch-row semantics.
 ``batch=False`` restores the original one-GSEngine-per-pattern path.
-``mesh=``/``mesh_axis=`` split every bucket launch's pattern-batch dim
-over a mesh axis (plan.ShardedExecutor) for multi-device suite runs.
+``mesh=`` places every bucket launch on a 2-D (pattern-batch x lane)
+device mesh (plan.Placement, DESIGN.md §11) for multi-device suite
+runs; it accepts an int N (batch-only), a ``(b, l)`` tuple, a raw Mesh
+(batch-only over ``mesh_axis``), or a ``Placement``.
 ``mode=`` selects scatter write semantics ("store" last-write-wins —
 the paper's default — or "add" accumulation) on every path.
 """
@@ -28,7 +30,7 @@ import numpy as np
 
 from .engine import SCATTER_MODES, GSEngine, RunResult
 from .pattern import Pattern, load_suite, make_pattern
-from .plan import ExecutorCache, SuitePlan, run_plan
+from .plan import ExecutorCache, SuitePlan, as_placement, run_plan
 
 
 # metric aliases -> the RunResult.row() column they select
@@ -146,6 +148,10 @@ def run_suite(patterns: list[Pattern], *, backend: str = "xla",
     if mode not in SCATTER_MODES:           # mirror the metric validation
         raise ValueError(f"unknown mode {mode!r}; "
                          f"expected one of {SCATTER_MODES}")
+    # normalize every accepted mesh= form (int, (b, l) tuple, Mesh,
+    # Placement) up front so shape/device-count errors surface here, with
+    # this function's signature in the traceback, not mid-plan
+    mesh = as_placement(mesh, mesh_axis)
     if mesh is not None and not batch:
         raise ValueError("mesh execution requires the batched planner "
                          "(batch=True)")

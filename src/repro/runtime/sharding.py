@@ -106,11 +106,75 @@ def logical_to_spec(axes: Sequence[str | None], shape: Sequence[int],
 def named_shardings(mesh: Mesh, *specs: P) -> tuple[NamedSharding, ...]:
     """PartitionSpecs -> NamedShardings on ``mesh``, one per spec.
 
-    The single constructor both the engine (``GSEngine.sharded``) and the
-    suite planner (``plan.ShardedExecutor``) use to place gather/scatter
-    operands, so placement policy lives in one spot.
+    The single constructor the placement layer (``plan.Placement``) uses
+    to place gather/scatter operands, so placement policy lives in one
+    spot.
     """
     return tuple(NamedSharding(mesh, s) for s in specs)
+
+
+# -- gather/scatter placement rules (plan.Placement; DESIGN.md §11) ---------
+
+def _gs_spec(*axes: str | None) -> P:
+    """PartitionSpec from per-dim mesh axes, trailing Nones stripped (so a
+    degenerate axis yields exactly the spec the 1-D code paths used)."""
+    entries = list(axes)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def gs_specs(kind: str, *, batched: bool, batch_axis: str | None = None,
+             lane_axis: str | None = None) -> tuple[tuple[P, ...], P]:
+    """(in_specs, out_spec) for a gather/scatter executable on a 2-D
+    ``(batch, lane)`` placement — the single axis-semantics rule table
+    behind ``plan.Placement`` (and therefore behind both
+    ``GSEngine.sharded`` and the suite planner's sharded bucket launches).
+    Either axis may be ``None`` (degenerate), which recovers the 1-D
+    specs exactly.
+
+    Batched operands (one bucket launch, ``B`` patterns): dim 0 is the
+    pattern-batch dim and shards over ``batch_axis``; the flattened lane
+    dim (dim 1 of idx/vals/keep, dim 1 of the gather output) shards over
+    ``lane_axis``.  Tables stay *replicated along the lane axis* — every
+    lane shard may read (gather) or write (scatter) any row of its
+    pattern's table, so the gather src is ``P(batch)`` and the scatter
+    dst/out are ``P(batch)``: within one pattern, cross-lane-shard row
+    traffic is the partitioner's job, while a pattern still never
+    straddles batch shards.
+
+    Unbatched operands (one pattern, ``GSEngine.sharded``): the lane dim
+    is dim 0 of idx/vals/out; the table is fully replicated and a
+    scatter's result replicated (any shard, any row) — the paper's
+    OpenMP-thread split.  ``batch_axis`` is meaningless here (there is no
+    batch dim) and must be ``None``.
+
+    Scatter executables take four operands (dst, idx, vals, keep): the
+    host-precomputed last-write-wins keep mask rides with the indices,
+    which is also why lane-sharded store scatter stays correct — the mask
+    is computed globally over the whole padded lane buffer before the
+    split, so across all lane shards at most one write per row survives
+    (DESIGN.md §11).
+    """
+    if kind not in ("gather", "scatter"):
+        raise ValueError(f"kind must be gather|scatter, got {kind!r}")
+    b, l = batch_axis, lane_axis
+    if batched:
+        if kind == "gather":
+            # src (B,F,R), idx (B,N) -> out (B,N,R)
+            return (_gs_spec(b), _gs_spec(b, l)), _gs_spec(b, l)
+        # dst (B,F,R), idx (B,N), vals (B,N,R), keep (B,N) -> out (B,F,R)
+        return ((_gs_spec(b), _gs_spec(b, l), _gs_spec(b, l),
+                 _gs_spec(b, l)), _gs_spec(b))
+    if b is not None:
+        raise ValueError("unbatched executables have no pattern-batch dim "
+                         f"to shard (batch_axis={b!r})")
+    if kind == "gather":
+        # src (F,R) replicated, idx (N,) -> out (N,R)
+        return (_gs_spec(None), _gs_spec(l)), _gs_spec(l)
+    # dst (F,R) replicated, idx/vals/keep lane-sharded -> out replicated
+    return ((_gs_spec(None), _gs_spec(l), _gs_spec(l), _gs_spec(l)),
+            _gs_spec(None))
 
 
 # -- context ----------------------------------------------------------------

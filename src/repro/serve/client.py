@@ -13,7 +13,7 @@ Library::
 CLI::
 
     PYTHONPATH=src python -m repro.serve.client \
-        --url http://127.0.0.1:8089 --json suites/demo.json [--mesh 8]
+        --url http://127.0.0.1:8089 --json suites/demo.json [--mesh 8|4x2]
 """
 from __future__ import annotations
 
@@ -22,7 +22,7 @@ import json
 import urllib.error
 import urllib.request
 
-from .schema import SuiteRequest
+from .schema import SuiteRequest, parse_mesh
 
 
 class ServerError(RuntimeError):
@@ -94,7 +94,9 @@ def main(argv=None) -> None:
     ap.add_argument("-b", "--backend", default=None)
     ap.add_argument("-r", "--runs", type=int, default=None)
     ap.add_argument("--mode", default=None, help="scatter mode store|add")
-    ap.add_argument("--mesh", type=int, default=None)
+    ap.add_argument("--mesh", type=parse_mesh, default=None, metavar="N|BxL",
+                    help="shard over N devices (batch-only) or a BxL "
+                         "(batch x lane) 2-D placement, e.g. 4x2")
     ap.add_argument("--row-width", type=int, default=None)
     ap.add_argument("--metric", default=None,
                     help="gbs column: measured|modeled")

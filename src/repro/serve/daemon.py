@@ -15,7 +15,9 @@ Endpoints (all JSON; stdlib ``http.server``, no dependencies):
 
     POST /run      run a suite (schema.SuiteRequest; bare ``suites/*.json``
                    lists work as-is).  ``mesh: N`` in the request shards
-                   every bucket launch over N devices (plan.ShardedExecutor).
+                   every bucket launch's pattern-batch dim over N devices;
+                   ``mesh: [b, l]`` places launches on a 2-D (batch x
+                   lane) mesh (plan.Placement, DESIGN.md §11).
     GET  /healthz  liveness + device/backend inventory + lifetime stats
     GET  /cache    lifetime ExecutorCache counters
 
@@ -73,8 +75,8 @@ class SpatterDaemon:
         self.started_at = time.time()
         self.n_requests = 0
         self._run_lock = threading.Lock()
-        self._memo_lock = threading.Lock()     # guards _meshes mutation
-        self._meshes: dict[tuple[int, str], object] = {}
+        self._memo_lock = threading.Lock()     # guards _placements mutation
+        self._placements: dict[tuple, object] = {}   # (shape, axis) -> Placement
         self._stream_refs: dict[tuple, object] = {}   # memoized STREAM runs
         self._thread: threading.Thread | None = None
         self._httpd = ThreadingHTTPServer((host, port), _make_handler(self))
@@ -117,26 +119,32 @@ class SpatterDaemon:
         self.stop()
 
     # -- request execution ---------------------------------------------------
-    def _mesh(self, n: int, axis: str):
-        """Mesh per (size, axis), memoized: the placement string — not the
-        Mesh object's identity — keys the ExecutorCache, but reusing the
-        object keeps sharding construction out of repeat requests.
+    def _placement(self, mesh, axis: str):
+        """Placement per (shape, batch axis), memoized by shape tuple: the
+        canonical placement string — not the Mesh object's identity — keys
+        the ExecutorCache, but reusing the object keeps mesh/sharding
+        construction out of repeat requests.  ``mesh`` is the validated
+        wire value: an int N (batch-only) or a (b, l) tuple (2-D).
         Called OUTSIDE the run lock so an oversized mesh fails fast even
         while a long run is in flight; _memo_lock covers the check +
         bounded FIFO eviction + insert (concurrent handler threads)."""
         import jax
-        key = (n, axis)
+        from repro.core.plan import Placement
+        shape = (mesh, 1) if isinstance(mesh, int) else tuple(mesh)
+        key = (shape, axis)
         with self._memo_lock:
-            if key not in self._meshes:
+            if key not in self._placements:
                 n_dev = len(jax.devices())
-                if n > n_dev:
+                need = shape[0] * shape[1]
+                if need > n_dev:
                     raise ValueError(
-                        f"mesh={n} > {n_dev} visible devices (start the "
-                        f"daemon under XLA_FLAGS=--xla_force_host_platform_"
-                        f"device_count={n} to fake devices on CPU)")
-                _bounded_put(self._meshes, key,
-                             jax.make_mesh((n,), (axis,)))
-            return self._meshes[key]
+                        f"mesh={mesh} needs {need} devices, {n_dev} visible "
+                        f"(start the daemon under XLA_FLAGS=--xla_force_"
+                        f"host_platform_device_count={need} to fake devices "
+                        f"on CPU)")
+                _bounded_put(self._placements, key,
+                             Placement.create(shape, batch_axis=axis))
+            return self._placements[key]
 
     def run_request(self, req: SuiteRequest) -> dict:
         """Execute one validated request; returns the response document.
@@ -148,7 +156,7 @@ class SpatterDaemon:
         # request-shaped failures (bad patterns, oversized mesh) resolve
         # BEFORE the run lock: a 400 never queues behind an in-flight run
         patterns = req.build_patterns()
-        mesh = self._mesh(req.mesh, req.mesh_axis) if req.mesh else None
+        mesh = self._placement(req.mesh, req.mesh_axis) if req.mesh else None
         with self._run_lock:
             # timed inside the lock: elapsed_s is THIS request's
             # execution, not time spent queued behind other requests
@@ -193,7 +201,8 @@ class SpatterDaemon:
                 # lower bound when best_batch serves a larger warm
                 # executable (member bandwidth attribution already uses
                 # the actual launched batch, plan.run_plan)
-                "pad_waste": stats.plan.pad_waste(req.mesh or 1),
+                "pad_waste": stats.plan.pad_waste(
+                    *(mesh.grid if mesh is not None else (1, 1))),
             },
             "elapsed_s": time.perf_counter() - t0,
         }

@@ -11,7 +11,10 @@ bare suite format ``load_suite`` already reads — a JSON list of
      "mode": "store",              # scatter semantics: "store" | "add"
      "metric": "measured",         # table's uniform gbs column
      "row_width": 1,
-     "mesh": 0,                    # >0: shard bucket launches over N devices
+     "mesh": 0,                    # N: shard bucket launches over N devices
+                                   # (pattern-batch axis); [b, l]: a 2-D
+                                   # (batch x lane) placement over b*l
+                                   # devices (plan.Placement, DESIGN.md §11)
      "mesh_axis": "data",
      "seed": 0,                    # host-buffer RNG seed
      "stream_r": false,            # paper Eq. 1 vs a STREAM-like reference
@@ -45,6 +48,9 @@ import json
 MAX_PATTERN_LANES = 1 << 28
 MAX_SUITE_LANES = MAX_PATTERN_LANES
 MAX_RUNS = 1000
+# a mesh dim beyond this is a typo, not a machine (the daemon separately
+# checks the product against the actually-visible device count)
+MAX_MESH_DIM = 1 << 16
 
 # wire-level choice sets (duplicated from core to stay import-light;
 # tests/test_serve.py asserts they match the real definitions)
@@ -52,6 +58,23 @@ WIRE_BACKENDS = ("xla", "onehot", "scalar", "pallas")
 WIRE_MODES = ("store", "add")
 WIRE_METRICS = ("measured", "measured_cpu_gbs", "modeled",
                 "modeled_v5e_gbs")
+
+
+def parse_mesh(spec: str) -> "int | tuple[int, int]":
+    """CLI mesh spec -> wire value: ``"8"`` -> 8, ``"4x2"`` -> (4, 2).
+
+    Stays stdlib-only (the jax-free client parses ``--mesh`` with this);
+    full validation happens in ``SuiteRequest`` like every other field.
+    """
+    s = spec.strip().lower()
+    try:
+        if "x" in s:
+            b, l = s.split("x")
+            return int(b), int(l)
+        return int(s)
+    except ValueError:
+        raise ValueError(f"mesh must be N or BxL (e.g. 8 or 4x2), "
+                         f"got {spec!r}") from None
 
 
 # the declared index-buffer length is bounded much tighter than lanes:
@@ -103,7 +126,8 @@ class SuiteRequest:
     mode: str = "store"
     metric: str = "measured"
     row_width: int = 1
-    mesh: int = 0
+    mesh: int | list = 0        # N (batch-only) or [b, l] 2-D placement;
+                                # normalized to int | tuple[int, int]
     mesh_axis: str = "data"
     seed: int = 0
     stream_r: bool = False
@@ -150,9 +174,23 @@ class SuiteRequest:
             raise ValueError(f"stream_n must be an int in "
                              f"[8, {MAX_PATTERN_LANES}], "
                              f"got {self.stream_n!r}")
-        if not isinstance(self.mesh, int) or isinstance(self.mesh, bool) \
-                or self.mesh < 0:
-            raise ValueError(f"mesh must be an int >= 0, got {self.mesh!r}")
+        # mesh: N devices on the pattern-batch axis, or [b, l] for a 2-D
+        # (batch x lane) placement.  Validated HERE — before the daemon's
+        # run lock, like everything else — and the daemon additionally
+        # checks b*l against the visible device count outside the lock.
+        if isinstance(self.mesh, list):
+            object.__setattr__(self, "mesh", tuple(self.mesh))
+        mesh = self.mesh
+        mesh_ok = (isinstance(mesh, int) and not isinstance(mesh, bool)
+                   and 0 <= mesh <= MAX_MESH_DIM)
+        if isinstance(mesh, tuple):
+            mesh_ok = (len(mesh) == 2 and all(
+                isinstance(s, int) and not isinstance(s, bool)
+                and 1 <= s <= MAX_MESH_DIM for s in mesh))
+        if not mesh_ok:
+            raise ValueError(f"mesh must be an int >= 0 or a [batch, lane] "
+                             f"pair of ints >= 1 (dims <= {MAX_MESH_DIM}), "
+                             f"got {self.mesh!r}")
         if not isinstance(self.seed, int) or isinstance(self.seed, bool) \
                 or self.seed < 0:
             raise ValueError(f"seed must be an int >= 0, got {self.seed!r}")
@@ -184,11 +222,13 @@ class SuiteRequest:
         for name, ty in _OPTION_FIELDS.items():
             if name in doc:
                 v = doc[name]
+                ty_name = (ty.__name__ if isinstance(ty, type)
+                           else " | ".join(t.__name__ for t in ty))
                 # bool is an int subclass: keep the check strict both ways
-                if ty is int and isinstance(v, bool):
-                    raise ValueError(f"{name} must be an int, got {v!r}")
+                if ty is not bool and isinstance(v, bool):
+                    raise ValueError(f"{name} must be {ty_name}, got {v!r}")
                 if not isinstance(v, ty):
-                    raise ValueError(f"{name} must be {ty.__name__}, "
+                    raise ValueError(f"{name} must be {ty_name}, "
                                      f"got {v!r}")
                 kw[name] = v
         pats = doc["patterns"]
@@ -199,6 +239,8 @@ class SuiteRequest:
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["patterns"] = list(d["patterns"])
+        if isinstance(d["mesh"], tuple):        # wire form is a JSON list
+            d["mesh"] = list(d["mesh"])
         return d
 
     def build_patterns(self) -> list[Pattern]:
@@ -250,7 +292,8 @@ class SuiteRequest:
 # envelope option keys -> wire type, derived from the dataclass itself so
 # the two can never drift (a new SuiteRequest field is automatically
 # accepted by from_json); patterns is handled separately
-_WIRE_TYPES = {"str": str, "int": int, "bool": bool}
+_WIRE_TYPES = {"str": str, "int": int, "bool": bool,
+               "int | list": (int, list, tuple)}
 _OPTION_FIELDS: dict[str, type] = {
     f.name: _WIRE_TYPES[f.type]
     for f in dataclasses.fields(SuiteRequest) if f.name != "patterns"

@@ -138,3 +138,37 @@ def test_pad_batch_bracket_stability(nb1, nb2, n_shards):
     from repro.core.plan import next_pow2, pad_batch
     if next_pow2(nb1) == next_pow2(nb2):
         assert pad_batch(nb1, n_shards) == pad_batch(nb2, n_shards)
+
+
+# ---------------------------------------------------------------------------
+# pad_lanes contract (plan.py): the lane-axis twin of pad_batch, with the
+# SAME shard-multiple >= pow-2-bracket rule on the launched lane dim — the
+# 2-D placement layer pads both axes with one contract (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 1 << 18), st.integers(1, 64))
+def test_pad_lanes_contract(n, n_shards):
+    from repro.core.plan import next_pow2, pad_lanes
+    lanes = pad_lanes(n, n_shards)
+    bracket = next_pow2(n)
+    assert lanes >= n                       # fits every real lane
+    assert lanes % n_shards == 0            # even lane-axis split
+    assert lanes >= bracket                 # never below the pow-2 bracket
+    assert lanes - n_shards < bracket       # minimal such multiple
+    # unsharded: exactly the pow-2 bracket — so a bucket's already-pow2
+    # idx_len is the identity case and single-device launches are
+    # unchanged by the placement layer
+    assert pad_lanes(n) == bracket
+    assert pad_lanes(bracket) == bracket
+    # pow-2 lane-shard counts keep pow-2 lane dims
+    if n_shards & (n_shards - 1) == 0:
+        assert lanes == max(bracket, n_shards)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 1 << 16), st.integers(1, 1 << 16), st.integers(1, 64))
+def test_pad_lanes_bracket_stability(n1, n2, n_shards):
+    from repro.core.plan import next_pow2, pad_lanes
+    if next_pow2(n1) == next_pow2(n2):
+        assert pad_lanes(n1, n_shards) == pad_lanes(n2, n_shards)

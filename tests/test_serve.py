@@ -58,6 +58,28 @@ def test_schema_envelope_roundtrip():
     assert SuiteRequest.from_json(req.to_json()) == req
 
 
+def test_schema_mesh_accepts_2d_shapes():
+    # the 2-D placement wire form: [batch, lane] (DESIGN.md §11);
+    # normalized to a tuple in the dataclass, back to a list on the wire
+    req = SuiteRequest.from_json({"patterns": SUITE, "mesh": [4, 2]})
+    assert req.mesh == (4, 2)
+    assert req.to_json()["mesh"] == [4, 2]
+    assert SuiteRequest.from_json(req.to_json()) == req
+    # client-side kwargs may hand a tuple directly
+    assert SuiteRequest.from_json(
+        {"patterns": SUITE, "mesh": (4, 2)}).mesh == (4, 2)
+
+
+def test_parse_mesh():
+    from repro.serve.schema import parse_mesh
+    assert parse_mesh("8") == 8
+    assert parse_mesh("4x2") == (4, 2)
+    assert parse_mesh(" 2X4 ") == (2, 4)
+    for bad in ("4y2", "x", "4x", "4x2x1", "a"):
+        with pytest.raises(ValueError, match="mesh"):
+            parse_mesh(bad)
+
+
 def test_schema_rejects_bad_requests():
     cases = [
         ([], "at least one pattern"),
@@ -70,6 +92,13 @@ def test_schema_rejects_bad_requests():
         ({"patterns": SUITE, "row_width": 10 ** 6}, "row_width"),
         ({"patterns": SUITE, "mesh": -1}, "mesh"),
         ({"patterns": SUITE, "mesh": True}, "mesh"),
+        ({"patterns": SUITE, "mesh": [4]}, "mesh"),
+        ({"patterns": SUITE, "mesh": [4, 2, 1]}, "mesh"),
+        ({"patterns": SUITE, "mesh": [0, 2]}, "mesh"),
+        ({"patterns": SUITE, "mesh": [True, 2]}, "mesh"),
+        ({"patterns": SUITE, "mesh": ["4", 2]}, "mesh"),
+        ({"patterns": SUITE, "mesh": [1 << 20, 2]}, "mesh"),
+        ({"patterns": SUITE, "mesh": "4x2"}, "mesh"),   # wire form is a list
         ({"patterns": SUITE, "stream_r": 1}, "stream_r"),
         ({"patterns": SUITE, "stream_n": 4}, "stream_n"),
         ({"patterns": SUITE, "stream_n": 2 ** 40}, "stream_n"),
@@ -168,7 +197,8 @@ def test_health_and_cache_endpoints(served):
     h = served.health()
     assert h["ok"] and h["service"] == "spatterd"
     assert h["n_devices"] >= 1 and "xla" in h["backends"]
-    assert served.cache()["cache"] == {"hits": 0, "misses": 0, "size": 0}
+    assert served.cache()["cache"] == {"hits": 0, "misses": 0, "size": 0,
+                                       "batch_hits": 0}
 
 
 def test_second_request_compiles_nothing_and_is_bit_identical(served):
@@ -352,13 +382,22 @@ SHARDED_SERVE = textwrap.dedent("""\
     with SpatterDaemon(port=0, cache=ExecutorCache()) as d:
         c = SpatterClient(d.url)
         base = c.run_suite(SUITE, runs=1)
+        d0 = [t["digest"] for t in base["stats"]["table"]]
         r1 = c.run_suite(SUITE, runs=1, mesh=8)
         r2 = c.run_suite(SUITE, runs=1, mesh=8)
         assert r2["cache"]["misses"] == 0, r2["cache"]
-        d0 = [t["digest"] for t in base["stats"]["table"]]
         d1 = [t["digest"] for t in r1["stats"]["table"]]
         d2 = [t["digest"] for t in r2["stats"]["table"]]
         assert d1 == d2 == d0 and all(d1), (d0, d1, d2)
+        # 2-D placement requests (mesh=[b, l]): distinct executables from
+        # the 1-D path, same bit-identical digests, warm repeat compiles 0
+        m1 = c.run_suite(SUITE, runs=1, mesh=[4, 2])
+        assert m1["cache"]["misses"] > 0, m1["cache"]   # new placement
+        m2 = c.run_suite(SUITE, runs=1, mesh=[4, 2])
+        assert m2["cache"]["misses"] == 0, m2["cache"]
+        e1 = [t["digest"] for t in m1["stats"]["table"]]
+        e2 = [t["digest"] for t in m2["stats"]["table"]]
+        assert e1 == e2 == d0 and all(e1), (d0, e1, e2)
     print("OK")
     """)
 
