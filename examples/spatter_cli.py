@@ -24,6 +24,13 @@ Scatter write semantics: ``--mode store`` (last-write-wins, the paper's
 default) or ``--mode add`` (accumulation), on both single-pattern and
 suite runs.
 
+Static audit (spatterlint, DESIGN.md §12) — check every executable the
+planner would build for a suite WITHOUT running it, plus the serving
+layer's lock-discipline lint; non-zero exit on any violation::
+
+    PYTHONPATH=src python examples/spatter_cli.py --lint suites/demo.json \\
+        [--mesh 4x2] [--lint-out LINT_report.json]
+
 spatterd quickstart (the serving layer, DESIGN.md §10) — one process
 keeps the ExecutorCache warm across requests, so only the FIRST request
 for a suite shape compiles anything:
@@ -83,6 +90,16 @@ def main():
     ap.add_argument("--stream-r", action="store_true",
                     help="suite mode: also time a STREAM-like reference "
                          "and report paper Eq. 1 Pearson's R")
+    ap.add_argument("--lint", default=None, metavar="SUITE",
+                    help="spatterlint: statically audit every executable "
+                         "the planner would build for SUITE (no execution; "
+                         "repro.analysis, DESIGN.md §12) plus the serving-"
+                         "layer concurrency lint; honors --mesh/--backend/"
+                         "--mode/--row-width and exits non-zero on any "
+                         "violation")
+    ap.add_argument("--lint-out", default=None, metavar="FILE",
+                    help="--lint: also write the JSON lint report (the "
+                         "same schema GET /lint serves)")
     ap.add_argument("--serve", action="store_true",
                     help="run spatterd: serve JSON suites over HTTP off "
                          "the warm executor cache (repro.serve)")
@@ -101,6 +118,41 @@ def main():
         return [f"--{n.replace('_', '-')}" for n in names
                 if getattr(args, n) is not None
                 and getattr(args, n) is not False]
+
+    if args.lint is not None:
+        # a static audit executes nothing: run-shaped options are a
+        # contradiction, not something to drop silently
+        bad = _given(("json", "no_batch", "client", "kernel", "pattern",
+                      "delta", "count", "runs", "stream_r", "host",
+                      "port")) + (["--serve"] if args.serve else [])
+        if bad:
+            ap.error(f"{', '.join(bad)}: not applicable to --lint "
+                     f"(static audit; only --mesh/--backend/--mode/"
+                     f"--row-width apply)")
+        from repro.analysis.lint import lint_serve, lint_suite_file
+        from repro.serve.schema import parse_mesh
+        try:
+            mesh = parse_mesh(str(args.mesh)) if args.mesh is not None \
+                else 0
+        except ValueError as e:
+            ap.error(f"--mesh: {e}")
+        backends = (args.backend,) if args.backend else ("xla", "pallas")
+        try:
+            report = lint_serve().merge(lint_suite_file(
+                args.lint, mesh=mesh, backends=backends,
+                mode=args.mode or LOCAL_DEFAULTS["mode"],
+                row_width=args.row_width or LOCAL_DEFAULTS["row_width"]))
+        except (ValueError, OSError) as e:
+            ap.error(f"--lint: {e}")
+        if args.lint_out:
+            report.dump(args.lint_out)
+        print(report.summary())
+        if not report.ok:
+            raise SystemExit(1)
+        return
+
+    if args.lint_out is not None:
+        ap.error("--lint-out requires --lint SUITE")
 
     if args.serve:
         if args.client:

@@ -1,0 +1,48 @@
+"""repro.analysis — spatterlint, the static hot-path auditor.
+
+Walks the closed jaxpr / lowered HLO of every executable the
+``ExecutorCache`` can build — enumerated from a suite x placement matrix
+without running anything — and checks the invariants PRs 1–5 established
+(no sort in the timed region, one pallas_call per bucket, no donation in
+cached executables, placement-string/sharding agreement, ...), plus a
+Python-``ast`` concurrency lint over the serving layer.  See DESIGN.md
+§12 and the rule registry in ``rules.py``.
+
+Three front-ends share one report schema (``report.py``, jax-free):
+
+    spatter --lint SUITE [--mesh BxL]      # CLI, exits non-zero
+    GET /lint                              # daemon: audits the live cache
+    python -m repro.analysis ...           # CI: the full matrix
+
+Exports resolve lazily (PEP 562) like ``repro.serve``: importing
+``repro.analysis.report`` or ``.ast_lint`` alone stays jax-free (pinned
+by a tests/test_lint.py subprocess drift guard).
+"""
+import importlib
+
+_EXPORTS = {
+    "Violation": ".report",
+    "LintReport": ".report",
+    "Rule": ".rules",
+    "RULES": ".rules",
+    "ExecUnit": ".rules",
+    "PlanUnit": ".rules",
+    "ServeUnit": ".rules",
+    "rules_for": ".rules",
+    "run_rules": ".lint",
+    "unit_for": ".lint",
+    "lint_plan": ".lint",
+    "lint_suite_file": ".lint",
+    "lint_cache": ".lint",
+    "lint_serve": ".lint",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    return getattr(importlib.import_module(mod, __name__), name)

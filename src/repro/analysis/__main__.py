@@ -1,0 +1,79 @@
+"""spatterlint matrix runner — ``python -m repro.analysis`` (CI's lint
+job; DESIGN.md §12).
+
+Audits every (suite x placement x backend) cell statically plus the
+serving-layer ast lint, writes one merged JSON report, and exits
+non-zero on any violation::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.analysis \\
+        --suite suites/demo.json --suite suites/apps.json \\
+        --suite suites/widelane.json \\
+        --mesh 1x1 --mesh 8x1 --mesh 4x2 --mesh 1x8 \\
+        --out LINT_report.json
+
+Placement cells that need more devices than are visible are a hard
+error (exit 2), not a skip: CI asserting "matrix clean" must never
+silently audit less than the matrix.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="spatterlint: static audit of planner executables "
+                    "over a suite x placement matrix")
+    ap.add_argument("--suite", action="append", default=[],
+                    metavar="FILE", help="suites/*.json file (repeatable)")
+    ap.add_argument("--mesh", action="append", default=[],
+                    metavar="N|BxL",
+                    help="placement cell, e.g. 1x1, 8x1, 4x2, 1x8 "
+                         "(repeatable; default: single-device only)")
+    ap.add_argument("--backend", action="append", default=[],
+                    choices=["xla", "onehot", "scalar", "pallas"],
+                    help="backend(s) to audit (default: xla + pallas)")
+    ap.add_argument("--mode", default="store", choices=["store", "add"])
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="write the merged JSON lint report here")
+    ap.add_argument("--no-serve-lint", action="store_true",
+                    help="skip the repro/serve ast concurrency lint")
+    args = ap.parse_args(argv)
+    if not args.suite and args.no_serve_lint:
+        ap.error("nothing to lint: pass --suite and/or drop "
+                 "--no-serve-lint")
+
+    from repro.analysis.lint import lint_serve, lint_suite_file
+    from repro.analysis.report import LintReport
+    from repro.serve.schema import parse_mesh
+
+    backends = tuple(args.backend) or ("xla", "pallas")
+    meshes = [parse_mesh(m) for m in args.mesh] or [0]
+
+    report = LintReport()
+    if not args.no_serve_lint:
+        report = report.merge(lint_serve())
+    try:
+        for suite in args.suite:
+            for mesh in meshes:
+                report = report.merge(lint_suite_file(
+                    suite, mesh=mesh, backends=backends, mode=args.mode))
+    except ValueError as e:
+        # an unbuildable cell (mesh > visible devices, bad suite) must
+        # fail the job loudly — a skipped cell is not a clean cell
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.out:
+        report.dump(args.out)
+    print(report.summary())
+    if args.out:
+        print(f"report: {args.out}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,162 @@
+"""spatterlint drivers: enumerate -> audit -> report (DESIGN.md §12).
+
+Entry points:
+
+    lint_plan(patterns, ...)     one suite x placement cell, statically
+    lint_suite_file(path, ...)   a suites/*.json file over backends
+    lint_cache(cache)            a LIVE ExecutorCache's compiled entries
+                                 (what the daemon's GET /lint serves)
+    lint_serve()                 the ast concurrency lint over repro/serve
+    unit_for(fn, args, ...)      wrap an ad-hoc executable for rule checks
+                                 (how tests/test_no_sort.py consumes rules)
+
+Everything here audits without running: executables are traced/lowered
+from abstract avals (``plan.bucket_avals``), never invoked.  The suite
+enumeration goes through ``plan.enumerate_executables``, which shares
+``bucket_key``/``bucket_builder`` with the hot path — what the lint
+checks is by construction what the cache would build.
+"""
+from __future__ import annotations
+
+from .report import LintReport, Violation
+from .rules import ExecUnit, PlanUnit, ServeUnit, rules_for
+
+
+def _rule_names(*scopes) -> tuple[str, ...]:
+    names: list[str] = []
+    for scope in scopes:
+        names.extend(r.name for r in rules_for(scope))
+    return tuple(names)
+
+
+def run_rules(unit: ExecUnit, names=None) -> list[Violation]:
+    """Run executable-scope rules (all by default) on one unit."""
+    out: list[Violation] = []
+    for r in rules_for("executable", names):
+        out.extend(r.check(unit))
+    return out
+
+
+def unit_for(fn, args, *, backend: str, kind: str, mode: str = "",
+             placement: str = "", dtype=None, cached: bool = True,
+             jaxpr=None) -> ExecUnit:
+    """Wrap a concrete executable + example args as an ExecUnit.
+
+    For ad-hoc audits (tests, notebooks) of executables that did not come
+    from the planner: geometry fields the rules don't read are zeroed;
+    ``jaxpr=`` overrides the traced jaxpr (e.g. one captured under
+    ``enable_x64``).
+    """
+    import jax
+
+    from repro.core.plan import ExecKey
+    avals = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args)
+    if dtype is None:
+        dtype = next((str(a.dtype) for a in avals
+                      if "float" in str(a.dtype)), "float32")
+    key = ExecKey(backend=backend, kind=kind, idx_len=0, footprint=0,
+                  dtype=str(dtype), row_width=1, mode=mode, batch=0,
+                  placement=placement)
+    return ExecUnit(key=key, builder=None, avals=avals, fn=fn,
+                    cached=cached, _jaxpr=jaxpr)
+
+
+def lint_plan(patterns, *, backend: str = "xla", mode: str = "store",
+              dtype=None, row_width: int = 1, placement=None,
+              mesh_axis: str = "data", label: str = "",
+              rules=None) -> LintReport:
+    """Audit one suite x placement cell without running anything."""
+    import jax.numpy as jnp
+
+    from repro.core.plan import (SuitePlan, as_placement,
+                                 enumerate_executables)
+    dtype = jnp.dtype(dtype or jnp.float32)
+    placement = as_placement(placement, mesh_axis)
+    grid = placement.grid if placement else (1, 1)
+    place_str = placement.placement if placement else "single"
+    patterns = tuple(patterns)
+    label = label or f"suite[{len(patterns)}]"
+    cell = f"{label} @ {place_str} backend={backend}"
+    plan = SuitePlan.build(patterns)
+
+    def enumerate_again():
+        return enumerate_executables(
+            SuitePlan.build(patterns), backend=backend, dtype=dtype,
+            row_width=row_width, mode=mode, placement=placement)
+
+    violations: list[Violation] = []
+    units = enumerate_again()
+    for key, builder, avals in units:
+        unit = ExecUnit(key=key, builder=builder, avals=avals)
+        violations.extend(run_rules(unit, rules))
+    plan_unit = PlanUnit(plan=plan, grid=grid, label=cell,
+                         enumerate=enumerate_again)
+    for r in rules_for("plan", rules):
+        violations.extend(r.check(plan_unit))
+    return LintReport(
+        violations=violations,
+        n_units=len(units) + 1,                 # buckets + the plan itself
+        rules=_rule_names("executable", "plan"),
+        meta={"cells": [{"cell": cell, "backend": backend,
+                         "placement": place_str,
+                         "n_buckets": plan.n_buckets}]})
+
+
+def lint_suite_file(path: str, *, mesh=None, backends=("xla", "pallas"),
+                    mode: str = "store", row_width: int = 1,
+                    dtype=None, rules=None) -> LintReport:
+    """Audit a suites/*.json file across backends on one placement."""
+    from repro.core import load_suite
+    patterns = load_suite(path)
+    report = LintReport()
+    for backend in backends:
+        report = report.merge(lint_plan(
+            patterns, backend=backend, mode=mode, dtype=dtype,
+            row_width=row_width, placement=mesh, label=path, rules=rules))
+    return report
+
+
+def lint_cache(cache, rules=None) -> LintReport:
+    """Audit every compiled entry of a LIVE ExecutorCache.
+
+    Launch avals are reconstructed from each ExecKey alone
+    (``placement_grid`` + ``bucket_avals``), so the audit holds exactly
+    the information the key promises — if the key lies about its
+    executable, a rule fires.  Read-only: ``cache.entries()`` perturbs
+    neither counters nor LRU order.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.plan import (BucketSpec, bucket_avals, pad_lanes,
+                                 placement_grid)
+    violations: list[Violation] = []
+    entries = cache.entries()
+    for key, fn in entries:
+        _, l_shards, _ = placement_grid(key.placement)
+        spec = BucketSpec(kind=key.kind, idx_len=key.idx_len,
+                          footprint=key.footprint)
+        avals = bucket_avals(spec, key.batch,
+                             pad_lanes(key.idx_len, l_shards),
+                             jnp.dtype(key.dtype), key.row_width)
+        unit = ExecUnit(key=key, builder=None, avals=avals, fn=fn)
+        violations.extend(run_rules(unit, rules))
+    return LintReport(violations=violations, n_units=len(entries),
+                      rules=_rule_names("executable"),
+                      meta={"source": "live-cache"})
+
+
+def lint_serve(paths=None, rules=None) -> LintReport:
+    """Run the serve-scope (ast concurrency) rules over repro/serve."""
+    from .ast_lint import serve_sources
+    paths = list(paths) if paths is not None else serve_sources()
+    files = []
+    for p in paths:
+        with open(p) as f:
+            files.append((p, f.read()))
+    unit = ServeUnit(files=files)
+    violations: list[Violation] = []
+    for r in rules_for("serve", rules):
+        violations.extend(r.check(unit))
+    return LintReport(violations=violations, n_units=len(files),
+                      rules=_rule_names("serve"),
+                      meta={"source": "serve-ast"})

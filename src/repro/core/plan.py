@@ -449,6 +449,16 @@ class ExecutorCache:
                               size=len(self._entries),
                               batch_hits=self.batch_hits)
 
+    def entries(self) -> list[tuple[ExecKey, Callable]]:
+        """Read-only snapshot of ``(key, executable)`` pairs, LRU order.
+
+        For auditors (the daemon's ``GET /lint`` walks the live cache):
+        touches neither the LRU order nor the hit/miss counters, so an
+        audit can never perturb the telemetry the serving layer reports.
+        """
+        with self._lock:
+            return list(self._entries.items())
+
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
@@ -644,6 +654,116 @@ def as_placement(mesh, mesh_axis: str = "data") -> Placement | None:
     return Placement.create(shape, batch_axis=mesh_axis)
 
 
+def placement_grid(placement: str) -> tuple[int, int, int]:
+    """Parse a canonical ``ExecKey.placement`` string back to
+    ``(batch_shards, lane_shards, n_devices)``; ``""`` is ``(1, 1, 1)``.
+
+    The inverse of ``Placement.placement`` for the three canonical forms
+    (``data=8/8dev``, ``lane:lane=8/8dev``, ``data=4xlane=2/8dev``),
+    used by auditors that only hold an ``ExecKey`` — the live-cache lint
+    reconstructs launch avals from it, and the sharding-spec-consistency
+    rule checks the lowered module against exactly this grid.  A
+    drift-guard test round-trips it against ``Placement`` (the canonical
+    batch axis name contains no ``x``, which the 2-D split relies on).
+    """
+    if not placement:
+        return (1, 1, 1)
+    body, sep, dev = placement.rpartition("/")
+    if not sep or not dev.endswith("dev"):
+        raise ValueError(f"not a canonical placement string: {placement!r}")
+    ndev = int(dev[:-len("dev")])
+    if body.startswith("lane:"):
+        return (1, int(body.split("=", 1)[1]), ndev)
+    if "x" in body:
+        b_part, l_part = body.split("x", 1)
+        return (int(b_part.split("=", 1)[1]),
+                int(l_part.split("=", 1)[1]), ndev)
+    return (int(body.split("=", 1)[1]), 1, ndev)
+
+
+def bucket_key(backend: str, spec: BucketSpec, dtype, row_width: int,
+               mode: str, n_members: int,
+               placement: Placement | None) -> ExecKey:
+    """The ``ExecKey`` a bucket launch compiles/serves under.
+
+    Single source of truth shared by the hot path
+    (``_bucket_executable``) and the static auditor
+    (``enumerate_executables``): what spatterlint checks is by
+    construction what the cache would build.
+    """
+    b_shards = placement.batch_shards if placement else 1
+    return ExecKey(backend=backend, kind=spec.kind, idx_len=spec.idx_len,
+                   footprint=spec.footprint, dtype=jnp.dtype(dtype).name,
+                   row_width=row_width,
+                   mode=mode if spec.kind == "scatter" else "",
+                   batch=pad_batch(n_members, b_shards),
+                   placement=placement.placement if placement else "")
+
+
+def bucket_builder(backend: str, spec: BucketSpec, mode: str,
+                   placement: Placement | None) -> Callable[[], Callable]:
+    """Zero-arg builder for a bucket executable (what a cache miss runs).
+
+    ``mode`` is the key's mode — already ``""`` for gathers.
+    """
+    if placement is not None:
+        return lambda: placement.build(backend, spec.kind, mode)
+    return lambda: _build_executable(backend, spec.kind, mode)
+
+
+def bucket_avals(spec: BucketSpec, batch: int, lanes: int, dtype,
+                 row_width: int) -> tuple:
+    """Abstract launch operands for a bucket executable —
+    ``jax.ShapeDtypeStruct``s mirroring ``_assemble_bucket``'s concrete
+    buffers exactly (gather: table, idx; scatter: dst, idx, vals, keep),
+    so an executable can be traced/lowered without materializing host
+    buffers or touching devices.
+    """
+    dtype = jnp.dtype(dtype)
+    f_pad, r = spec.footprint, row_width
+    idx = jax.ShapeDtypeStruct((batch, lanes), jnp.int32)
+    table = jax.ShapeDtypeStruct((batch, f_pad + 1, r), dtype)
+    if spec.kind == "gather":
+        return (table, idx)
+    vals = jax.ShapeDtypeStruct((batch, lanes, r), dtype)
+    keep = jax.ShapeDtypeStruct((batch, lanes), jnp.bool_)
+    return (table, idx, vals, keep)
+
+
+def enumerate_executables(plan: SuitePlan, *, backend: str = "xla",
+                          dtype=jnp.float32, row_width: int = 1,
+                          mode: str = "store", placement=None,
+                          mesh_axis: str = "data"
+                          ) -> list[tuple[ExecKey, Callable, tuple]]:
+    """Every executable ``run_plan`` would ask the cache for, statically.
+
+    Returns ``[(key, builder, avals), ...]`` — one per bucket — without
+    compiling or running anything: the enumeration spatterlint audits.
+    ``key``/``builder`` come from the same ``bucket_key``/
+    ``bucket_builder`` the hot path uses; ``avals`` are the launch
+    operands at the key's exact batch (``pad_batch`` of the member
+    count — ``best_batch`` polymorphic serving can only substitute a
+    *larger* warm batch of the same family, which changes no invariant a
+    rule checks).  ``placement`` accepts any ``as_placement`` form.
+    """
+    if backend not in B.BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    if mode not in SCATTER_MODES:
+        raise ValueError(f"unknown mode {mode!r}; "
+                         f"expected one of {SCATTER_MODES}")
+    placement = as_placement(placement, mesh_axis)
+    _, l_shards = placement.grid if placement else (1, 1)
+    out = []
+    for bucket in plan.buckets:
+        spec = bucket.spec
+        key = bucket_key(backend, spec, dtype, row_width, mode,
+                         len(bucket.members), placement)
+        lanes = pad_lanes(spec.idx_len, l_shards)
+        out.append((key, bucket_builder(backend, spec, key.mode, placement),
+                    bucket_avals(spec, key.batch, lanes, dtype, row_width)))
+    return out
+
+
 def _bucket_executable(cache: ExecutorCache, backend: str, spec: BucketSpec,
                        dtype, row_width: int, mode: str, n_members: int,
                        placement: Placement | None
@@ -660,17 +780,10 @@ def _bucket_executable(cache: ExecutorCache, backend: str, spec: BucketSpec,
     still holds exactly one trace and ``misses`` stays an exact compile
     count.
     """
-    b_shards, l_shards = placement.grid if placement else (1, 1)
-    key = ExecKey(backend=backend, kind=spec.kind, idx_len=spec.idx_len,
-                  footprint=spec.footprint, dtype=jnp.dtype(dtype).name,
-                  row_width=row_width,
-                  mode=mode if spec.kind == "scatter" else "",
-                  batch=pad_batch(n_members, b_shards),
-                  placement=placement.placement if placement else "")
-    if placement is not None:
-        builder = lambda: placement.build(backend, spec.kind, key.mode)
-    else:
-        builder = lambda: _build_executable(backend, spec.kind, key.mode)
+    _, l_shards = placement.grid if placement else (1, 1)
+    key = bucket_key(backend, spec, dtype, row_width, mode, n_members,
+                     placement)
+    builder = bucket_builder(backend, spec, key.mode, placement)
     fn, served = cache.serve_poly(key, builder)
     return fn, served.batch, pad_lanes(spec.idx_len, l_shards)
 

@@ -16,19 +16,42 @@ Usage:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import re
+from typing import Any, Callable, Iterator
 
 import jax
 import numpy as np
 
 from .pattern import Pattern
 
+
+def normalize_primitive(name: str) -> str:
+    """Canonical primitive name: hyphens to underscores, ``_p`` suffix
+    stripped.
+
+    JAX spells indexed-update primitives with hyphens (``scatter-add``)
+    while callers habitually write the Python binding name
+    (``scatter_add``, or ``sort_p`` for the primitive object itself);
+    every walker below keys on the canonical spelling so consumers never
+    need the historical double-lookup (``counts.get("sort") or
+    counts.get("sort_p")``).
+    """
+    canon = name.replace("-", "_")
+    if canon.endswith("_p"):
+        canon = canon[:-2]
+    return canon
+
+
+# canonical-name -> access kind.  scatter-min/max (jnp .at[].min/.max) and
+# the mode-carrying gather variants (jnp.take(mode=...), .at[].get()) all
+# lower to these primitives; keys here are post-normalize_primitive.
 _GS_PRIMS = {
     "gather": "gather",
     "scatter": "scatter",
-    "scatter-add": "scatter",
     "scatter_add": "scatter",
-    "scatter-mul": "scatter",
+    "scatter_mul": "scatter",
+    "scatter_min": "scatter",
+    "scatter_max": "scatter",
     "dynamic_slice": "gather",
     "dynamic_update_slice": "scatter",
     "take_along_axis": "gather",
@@ -118,7 +141,7 @@ def _array_bytes(aval) -> int:
 def _harvest(jaxpr, accesses: list[TracedAccess], totals: list[int],
              weight: int = 1) -> None:
     for eqn in jaxpr.eqns:
-        name = eqn.primitive.name
+        name = normalize_primitive(eqn.primitive.name)
         # recurse into sub-jaxprs (scan multiplies by trip count)
         for param, val in eqn.params.items():
             sub = None
@@ -183,29 +206,120 @@ def trace_gs(fn: Callable, *args: Any, **kwargs: Any) -> TraceReport:
 
 
 # ---------------------------------------------------------------------------
-# jaxpr primitive census — used by the no-sort-in-hot-path regression test
-# (tests/test_no_sort.py) and the bench trajectory (benchmarks/bench_suite)
+# jaxpr census walkers — used by the no-sort regression test
+# (tests/test_no_sort.py), the bench trajectory (benchmarks/bench_suite),
+# and every executable-scope spatterlint rule (repro.analysis.rules)
 # ---------------------------------------------------------------------------
 
-def count_primitives(jaxpr) -> dict:
-    """Recursive primitive histogram of a (closed) jaxpr.
+MAX_WALK_DEPTH = 128
 
-    Walks every sub-jaxpr (pjit bodies, loop/cond branches, pallas_call
-    kernel jaxprs) so e.g. ``count_primitives(jax.make_jaxpr(fn)(*args))``
-    sees the whole executable.  Returns {primitive_name: count}.
+
+class JaxprWalkError(ValueError):
+    """A jaxpr nests deeper than the walker's depth budget.
+
+    Raised instead of silently truncating: an under-walked jaxpr would
+    report "no sort / one pallas_call" for equations it never visited,
+    which is exactly the false-negative a lint must not produce.
     """
-    counts: dict = {}
 
-    def _walk(j):
+
+def iter_eqns(jaxpr, *, max_depth: int = MAX_WALK_DEPTH
+              ) -> Iterator[tuple]:
+    """Yield ``(eqn, depth)`` over a (closed) jaxpr and every sub-jaxpr.
+
+    Recurses through pjit bodies, loop/cond branches, and pallas_call
+    kernel jaxprs — the ONE traversal every census below shares, so a
+    primitive visible to one consumer is visible to all.  Depth is
+    bounded by ``max_depth`` (raising JaxprWalkError past it) so a
+    pathologically nested program fails loudly rather than recursing
+    into the interpreter limit mid-walk.
+    """
+
+    def _walk(j, depth):
+        if depth > max_depth:
+            raise JaxprWalkError(
+                f"jaxpr nests deeper than max_depth={max_depth}; "
+                f"refusing to silently under-count")
         for eqn in j.eqns:
-            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+            yield eqn, depth
             for val in eqn.params.values():
                 for sub in (val if isinstance(val, (list, tuple)) else [val]):
                     inner = getattr(sub, "jaxpr", None)
                     if inner is not None and hasattr(inner, "eqns"):
-                        _walk(inner)
+                        yield from _walk(inner, depth + 1)
                     elif hasattr(sub, "eqns"):
-                        _walk(sub)
+                        yield from _walk(sub, depth + 1)
 
-    _walk(getattr(jaxpr, "jaxpr", jaxpr))
+    yield from _walk(getattr(jaxpr, "jaxpr", jaxpr), 0)
+
+
+def count_primitives(jaxpr, *, max_depth: int = MAX_WALK_DEPTH) -> dict:
+    """Recursive primitive histogram of a (closed) jaxpr.
+
+    Walks every sub-jaxpr (pjit bodies, loop/cond branches, pallas_call
+    kernel jaxprs) so e.g. ``count_primitives(jax.make_jaxpr(fn)(*args))``
+    sees the whole executable.  Keys are canonical
+    (``normalize_primitive``): ``scatter-add`` and ``scatter_add`` land
+    on one count, and ``counts.get("sort", 0)`` is the only lookup a
+    caller ever needs (no ``sort_p`` double-check).
+    """
+    counts: dict = {}
+    for eqn, _ in iter_eqns(jaxpr, max_depth=max_depth):
+        canon = normalize_primitive(eqn.primitive.name)
+        counts[canon] = counts.get(canon, 0) + 1
     return counts
+
+
+def find_primitive_eqns(jaxpr, names, *, max_depth: int = MAX_WALK_DEPTH
+                        ) -> list[tuple[str, str]]:
+    """Locate offending equations: ``[(canonical_name, eqn_str), ...]``.
+
+    ``names`` may use any spelling (``sort``, ``sort_p``,
+    ``scatter-add``); matching happens on canonical names.  Equation
+    strings are truncated — they are violation evidence, not programs.
+    """
+    want = {normalize_primitive(n) for n in names}
+    hits = []
+    for eqn, _ in iter_eqns(jaxpr, max_depth=max_depth):
+        canon = normalize_primitive(eqn.primitive.name)
+        if canon in want:
+            hits.append((canon, str(eqn)[:200]))
+    return hits
+
+
+def find_dtype_eqns(jaxpr, dtype_name: str, *,
+                    max_depth: int = MAX_WALK_DEPTH) -> list[str]:
+    """Equations touching an aval of ``dtype_name`` (e.g. ``float64``)."""
+    hits = []
+    for eqn, _ in iter_eqns(jaxpr, max_depth=max_depth):
+        for v in (*eqn.invars, *eqn.outvars):
+            dt = getattr(getattr(v, "aval", None), "dtype", None)
+            if dt is not None and str(dt) == dtype_name:
+                hits.append(str(eqn)[:200])
+                break
+    return hits
+
+
+# lowered-text (StableHLO) census: the walker's HLO side.  Donation and
+# mesh placement are invisible in the jaxpr — they only exist in the
+# lowered module — so the donation-honored and sharding-spec-consistency
+# rules read these markers instead.
+_RE_PARTITIONS = re.compile(r"num_partitions\s*=\s*(\d+)")
+_RE_SHARDING = re.compile(r'mhlo\.sharding\s*=\s*"([^"]*)"')
+_RE_ALIASING = re.compile(r"tf\.aliasing_output|jax\.buffer_donor")
+
+
+def hlo_stats(text: str) -> dict:
+    """Structured census of a lowered module's text
+    (``fn.lower(*avals).as_text()``).
+
+    Returns ``num_partitions`` (1 when unpartitioned), the set of
+    ``mhlo.sharding`` attribute strings, and ``aliased_params`` — the
+    number of input/output aliasing (donation) markers.
+    """
+    m = _RE_PARTITIONS.search(text)
+    return {
+        "num_partitions": int(m.group(1)) if m else 1,
+        "shardings": set(_RE_SHARDING.findall(text)),
+        "aliased_params": len(_RE_ALIASING.findall(text)),
+    }

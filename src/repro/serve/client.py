@@ -65,6 +65,12 @@ class SpatterClient:
     def cache(self) -> dict:
         return self._request("/cache")
 
+    def lint(self) -> dict:
+        """spatterlint audit of the daemon's live cache (GET /lint);
+        the ``report`` field is an ``analysis.report.LintReport``
+        document — parse it jax-free with ``LintReport.from_json``."""
+        return self._request("/lint")
+
     def run_suite(self, patterns, **options) -> dict:
         """POST a suite; ``patterns`` is a list of suite-JSON dicts, a
         full ``{"patterns": [...], ...}`` envelope, or a JSON string of

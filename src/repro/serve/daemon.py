@@ -20,6 +20,9 @@ Endpoints (all JSON; stdlib ``http.server``, no dependencies):
                    lane) mesh (plan.Placement, DESIGN.md §11).
     GET  /healthz  liveness + device/backend inventory + lifetime stats
     GET  /cache    lifetime ExecutorCache counters
+    GET  /lint     spatterlint audit of the live cache's compiled
+                   executables (repro.analysis, DESIGN.md §12) — the
+                   report schema the --lint CLI shares
 
 Quickstart::
 
@@ -207,6 +210,20 @@ class SpatterDaemon:
             "elapsed_s": time.perf_counter() - t0,
         }
 
+    def lint(self) -> dict:
+        """Static audit of every compiled executable in the live cache.
+
+        Runs the executable-scope spatterlint rules against each cached
+        ExecKey, reconstructing launch avals from the key alone — so the
+        audit also proves the keys describe their executables honestly.
+        Read-only (``ExecutorCache.entries``): it can run mid-request
+        without perturbing the hits/misses telemetry, and it takes no
+        lock the run path needs.
+        """
+        from repro.analysis.lint import lint_cache
+        report = lint_cache(self.cache)
+        return {"ok": report.ok, "report": report.to_json()}
+
     def health(self) -> dict:
         import jax
         return {
@@ -253,6 +270,8 @@ def _make_handler(daemon: SpatterDaemon):
             elif self.path == "/cache":
                 self._reply(200, {"ok": True,
                                   "cache": daemon.cache.stats().to_json()})
+            elif self.path == "/lint":
+                self._reply(200, daemon.lint())
             else:
                 self._reply(404, {"ok": False,
                                   "error": f"no such path {self.path!r}"})

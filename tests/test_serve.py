@@ -201,6 +201,25 @@ def test_health_and_cache_endpoints(served):
                                        "batch_hits": 0}
 
 
+def test_lint_endpoint_audits_warm_cache(served):
+    # GET /lint: spatterlint over the daemon's LIVE cache.  Cold: zero
+    # units (and "ok", but distinguishable from a real clean audit by
+    # n_units).  Warm: every cached ExecKey is audited, zero violations.
+    from repro.analysis.report import LintReport
+    cold = served.lint()
+    assert cold["ok"] and cold["report"]["n_units"] == 0
+    served.run_suite(SUITE, backend="xla", runs=1)
+    size = served.cache()["cache"]["size"]
+    assert size > 0
+    r = served.lint()
+    report = LintReport.from_json(r["report"])     # shared schema parses
+    assert r["ok"] and report.ok
+    assert report.n_units == size                  # every entry audited
+    assert report.n_violations == 0, report.summary()
+    # the audit is read-only: serving telemetry unchanged
+    assert served.cache()["cache"]["size"] == size
+
+
 def test_second_request_compiles_nothing_and_is_bit_identical(served):
     r1 = served.run_suite(SUITE, backend="xla", runs=2)
     r2 = served.run_suite(SUITE, backend="xla", runs=2)
@@ -398,6 +417,12 @@ SHARDED_SERVE = textwrap.dedent("""\
         e1 = [t["digest"] for t in m1["stats"]["table"]]
         e2 = [t["digest"] for t in m2["stats"]["table"]]
         assert e1 == e2 == d0 and all(e1), (d0, e1, e2)
+        # GET /lint on the warm cache: single-device AND placed (8, 4x2)
+        # executables all audit clean, one unit per cached ExecKey
+        lr = c.lint()
+        size = c.cache()["cache"]["size"]
+        assert lr["ok"], lr["report"]["violations"]
+        assert lr["report"]["n_units"] == size > 0, (lr["report"], size)
     print("OK")
     """)
 
