@@ -46,6 +46,8 @@ def main() -> None:
         suite_kw = {"out_path": None}
     # same guard for the mesh-shape sweep's merge into BENCH_suite.json
     sharded_kw = {} if args.only == "sharded_suite" else {"out_path": None}
+    # and for the serving-concurrency sweep's serve_concurrency key
+    serve_kw = {} if args.only == "serve" else {"out_path": None}
     benches = {
         "stream": lambda: bench_stream.run(runs=runs),
         "uniform_stride": lambda: bench_uniform_stride.run(runs=runs),
@@ -58,7 +60,7 @@ def main() -> None:
         "sharded_suite": lambda: bench_sharded_suite.run(runs=runs,
                                                          **sharded_kw),
         "suite": lambda: bench_suite.run(runs=runs, **suite_kw),
-        "serve": lambda: bench_serve.run(runs=runs),
+        "serve": lambda: bench_serve.run(runs=runs, **serve_kw),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

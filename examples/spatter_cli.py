@@ -106,6 +106,10 @@ def main():
     ap.add_argument("--client", default=None, metavar="URL",
                     help="POST --json to a running spatterd instead of "
                          "executing locally")
+    ap.add_argument("--stats", action="store_true",
+                    help="--client: print the daemon's /stats document "
+                         "(cache counters + scheduler queue/worker "
+                         "snapshot) instead of posting a suite")
     ap.add_argument("--host", default=None,
                     help="--serve bind address (default 127.0.0.1)")
     ap.add_argument("--port", type=int, default=None,
@@ -124,7 +128,7 @@ def main():
         # contradiction, not something to drop silently
         bad = _given(("json", "no_batch", "client", "kernel", "pattern",
                       "delta", "count", "runs", "stream_r", "host",
-                      "port")) + (["--serve"] if args.serve else [])
+                      "port", "stats")) + (["--serve"] if args.serve else [])
         if bad:
             ap.error(f"{', '.join(bad)}: not applicable to --lint "
                      f"(static audit; only --mesh/--backend/--mode/"
@@ -162,7 +166,7 @@ def main():
         # each POST body): refuse them rather than dropping them silently
         dropped = _given(("json", "no_batch", "mesh", "mode", "backend",
                           "row_width", "runs", "kernel", "pattern",
-                          "delta", "count", "stream_r"))
+                          "delta", "count", "stream_r", "stats"))
         if dropped:
             ap.error(f"{', '.join(dropped)}: per-request options — pass "
                      f"them to --client (or in the POST body), not --serve")
@@ -173,8 +177,19 @@ def main():
         return
 
     if args.client:
+        if args.stats:
+            # the read-only stats verb: no suite, no execution options
+            extra = _given(("json", "no_batch", "mesh", "mode", "backend",
+                            "row_width", "runs", "kernel", "pattern",
+                            "delta", "count", "stream_r", "host", "port"))
+            if extra:
+                ap.error(f"{', '.join(extra)}: --stats is a read-only "
+                         f"query; it takes only --client URL")
+            from repro.serve import client as sc
+            sc.main(["--url", args.client, "--stats"])
+            return
         if not args.json:
-            ap.error("--client needs --json SUITE to post")
+            ap.error("--client needs --json SUITE to post (or --stats)")
         if args.no_batch:
             ap.error("--no-batch is local-only: spatterd always runs the "
                      "bucketed planner")
@@ -210,6 +225,8 @@ def main():
     if stray:
         ap.error(f"{', '.join(stray)}: --serve options (add --serve, or "
                  f"target a running daemon with --client URL)")
+    if args.stats:
+        ap.error("--stats queries a running daemon: add --client URL")
 
     # local execution from here on: resolve the omitted flags to the
     # paper defaults, then pay the JAX startup the --serve/--client

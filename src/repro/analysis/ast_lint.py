@@ -50,21 +50,36 @@ MUTATOR_METHODS = frozenset({
 # call names (last dotted component) that can block the holding thread
 BLOCKING_CALLS = frozenset({
     "sleep", "urlopen", "recv", "recv_into", "accept", "connect",
-    "getresponse", "read", "readline", "readlines", "wait", "join",
-    "run", "check_call", "check_output", "communicate", "select",
+    "getresponse", "read", "readline", "readlines", "wait", "wait_for",
+    "join", "run", "check_call", "check_output", "communicate", "select",
     "getaddrinfo",
 })
 # bare open() — a Name call, not an Attribute — blocks too
 BLOCKING_NAMES = frozenset({"open", "input"})
 
+# attribute-name tokens that denote a lock-like object: plain locks,
+# mutexes, and condition variables (a Condition IS its lock — entering
+# ``with self._cv:`` acquires it)
+_LOCK_TOKENS = ("lock", "mutex", "cond", "cv")
+
+# methods-called-with-lock-held convention: a method named ``*_locked``
+# asserts its callers hold the class lock (the scheduler's
+# ``_take_locked``/``_fail_locked`` helpers).  Mutations inside count as
+# locked under this synthetic lock name — and blocking calls inside are
+# flagged, same as any lexical ``with self.<lock>:`` body.
+_LOCKED_METHOD_LOCK = "<caller-held lock>"
+
 
 def _is_lock_expr(node: ast.expr) -> bool:
-    """``self.<something containing 'lock'>`` — the with-item shape that
-    marks a guarded region."""
-    return (isinstance(node, ast.Attribute)
+    """``self.<lock-like attr>`` — the with-item shape that marks a
+    guarded region.  Matches underscore-delimited tokens so ``_cv``
+    and ``state_cond`` count while ``_recv`` does not."""
+    if not (isinstance(node, ast.Attribute)
             and isinstance(node.value, ast.Name)
-            and node.value.id == "self"
-            and "lock" in node.attr.lower())
+            and node.value.id == "self"):
+        return False
+    return any(tok in _LOCK_TOKENS
+               for tok in node.attr.lower().split("_") if tok)
 
 
 def _self_attr(node: ast.expr) -> str | None:
@@ -122,7 +137,12 @@ class _ClassWalker(ast.NodeVisitor):
 
     def visit_FunctionDef(self, node: ast.FunctionDef):
         prev, self._method = self._method, node.name
+        held = node.name.endswith("_locked")
+        if held:
+            self._locks.append(_LOCKED_METHOD_LOCK)
         self.generic_visit(node)
+        if held:
+            self._locks.pop()
         self._method = prev
 
     visit_AsyncFunctionDef = visit_FunctionDef
@@ -144,10 +164,25 @@ class _ClassWalker(ast.NodeVisitor):
             blocking = (name in BLOCKING_CALLS
                         if isinstance(node.func, ast.Attribute)
                         else name in BLOCKING_NAMES)
+            if blocking and self._is_sanctioned_wait(node, name):
+                blocking = False
             if blocking:
                 self.locked_calls.append((name, node.lineno,
                                           self._locks[-1]))
         super().generic_visit(node)
+
+    def _is_sanctioned_wait(self, node: ast.Call, name: str) -> bool:
+        """``self.<cv>.wait()`` / ``.wait_for()`` on a condition variable
+        the block is HOLDING is the one blocking call condition-variable
+        code cannot exist without — wait atomically releases the lock
+        while sleeping, so it never pins other threads the way the rule's
+        other targets do.  Waiting on anything else (an Event, a foreign
+        lock) under a held lock stays flagged: that is a real deadlock
+        shape."""
+        return (name in ("wait", "wait_for")
+                and isinstance(node.func, ast.Attribute)
+                and _is_lock_expr(node.func.value)
+                and node.func.value.attr in self._locks)
 
 
 def _walk_classes(tree: ast.Module):

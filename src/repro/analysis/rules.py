@@ -279,6 +279,65 @@ def _sharding_consistency(unit: ExecUnit) -> list[Violation]:
     return out
 
 
+@rule("canonical-exec-key", scope="executable")
+def _canonical_key(unit: ExecUnit) -> list[Violation]:
+    """Every cached ExecKey is in the canonical ``bucket_key`` format:
+    pow-2 bucketed geometry, bracket-stable batch, parseable placement
+    string, canonical dtype name, kind-consistent mode.  The coalescing
+    scheduler (serve/scheduler.py) stacks concurrent requests' work
+    units and re-derives the launch key from the COMBINED member count —
+    this rule is the backstop proving those launches reuse the same key
+    grammar as solo launches: a raw un-padded batch, a novel placement
+    spelling, or a non-canonical dtype alias leaking into the cache
+    would fragment the family index ``best_batch`` coalesces through
+    and silently break the exact-compile-count telemetry.
+
+    Ad-hoc units (``lint.unit_for`` wraps executables that never came
+    from the planner, with zeroed geometry) are out of scope.
+    """
+    from repro.core.backends import BACKENDS
+    from repro.core.engine import SCATTER_MODES
+    from repro.core.plan import next_pow2, pad_batch, placement_grid
+    k = unit.key
+    if k.idx_len == 0 and k.footprint == 0 and k.batch == 0:
+        return []                     # unit_for ad-hoc wrapper
+    probs = []
+    if k.backend not in BACKENDS:
+        probs.append(f"backend {k.backend!r} not in {sorted(BACKENDS)}")
+    if k.kind not in ("gather", "scatter"):
+        probs.append(f"kind {k.kind!r} not gather|scatter")
+    try:
+        b_shards, _, _ = placement_grid(k.placement)
+    except (ValueError, IndexError):
+        probs.append(f"placement {k.placement!r} is not a canonical "
+                     f"placement string (placement_grid cannot parse it)")
+        b_shards = 1
+    for name in ("idx_len", "footprint"):
+        v = getattr(k, name)
+        if v < 1 or next_pow2(v) != v:
+            probs.append(f"{name}={v} is not pow-2 bucketed")
+    if k.batch < 1 or pad_batch(k.batch, b_shards) != k.batch:
+        probs.append(f"batch={k.batch} is not bracket-stable for "
+                     f"{b_shards} batch shard(s) (expected "
+                     f"pad_batch(batch)==batch; a coalesced launch must "
+                     f"pad its combined member count)")
+    import jax.numpy as jnp
+    try:
+        canon = jnp.dtype(k.dtype).name
+    except TypeError:
+        canon = None
+    if canon != k.dtype:
+        probs.append(f"dtype {k.dtype!r} is not the canonical dtype name"
+                     + (f" ({canon!r})" if canon else ""))
+    want_modes = SCATTER_MODES if k.kind == "scatter" else ("",)
+    if k.kind in ("gather", "scatter") and k.mode not in want_modes:
+        probs.append(f"mode {k.mode!r} invalid for kind={k.kind} "
+                     f"(expected one of {want_modes})")
+    return [Violation(rule="canonical-exec-key", exec_key=unit.label,
+                      location=p.split(" ", 1)[0], message=p)
+            for p in probs]
+
+
 # plan-scope rules -----------------------------------------------------------
 
 @rule("pad-waste-threshold", scope="plan")

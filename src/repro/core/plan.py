@@ -406,6 +406,22 @@ class ExecutorCache:
         neither count a phantom cross-batch hit nor compile at a stale
         larger batch), and ``misses`` stays the exact compile count.
         """
+        fn, served, _ = self.serve_poly_info(key, builder)
+        return fn, served
+
+    def serve_poly_info(self, key: ExecKey, builder: Callable[[], Callable]
+                        ) -> tuple[Callable, ExecKey, bool]:
+        """``serve_poly`` plus compile attribution: ``(fn, served_key,
+        compiled)`` where ``compiled`` is True iff THIS call claimed the
+        key's ``_BuildFuture`` and ran the builder.
+
+        Exactly one caller per compile sees ``compiled=True`` (racers on
+        the same key wait on the in-flight future and see False), so a
+        caller-side sum of ``compiled`` equals the cache's ``misses``
+        delta exactly — the serving scheduler uses this to attribute each
+        compile to the one request that claimed it, keeping per-request
+        ``misses`` exact without bracketing global counters.
+        """
         with self._lock:
             best = self._best_batch_locked(key)
             if best is not None:
@@ -415,9 +431,9 @@ class ExecutorCache:
                 if fn is not None:
                     if best.batch > key.batch:
                         self.batch_hits += 1
-                    return fn, best
+                    return fn, best, False
             fut, owner = self._claim_locked(key)
-        return self._await_or_build(key, fut, owner, builder), key
+        return self._await_or_build(key, fut, owner, builder), key, owner
 
     def _best_batch_locked(self, key: ExecKey) -> ExecKey | None:
         # caller holds self._lock
@@ -792,10 +808,11 @@ def _bucket_executable(cache: ExecutorCache, backend: str, spec: BucketSpec,
 # Bucket assembly + execution
 # ---------------------------------------------------------------------------
 
-def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
-                     seed: int, batch: int | None = None,
-                     mode: str = "store", lanes: int | None = None):
-    """Stack a bucket's patterns into batched device buffers.
+def _assemble_members(spec: BucketSpec, patterns: Sequence[Pattern],
+                      dtype, row_width: int, seeds: Sequence[int],
+                      batch: int | None = None, mode: str = "store",
+                      lanes: int | None = None):
+    """Stack member patterns (of one bucket shape) into batched buffers.
 
     Returns (args, real_lanes) where args feeds the bucket executable and
     real_lanes[b] is member b's un-padded lane count.  Table row F_pad is
@@ -806,7 +823,11 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
     bucket's idx_len; default exactly it) sets the launched lane dim —
     ``pad_lanes`` hands a lane-sharded launch a shard-multiple here, and
     the extra columns are ordinary padding lanes (scratch-row indices,
-    zero payloads).
+    zero payloads).  ``seeds`` gives member b its host-buffer RNG seed —
+    per member, because a COALESCED launch (serve/scheduler) stacks
+    members from different requests whose seeds may differ; each member's
+    buffers are exactly what its own serial run would assemble, which is
+    why coalescing preserves bit-identity row by row.
 
     Scatter buckets also carry the (B_pad, N_pad) last-write-wins keep
     mask for store mode: real lanes reuse the per-pattern mask
@@ -818,8 +839,9 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
     gather buckets) no mask is computed; the add executable's keep
     operand is an all-False placeholder it never reads.
     """
-    spec = bucket.spec
-    nb = len(bucket.members)
+    nb = len(patterns)
+    if len(seeds) != nb:
+        raise ValueError(f"{len(seeds)} seeds for {nb} members")
     b_pad = pad_batch(nb) if batch is None else batch
     if b_pad < nb:
         raise ValueError(f"batch {b_pad} < member count {nb}")
@@ -838,9 +860,8 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
     if store:
         keep_b[:, -1] = True       # scratch row's single write (pad lanes)
     real_lanes = []
-    for b, pos in enumerate(bucket.members):
-        p = plan.patterns[pos]
-        src, abs_idx, vals, keep = make_host_buffers(p, r, seed=seed)
+    for b, p in enumerate(patterns):
+        src, abs_idx, vals, keep = make_host_buffers(p, r, seed=seeds[b])
         n = abs_idx.shape[0]
         real_lanes.append(n)
         idx_b[b, :n] = abs_idx
@@ -856,6 +877,17 @@ def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
     dst = jnp.zeros((b_pad, f_pad + 1, r), dtype)
     return (dst, idx, jnp.asarray(vals_b, dtype),
             jnp.asarray(keep_b)), real_lanes
+
+
+def _assemble_bucket(plan: SuitePlan, bucket: Bucket, dtype, row_width: int,
+                     seed: int, batch: int | None = None,
+                     mode: str = "store", lanes: int | None = None):
+    """One-plan wrapper over ``_assemble_members`` (one seed for all
+    members — the serial ``run_plan`` regime)."""
+    patterns = [plan.patterns[pos] for pos in bucket.members]
+    return _assemble_members(bucket.spec, patterns, dtype, row_width,
+                             [seed] * len(patterns), batch=batch,
+                             mode=mode, lanes=lanes)
 
 
 def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
@@ -895,6 +927,235 @@ def execute_bucket(plan: SuitePlan, bucket: Bucket, *, backend: str = "xla",
     return trimmed
 
 
+# ---------------------------------------------------------------------------
+# Work units: the addressable request-path decomposition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketWork:
+    """One bucket's worth of a suite request: the addressable work unit.
+
+    A suite decomposes into one ``BucketWork`` per bucket (``make_work``);
+    each carries everything a ``launch`` needs — the member patterns, the
+    execution options, the placement — with NO reference back to the
+    originating plan, so work units from *different* requests can be
+    stacked into one coalesced launch (serve/scheduler.py).  ``family``
+    is the coalescing identity: the batch-stripped ``ExecKey`` — two work
+    units with equal families (and equal ``runs``, the timing contract)
+    launch the same executable family and may share a launch.
+
+    ``dtype`` is the dtype NAME (a str) so the unit is plain data; the
+    launch path re-parses it.  ``seed`` is per work unit — a coalesced
+    assembly seeds each member segment with its own work's seed, so every
+    member's buffers are exactly what its serial run would build.
+    """
+    spec: BucketSpec
+    patterns: tuple[Pattern, ...]     # member patterns, bucket order
+    positions: tuple[int, ...]        # members' positions in their suite
+    backend: str
+    dtype: str
+    row_width: int
+    mode: str                         # request scatter mode (store | add)
+    runs: int
+    seed: int
+    digest: bool
+    placement: Placement | None
+
+    def __post_init__(self):
+        if len(self.patterns) != len(self.positions):
+            raise ValueError(f"{len(self.patterns)} patterns vs "
+                             f"{len(self.positions)} positions")
+        if not self.patterns:
+            raise ValueError("work unit needs at least one member")
+
+    @property
+    def n_members(self) -> int:
+        return len(self.patterns)
+
+    @property
+    def family(self) -> ExecKey:
+        """Batch-stripped ExecKey — the coalescing identity.  Real keys
+        have batch >= 1, so batch=0 can never collide with one."""
+        key = bucket_key(self.backend, self.spec, jnp.dtype(self.dtype),
+                         self.row_width, self.mode, self.n_members,
+                         self.placement)
+        return dataclasses.replace(key, batch=0)
+
+    @property
+    def real_lanes_total(self) -> int:
+        """Un-padded lanes this unit contributes to a launch — what the
+        scheduler budgets coalesced assembly size with."""
+        return sum(p.count * p.index_len for p in self.patterns)
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchResult:
+    """What one (possibly coalesced) bucket launch produced.
+
+    ``real_lanes``/``out`` rows are in launch order: work unit i of the
+    launch owns rows ``[offset_i, offset_i + n_members_i)`` where
+    ``offset_i`` is the member count of the units before it — ``demux``
+    slices a unit's rows back out with that offset.  ``compiled`` is True
+    iff THIS launch claimed the executable's build
+    (``ExecutorCache.serve_poly_info``): summed over launches it equals
+    the cache's ``misses`` delta exactly, which is how the scheduler
+    attributes each compile to one request.
+    """
+    key: ExecKey                      # the key actually served (best_batch)
+    t_bucket: float                   # min over runs (paper §3.5)
+    batch: int                        # launched pattern-batch dim
+    lanes: int                        # launched lane dim (pad_lanes)
+    n_members: int                    # real members across all units
+    real_lanes: tuple[int, ...]       # per member, launch order
+    out: np.ndarray | None            # batched output (digest launches)
+    compiled: bool
+
+
+def make_work(plan: SuitePlan, *, backend: str = "xla", dtype=None,
+              row_width: int = 1, runs: int = 10, mode: str = "store",
+              seed: int = 0, placement: Placement | None = None,
+              digest: bool = False) -> list[BucketWork]:
+    """Decompose a suite plan into one ``BucketWork`` per bucket.
+
+    Validates the options once (the same checks ``run_plan`` applies), so
+    a work unit is always launchable as-is.
+    """
+    if backend not in B.BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    if mode not in SCATTER_MODES:
+        raise ValueError(f"unknown mode {mode!r}; "
+                         f"expected one of {SCATTER_MODES}")
+    dtype = jnp.dtype(dtype or jnp.float32)
+    return [
+        BucketWork(spec=bucket.spec,
+                   patterns=tuple(plan.patterns[pos]
+                                  for pos in bucket.members),
+                   positions=bucket.members, backend=backend,
+                   dtype=dtype.name, row_width=row_width, mode=mode,
+                   runs=runs, seed=seed, digest=digest,
+                   placement=placement)
+        for bucket in plan.buckets
+    ]
+
+
+def launch(works: Sequence[BucketWork],
+           cache: ExecutorCache | None = None) -> LaunchResult:
+    """Execute one (possibly coalesced) bucket launch: the pure step.
+
+    ``works`` is one or more work units sharing a ``family`` and ``runs``
+    (validated here — the scheduler's coalescing contract); their member
+    patterns are stacked in order into ONE padded launch whose batch is
+    ``pad_batch`` of the combined member count (or a larger warm
+    executable via ``serve_poly``).  With a single work unit this is
+    byte-identical to the serial ``run_plan`` bucket step.
+
+    The timed region is exactly the serial path's: one warm-up call,
+    then ``runs`` timed executions (fresh zeroed dst per run for
+    scatters), min-over-K.  The batched output is pulled to the host
+    only when some unit wants digests.
+    """
+    if not works:
+        raise ValueError("launch needs at least one work unit")
+    w0 = works[0]
+    fam, runs = w0.family, w0.runs
+    for w in works[1:]:
+        if w.family != fam or w.runs != runs:
+            raise ValueError(
+                f"cannot coalesce work units with different families/runs: "
+                f"{fam}/r{runs} vs {w.family}/r{w.runs}")
+    cache = cache if cache is not None else default_cache()
+    spec, placement = w0.spec, w0.placement
+    dtype = jnp.dtype(w0.dtype)
+    _, l_shards = placement.grid if placement else (1, 1)
+    n_members = sum(w.n_members for w in works)
+    key = bucket_key(w0.backend, spec, dtype, w0.row_width, w0.mode,
+                     n_members, placement)
+    builder = bucket_builder(w0.backend, spec, key.mode, placement)
+    fn, served, compiled = cache.serve_poly_info(key, builder)
+    batch, lanes = served.batch, pad_lanes(spec.idx_len, l_shards)
+    patterns = [p for w in works for p in w.patterns]
+    seeds = [w.seed for w in works for _ in w.patterns]
+    args, real_lanes = _assemble_members(spec, patterns, dtype,
+                                         w0.row_width, seeds, batch=batch,
+                                         mode=w0.mode, lanes=lanes)
+    if placement is not None:
+        args = placement.place(spec.kind, args)
+    if spec.kind == "scatter":
+        dst, idx, vals, keep = args
+        jax.block_until_ready(fn(dst, idx, vals, keep))    # compile & warm
+        times = []
+        for _ in range(runs):
+            d = jnp.zeros_like(dst)
+            if placement is not None:
+                d = placement.place(spec.kind, (d,))[0]
+            jax.block_until_ready(d)
+            t0 = time.perf_counter()
+            out = fn(d, idx, vals, keep)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+    else:
+        jax.block_until_ready(fn(*args))                   # compile & warm
+        times = []
+        for _ in range(runs):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+    want_out = any(w.digest for w in works)
+    return LaunchResult(key=served, t_bucket=min(times),   # paper §3.5
+                        batch=batch, lanes=lanes, n_members=n_members,
+                        real_lanes=tuple(real_lanes),
+                        out=np.asarray(out) if want_out else None,
+                        compiled=compiled)
+
+
+def demux(result: LaunchResult, work: BucketWork,
+          offset: int = 0) -> list[tuple[int, RunResult]]:
+    """Slice one work unit's per-pattern results back out of a launch.
+
+    ``offset`` is the unit's first row in the launch (sum of member
+    counts of the units stacked before it; 0 for a solo launch).
+    Returns ``(position, RunResult)`` pairs in the unit's member order.
+
+    Wall time is attributed proportionally to each member's real
+    (un-padded) lanes over the launch's TOTAL lanes — scratch batch rows
+    count in the denominator at the launched lane width, so a member's
+    reported bandwidth is invariant to batch padding, best_batch reuse,
+    AND how many foreign members a coalesced launch carried: every
+    member reports the bandwidth the launch achieved on its share.
+    Digests hash the member's trimmed rows only, so they are a pure
+    function of (pattern, seed, mode, dtype) — bit-identical between
+    solo and coalesced launches.
+    """
+    spec = work.spec
+    dtype = jnp.dtype(work.dtype)
+    elem_bytes = dtype.itemsize * work.row_width
+    total_lanes = (sum(result.real_lanes)
+                   + (result.batch - result.n_members) * result.lanes)
+    out: list[tuple[int, RunResult]] = []
+    for i, pos in enumerate(work.positions):
+        b = offset + i
+        p = work.patterns[i]
+        t_i = result.t_bucket * result.real_lanes[b] / total_lanes
+        tm = bw.tpu_tile_model(p, elem_bytes)
+        dg = None
+        if work.digest:
+            trim = (result.out[b, :result.real_lanes[b]]
+                    if spec.kind == "gather"
+                    else result.out[b, :p.footprint()])
+            dg = hashlib.sha256(
+                np.ascontiguousarray(trim).tobytes()).hexdigest()
+        out.append((pos, RunResult(
+            pattern=p, backend=work.backend, elem_bytes=elem_bytes,
+            row_width=work.row_width, runs=work.runs, time_s=t_i,
+            measured_gbs=bw.paper_bandwidth(p, t_i, elem_bytes) / 1e9,
+            modeled_gbs=tm.modeled_gbs,
+            tile_efficiency=tm.tile_efficiency,
+            out_digest=dg,
+        )))
+    return out
+
+
 def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
              row_width: int = 1, runs: int = 10, mode: str = "store",
              seed: int = 0,
@@ -907,6 +1168,13 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
     Returns one RunResult per pattern, in the suite's original order.
     Wall time of a bucket launch is attributed to members proportionally
     to their real (un-padded) lanes.
+
+    A thin serial driver over the work-unit pipeline: the suite
+    decomposes into one ``BucketWork`` per bucket (``make_work``), each
+    launches solo (``launch``), and per-pattern results demultiplex back
+    out (``demux``) — the same three steps the serving scheduler runs
+    concurrently with cross-request coalescing (serve/scheduler.py,
+    DESIGN.md §13), so the serial and scheduled paths can never drift.
 
     With ``mesh`` — any ``as_placement`` form: an int N (batch-only), a
     ``(b, l)`` tuple, a raw Mesh (batch-only over ``mesh_axis``), or a
@@ -922,74 +1190,14 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
     bit-identical results; the serving layer uses this as its warm-repeat
     identity proof.
     """
-    if backend not in B.BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}")
-    if mode not in SCATTER_MODES:
-        raise ValueError(f"unknown mode {mode!r}; "
-                         f"expected one of {SCATTER_MODES}")
-    dtype = jnp.dtype(dtype or jnp.float32)
     cache = cache if cache is not None else default_cache()
     placement = as_placement(mesh, mesh_axis)
-    elem_bytes = dtype.itemsize * row_width
+    works = make_work(plan, backend=backend, dtype=dtype,
+                      row_width=row_width, runs=runs, mode=mode, seed=seed,
+                      placement=placement, digest=digest)
     results: list[RunResult | None] = [None] * len(plan.patterns)
-
-    for bucket in plan.buckets:
-        spec = bucket.spec
-        fn, batch, lanes = _bucket_executable(cache, backend, spec, dtype,
-                                              row_width, mode,
-                                              len(bucket.members), placement)
-        args, real_lanes = _assemble_bucket(plan, bucket, dtype, row_width,
-                                            seed, batch=batch, mode=mode,
-                                            lanes=lanes)
-        if placement is not None:
-            args = placement.place(spec.kind, args)
-        if spec.kind == "scatter":
-            dst, idx, vals, keep = args
-            jax.block_until_ready(fn(dst, idx, vals, keep))  # compile & warm
-            times = []
-            for _ in range(runs):
-                d = jnp.zeros_like(dst)
-                if placement is not None:
-                    d = placement.place(spec.kind, (d,))[0]
-                jax.block_until_ready(d)
-                t0 = time.perf_counter()
-                out = fn(d, idx, vals, keep)
-                jax.block_until_ready(out)
-                times.append(time.perf_counter() - t0)
-        else:
-            jax.block_until_ready(fn(*args))                # compile & warm
-            times = []
-            for _ in range(runs):
-                t0 = time.perf_counter()
-                out = fn(*args)
-                jax.block_until_ready(out)
-                times.append(time.perf_counter() - t0)
-        t_bucket = min(times)                                # paper §3.5
-        out_np = np.asarray(out) if digest else None
-
-        # attribution denominator counts scratch batch rows' lanes too, so
-        # a member's reported bandwidth does not depend on how much batch
-        # padding the serving executable carried (best_batch may hand a
-        # small bucket a larger warm executable); scratch rows carry the
-        # LAUNCHED lane count (lane-axis padding included)
-        total_lanes = (sum(real_lanes)
-                       + (batch - len(bucket.members)) * lanes)
-        for b, pos in enumerate(bucket.members):
-            p = plan.patterns[pos]
-            t_i = t_bucket * real_lanes[b] / total_lanes
-            tm = bw.tpu_tile_model(p, elem_bytes)
-            dg = None
-            if digest:
-                trim = (out_np[b, :real_lanes[b]] if spec.kind == "gather"
-                        else out_np[b, :p.footprint()])
-                dg = hashlib.sha256(
-                    np.ascontiguousarray(trim).tobytes()).hexdigest()
-            results[pos] = RunResult(
-                pattern=p, backend=backend, elem_bytes=elem_bytes,
-                row_width=row_width, runs=runs, time_s=t_i,
-                measured_gbs=bw.paper_bandwidth(p, t_i, elem_bytes) / 1e9,
-                modeled_gbs=tm.modeled_gbs,
-                tile_efficiency=tm.tile_efficiency,
-                out_digest=dg,
-            )
+    for work in works:
+        res = launch((work,), cache)
+        for pos, r in demux(res, work):
+            results[pos] = r
     return results  # type: ignore[return-value]

@@ -117,6 +117,41 @@ def pearson_r(xs, ys) -> float:
     return float(np.corrcoef(x, y)[0, 1])
 
 
+def aggregate_stats(results: list[RunResult], *, metric: str = "measured",
+                    plan: SuitePlan | None = None,
+                    stream_ref: RunResult | None = None) -> SuiteStats:
+    """Fold per-pattern RunResults into the paper's §3.5 aggregates.
+
+    The single aggregation point shared by ``run_suite`` and the serving
+    scheduler (serve/daemon.py builds SuiteStats from demuxed scheduler
+    results) — min/max/harmonic-mean over the requested metric column,
+    plus, when a STREAM reference run is supplied, paper Eq. 1: Pearson's
+    R between each pattern's measured/STREAM fraction and its
+    modeled/STREAM fraction.  R is scale-invariant, so dividing each
+    series by its platform's STREAM bandwidth cannot change it; it is
+    computed on the raw columns and the reference run kept only for the
+    paper-style ``stream_gbs`` anchor the fractions are read against.
+    """
+    if not results:
+        raise ValueError("aggregate_stats needs at least one result")
+    col = _metric_column(metric)
+    key = (lambda r: r.measured_gbs) if col == "measured_cpu_gbs" \
+        else (lambda r: r.modeled_gbs)
+    vals = [key(r) for r in results]
+    stream_gbs = r_val = None
+    if stream_ref is not None:
+        stream_gbs = stream_ref.measured_gbs
+        r_val = pearson_r([r.measured_gbs for r in results],
+                          [r.modeled_gbs for r in results])
+    return SuiteStats(
+        results=list(results),
+        min_gbs=min(vals), max_gbs=max(vals),
+        hmean_gbs=harmonic_mean(vals),
+        plan=plan,
+        stream_gbs=stream_gbs, stream_r=r_val,
+    )
+
+
 def run_suite(patterns: list[Pattern], *, backend: str = "xla",
               dtype=None, row_width: int = 1, runs: int = 10,
               metric: str = "measured", mode: str = "store",
@@ -172,29 +207,12 @@ def run_suite(patterns: list[Pattern], *, backend: str = "xla",
             eng = GSEngine(p, backend=backend, dtype=dtype,
                            row_width=row_width, mode=mode, seed=seed)
             results.append(eng.run(runs=runs))
-    key = (lambda r: r.measured_gbs) if col == "measured_cpu_gbs" \
-        else (lambda r: r.modeled_gbs)
-    vals = [key(r) for r in results]
-    stream_gbs = r_val = None
+    ref = None
     if stream_r:
         ref = stream_ref if stream_ref is not None else \
             stream_reference(n=stream_n, runs=runs, backend=backend)
-        # paper Eq. 1: R over the STREAM-normalized bandwidth fractions —
-        # does the model rank the suite the way the measured platform
-        # does?  Pearson's R is scale-invariant, so dividing each series
-        # by its platform's STREAM bandwidth cannot change it; compute it
-        # on the raw columns and keep the reference run for the
-        # paper-style stream_gbs anchor the fractions are read against.
-        stream_gbs = ref.measured_gbs
-        r_val = pearson_r([r.measured_gbs for r in results],
-                          [r.modeled_gbs for r in results])
-    return SuiteStats(
-        results=results,
-        min_gbs=min(vals), max_gbs=max(vals),
-        hmean_gbs=harmonic_mean(vals),
-        plan=plan,
-        stream_gbs=stream_gbs, stream_r=r_val,
-    )
+    return aggregate_stats(results, metric=metric, plan=plan,
+                           stream_ref=ref)
 
 
 def run_suite_file(path: str, **kw) -> SuiteStats:

@@ -18,6 +18,9 @@ _EXPORTS = {
     "SpatterClient": ".client",
     "ServerError": ".client",
     "SuiteRequest": ".schema",
+    "Scheduler": ".scheduler",
+    "QueueFull": ".scheduler",
+    "SchedulerStopped": ".scheduler",
 }
 
 __all__ = list(_EXPORTS)

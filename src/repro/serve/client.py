@@ -1,4 +1,4 @@
-"""Client for spatterd (stdlib urllib; see daemon.py / DESIGN.md §10).
+"""Client for spatterd (stdlib http.client; see daemon.py / DESIGN.md §10).
 
 Library::
 
@@ -14,15 +14,34 @@ CLI::
 
     PYTHONPATH=src python -m repro.serve.client \
         --url http://127.0.0.1:8089 --json suites/demo.json [--mesh 8|4x2]
+    PYTHONPATH=src python -m repro.serve.client \
+        --url http://127.0.0.1:8089 --stats
+
+Transport: ONE keep-alive ``http.client.HTTPConnection`` per
+(client, thread) — spatterd speaks HTTP/1.1 with explicit framing
+exactly so a benchmark loop or a polling monitor never pays per-request
+TCP setup.  Connections live in ``threading.local`` storage because the
+same ``SpatterClient`` is routinely shared across submitter threads
+(bench_serve's closed-loop clients, the concurrent tests) and an
+``http.client`` connection is not thread-safe.  Idempotent GETs
+(health/cache/stats/lint) get a small bounded retry on connection
+errors: a daemon restart or an idle-timeout reset shows up as a dead
+cached socket, and remounting it is strictly better than failing a
+read-only probe.  POSTs never retry — a /run may have executed before
+the connection died, and replaying it would silently double work.
 """
 from __future__ import annotations
 
 import argparse
+import http.client
 import json
-import urllib.error
-import urllib.request
+import threading
+from urllib.parse import urlsplit
 
 from .schema import SuiteRequest, parse_mesh
+
+# connection-error retries for idempotent GETs (total attempts = 1 + this)
+GET_RETRIES = 2
 
 
 class ServerError(RuntimeError):
@@ -40,30 +59,88 @@ class SpatterClient:
     def __init__(self, url: str, timeout: float = 600.0):
         self.url = url.rstrip("/")
         self.timeout = timeout
+        parts = urlsplit(self.url if "//" in self.url
+                         else "//" + self.url)
+        if parts.scheme not in ("", "http"):
+            raise ValueError(f"unsupported URL scheme {parts.scheme!r}; "
+                             f"spatterd speaks plain http")
+        if not parts.hostname:
+            raise ValueError(f"URL {url!r} has no host")
+        self._host = parts.hostname
+        self._port = parts.port if parts.port is not None else 80
+        self._prefix = parts.path.rstrip("/")
+        self._local = threading.local()
 
-    def _request(self, path: str, body: dict | None = None) -> dict:
-        req = urllib.request.Request(
-            self.url + path,
-            data=None if body is None else json.dumps(body).encode(),
-            headers={"Content-Type": "application/json"},
-            method="GET" if body is None else "POST")
-        try:
-            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
-                return json.loads(resp.read())
-        except urllib.error.HTTPError as e:
+    # -- connection management ----------------------------------------------
+    def _conn(self) -> http.client.HTTPConnection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = http.client.HTTPConnection(self._host, self._port,
+                                              timeout=self.timeout)
+            self._local.conn = conn
+        return conn
+
+    def _drop(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            self._local.conn = None
             try:
-                msg = json.loads(e.read()).get("error", str(e))
-            except Exception:
-                msg = str(e)
-            raise ServerError(e.code, msg) from None
-        except urllib.error.URLError as e:      # refused / DNS / timeout
-            raise ServerError(0, f"{self.url}: {e.reason}") from None
+                conn.close()
+            except OSError:
+                pass
 
+    def close(self) -> None:
+        """Close THIS thread's cached connection (each thread owns its
+        own; a shared client's other threads are unaffected)."""
+        self._drop()
+
+    # -- transport -----------------------------------------------------------
+    def _request(self, path: str, body: dict | None = None) -> dict:
+        payload = None if body is None else json.dumps(body).encode()
+        method = "GET" if payload is None else "POST"
+        # GETs are idempotent by construction (the daemon's read-only
+        # endpoints): retry across dead keep-alive sockets.  POST /run is
+        # not: one attempt, the caller decides about replays.
+        attempts = 1 + (GET_RETRIES if method == "GET" else 0)
+        err: Exception | None = None
+        for _ in range(attempts):
+            conn = self._conn()
+            try:
+                conn.request(method, self._prefix + path, body=payload,
+                             headers={"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                data = resp.read()
+            except (http.client.HTTPException, OSError) as e:
+                # covers ConnectionError/reset/refused, timeouts, and
+                # half-closed keep-alive sockets (BadStatusLine /
+                # RemoteDisconnected); drop the socket and maybe retry
+                self._drop()
+                err = e
+                continue
+            if resp.will_close:
+                self._drop()
+            if resp.status >= 400:
+                try:
+                    msg = json.loads(data).get("error", "")
+                except (ValueError, AttributeError):
+                    msg = ""
+                raise ServerError(resp.status,
+                                  msg or f"{resp.status} {resp.reason}")
+            return json.loads(data)
+        raise ServerError(0, f"{self.url}: {err}")
+
+    # -- endpoints -----------------------------------------------------------
     def health(self) -> dict:
         return self._request("/healthz")
 
     def cache(self) -> dict:
         return self._request("/cache")
+
+    def stats(self) -> dict:
+        """Live serving stats (GET /stats): lifetime cache counters plus
+        the scheduler snapshot — queue depth, worker occupancy, total and
+        coalesced launch counts (null on a workers=0 daemon)."""
+        return self._request("/stats")
 
     def lint(self) -> dict:
         """spatterlint audit of the daemon's live cache (GET /lint);
@@ -92,9 +169,14 @@ class SpatterClient:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
-        description="POST a JSON suite to a running spatterd")
+        description="POST a JSON suite to a running spatterd, or query "
+                    "its serving stats")
     ap.add_argument("--url", default="http://127.0.0.1:8089")
-    ap.add_argument("--json", required=True, help="suite file (paper §3.3)")
+    ap.add_argument("--json", default=None, help="suite file (paper §3.3)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the daemon's /stats document (cache "
+                         "counters + scheduler queue/worker snapshot) "
+                         "instead of posting a suite")
     # option defaults are None = "not given": an envelope suite file's own
     # fields must not be silently overridden by CLI defaults
     ap.add_argument("-b", "--backend", default=None)
@@ -115,6 +197,17 @@ def main(argv=None) -> None:
     ap.add_argument("--no-digest", action="store_true",
                     help="skip the per-pattern output digests")
     args = ap.parse_args(argv)
+    c = SpatterClient(args.url)
+    if args.stats:
+        if args.json is not None:
+            ap.error("--stats is a read-only verb; drop --json")
+        try:
+            print(json.dumps(c.stats(), indent=2, sort_keys=True))
+        except ServerError as e:
+            raise SystemExit(f"error: {e}")
+        return
+    if args.json is None:
+        ap.error("--json SUITE required (or use --stats)")
     opts = {name: v for name, v in
             [("backend", args.backend), ("runs", args.runs),
              ("mode", args.mode), ("mesh", args.mesh),
@@ -125,7 +218,6 @@ def main(argv=None) -> None:
         opts["stream_r"] = True
     if args.no_digest:
         opts["digest"] = False
-    c = SpatterClient(args.url)
     # ValueError covers client-side schema rejections AND a malformed
     # --json file (JSONDecodeError): both get the same clean one-liner
     # a server-rejected request would
@@ -163,10 +255,17 @@ def print_response(resp: dict) -> None:
     print(f"\nsuite: min {_n(stats['min_gbs']):.2f}  "
           f"max {_n(stats['max_gbs']):.2f}  "
           f"harmonic-mean {_n(stats['hmean_gbs']):.2f} GB/s{extra}")
+    sched = ""
+    if resp.get("serve"):
+        sv = resp["serve"]
+        sched = (f"  queued {sv['queued_ms']:.0f}ms  "
+                 f"launches {sv['launches']} "
+                 f"({sv['coalesced_launches']} coalesced)")
     print(f"serve: {resp['plan']['n_buckets']} buckets  "
           f"pad waste {resp['plan']['pad_waste']:.1%}  "
           f"cache hits {cache['hits']} misses {cache['misses']} "
-          f"(exact compiles this request)  {resp['elapsed_s']:.2f}s")
+          f"(exact compiles this request)  {resp['elapsed_s']:.2f}s"
+          f"{sched}")
 
 
 if __name__ == "__main__":

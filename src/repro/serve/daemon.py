@@ -17,9 +17,12 @@ Endpoints (all JSON; stdlib ``http.server``, no dependencies):
                    lists work as-is).  ``mesh: N`` in the request shards
                    every bucket launch's pattern-batch dim over N devices;
                    ``mesh: [b, l]`` places launches on a 2-D (batch x
-                   lane) mesh (plan.Placement, DESIGN.md §11).
+                   lane) mesh (plan.Placement, DESIGN.md §11).  503 +
+                   ``Retry-After`` when the scheduler queue is full.
     GET  /healthz  liveness + device/backend inventory + lifetime stats
     GET  /cache    lifetime ExecutorCache counters
+    GET  /stats    cache counters + live scheduler snapshot (queue depth,
+                   worker occupancy, launch/coalesce totals)
     GET  /lint     spatterlint audit of the live cache's compiled
                    executables (repro.analysis, DESIGN.md §12) — the
                    report schema the --lint CLI shares
@@ -32,13 +35,18 @@ Quickstart::
 
 Concurrency model: request *handling* is multi-threaded
 (``ThreadingHTTPServer`` — parsing, validation, and serialization overlap
-freely), but suite *execution* is serialized by one run lock.  Two
-reasons: concurrent XLA executions would contend for the same device and
-corrupt each other's min-over-K timings (§3.5), and bracketing each run
-with ``ExecutorCache.stats()`` snapshots under the lock is what makes the
-per-request hits/misses delta exact rather than approximate.  The cache
-itself is additionally lock-protected (plan.ExecutorCache) so /cache and
-/healthz can read counters mid-run.
+freely), and suite *execution* goes through the coalescing work-unit
+scheduler (serve/scheduler.py, DESIGN.md §13): each request decomposes
+into ``BucketWork`` items on a bounded queue, worker threads batch items
+sharing an ``ExecKey`` family into single padded launches, and the
+handler thread blocks on its ticket.  Per-request telemetry stays exact
+WITHOUT a global lock: each compile is attributed to the one launch that
+claimed the executable's ``_BuildFuture``, so summed per-request
+``misses`` equal the cache's lifetime compile count.  ``workers=0``
+retains the PR 4 serialized path — one run lock, stats-snapshot deltas —
+as the scheduling baseline ``benchmarks/bench_serve.py`` measures
+against.  The cache itself is additionally lock-protected
+(plan.ExecutorCache) so /cache and /healthz can read counters mid-run.
 """
 from __future__ import annotations
 
@@ -49,10 +57,17 @@ import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.core import backends as B
-from repro.core.plan import ExecutorCache, default_cache
-from repro.core.suite import run_suite, stream_reference
+from repro.core.plan import ExecutorCache, SuitePlan, default_cache, make_work
+from repro.core.suite import aggregate_stats, run_suite, stream_reference
 
 from .schema import SuiteRequest
+from .scheduler import (DEFAULT_MAX_QUEUE, DEFAULT_WORKERS, QueueFull,
+                        Scheduler, SchedulerStopped)
+
+# how long a handler thread waits on its scheduler ticket before giving
+# the client a 500 — far above any admissible suite (schema bounds runs
+# and geometry), so it only fires on a genuinely wedged device
+TICKET_TIMEOUT_S = 600.0
 
 
 def _bounded_put(memo: dict, key, value, bound: int = 32) -> None:
@@ -72,13 +87,22 @@ class SpatterDaemon:
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 8089, *,
-                 cache: ExecutorCache | None = None, quiet: bool = True):
+                 cache: ExecutorCache | None = None, quiet: bool = True,
+                 workers: int = DEFAULT_WORKERS,
+                 max_queue: int = DEFAULT_MAX_QUEUE):
         self.cache = cache if cache is not None else default_cache()
         self.quiet = quiet
         self.started_at = time.time()
         self.n_requests = 0
+        # workers >= 1: the coalescing scheduler serves every run.
+        # workers == 0: PR 4 behavior — execution serialized on _run_lock,
+        # telemetry from stats-snapshot deltas — kept as the measurable
+        # scheduling baseline (bench_serve) and a debugging fallback.
+        self.scheduler = None if workers == 0 else Scheduler(
+            self.cache, workers=workers, max_queue=max_queue)
         self._run_lock = threading.Lock()
         self._memo_lock = threading.Lock()     # guards _placements mutation
+        self._state_lock = threading.Lock()    # guards request counters
         self._placements: dict[tuple, object] = {}   # (shape, axis) -> Placement
         self._stream_refs: dict[tuple, object] = {}   # memoized STREAM runs
         self._thread: threading.Thread | None = None
@@ -109,7 +133,13 @@ class SpatterDaemon:
         self._httpd.serve_forever()
 
     def stop(self) -> None:
+        """Graceful drain: stop accepting connections, let queued and
+        in-flight scheduler work finish (their handler threads still
+        write responses — ``daemon_threads`` only abandons them at
+        process exit), then release the port."""
         self._httpd.shutdown()
+        if self.scheduler is not None:
+            self.scheduler.stop(drain=True)
         self._httpd.server_close()
         if self._thread is not None:
             self._thread.join(timeout=10)
@@ -149,34 +179,78 @@ class SpatterDaemon:
                              Placement.create(shape, batch_axis=axis))
             return self._placements[key]
 
+    def _stream_ref_for(self, req: SuiteRequest):
+        """Memoized STREAM reference RunResult for a stream_r request.
+
+        The reference is its own jitted engine, outside the
+        ExecutorCache; memoizing its RunResult means only the FIRST
+        stream_r request per (backend, n, runs) compiles and times it —
+        warm requests stay execute-only, keeping the misses==0
+        warm-repeat proof honest.  Cold references run outside any lock
+        (two racing cold requests may both compute one; the memo keeps
+        whichever lands last — identical inputs, so nothing drifts).
+        """
+        skey = (req.backend, req.stream_n, req.runs)
+        with self._memo_lock:
+            ref = self._stream_refs.get(skey)
+        if ref is None:
+            ref = stream_reference(n=req.stream_n, runs=req.runs,
+                                   backend=req.backend)
+            with self._memo_lock:
+                _bounded_put(self._stream_refs, skey, ref)
+        return ref
+
     def run_request(self, req: SuiteRequest) -> dict:
         """Execute one validated request; returns the response document.
 
         Raises ValueError for request-shaped problems (bad pattern entry,
         mesh larger than the device count) — the handler maps those to
-        400s — and lets genuine execution failures propagate to a 500.
+        400s — ``QueueFull``/``SchedulerStopped`` for backpressure (503),
+        and lets genuine execution failures propagate to a 500.
         """
         # request-shaped failures (bad patterns, oversized mesh) resolve
-        # BEFORE the run lock: a 400 never queues behind an in-flight run
+        # BEFORE any queueing: a 400 never occupies a queue slot
         patterns = req.build_patterns()
         mesh = self._placement(req.mesh, req.mesh_axis) if req.mesh else None
+        if self.scheduler is None:
+            doc = self._run_serial(req, patterns, mesh)
+        else:
+            doc = self._run_scheduled(req, patterns, mesh)
+        with self._state_lock:
+            self.n_requests += 1
+        return doc
+
+    def _run_scheduled(self, req: SuiteRequest, patterns, mesh) -> dict:
+        """Submit the request's work units to the scheduler and wait.
+
+        ``elapsed_s`` covers submit -> resolve, so it INCLUDES queue
+        wait (reported separately as ``serve.queued_ms``) — under
+        concurrency that is the latency the client actually saw.
+        """
+        t0 = time.perf_counter()
+        stream_ref = self._stream_ref_for(req) if req.stream_r else None
+        plan = SuitePlan.build(patterns)
+        works = make_work(plan, backend=req.backend, runs=req.runs,
+                          row_width=req.row_width, mode=req.mode,
+                          seed=req.seed, placement=mesh, digest=req.digest)
+        ticket = self.scheduler.submit(works)       # QueueFull -> 503
+        ticket.wait(TICKET_TIMEOUT_S)
+        results = [ticket.results[i] for i in range(len(patterns))]
+        stats = aggregate_stats(results, metric=req.metric, plan=plan,
+                                stream_ref=stream_ref)
+        return self._response(req, stats, mesh,
+                              hits=ticket.hits, misses=ticket.misses,
+                              serve=ticket.telemetry(),
+                              elapsed_s=time.perf_counter() - t0)
+
+    def _run_serial(self, req: SuiteRequest, patterns, mesh) -> dict:
+        """PR 4 baseline path (``workers=0``): one run lock, telemetry
+        from cache-stats snapshot deltas bracketing the run."""
         with self._run_lock:
             # timed inside the lock: elapsed_s is THIS request's
             # execution, not time spent queued behind other requests
             t0 = time.perf_counter()
-            stream_ref = None
-            if req.stream_r:
-                # the STREAM reference is its own jitted engine, outside
-                # the ExecutorCache; memoize its RunResult so only the
-                # FIRST stream_r request per (backend, n, runs) compiles
-                # and times it — warm requests stay execute-only, keeping
-                # the misses==0 warm-repeat proof honest
-                skey = (req.backend, req.stream_n, req.runs)
-                stream_ref = self._stream_refs.get(skey)
-                if stream_ref is None:
-                    stream_ref = stream_reference(
-                        n=req.stream_n, runs=req.runs, backend=req.backend)
-                    _bounded_put(self._stream_refs, skey, stream_ref)
+            stream_ref = self._stream_ref_for(req) if req.stream_r else None
             before = self.cache.stats()
             stats = run_suite(
                 patterns, backend=req.backend, runs=req.runs,
@@ -186,17 +260,25 @@ class SpatterDaemon:
                 stream_n=req.stream_n, stream_ref=stream_ref,
                 digest=req.digest)
             after = self.cache.stats()
-            self.n_requests += 1
         delta = after.delta(before)
+        return self._response(req, stats, mesh,
+                              hits=delta.hits, misses=delta.misses,
+                              serve=None,
+                              elapsed_s=time.perf_counter() - t0)
+
+    def _response(self, req: SuiteRequest, stats, mesh, *, hits: int,
+                  misses: int, serve: dict | None,
+                  elapsed_s: float) -> dict:
         return {
             "ok": True,
             "stats": stats.to_json(req.metric),
             "cache": {
                 # this request's traffic; misses == exact compile count
-                "hits": delta.hits,
-                "misses": delta.misses,
-                "size": after.size,
-                "lifetime": after.to_json(),
+                # (attributed per launch on the scheduler path)
+                "hits": hits,
+                "misses": misses,
+                "size": self.cache.stats().size,
+                "lifetime": self.cache.stats().to_json(),
             },
             "plan": {
                 "n_buckets": stats.plan.n_buckets,
@@ -207,7 +289,22 @@ class SpatterDaemon:
                 "pad_waste": stats.plan.pad_waste(
                     *(mesh.grid if mesh is not None else (1, 1))),
             },
-            "elapsed_s": time.perf_counter() - t0,
+            # scheduler telemetry: queued_ms, launches, coalesced_launches
+            # (null on the workers=0 baseline path)
+            "serve": serve,
+            "elapsed_s": elapsed_s,
+        }
+
+    def stats(self) -> dict:
+        """GET /stats: lifetime cache counters + live scheduler state."""
+        return {
+            "ok": True,
+            "n_requests": self.n_requests,
+            "uptime_s": time.time() - self.started_at,
+            "cache": self.cache.stats().to_json(),
+            # null when running the workers=0 serialized baseline
+            "scheduler": (self.scheduler.snapshot()
+                          if self.scheduler is not None else None),
         }
 
     def lint(self) -> dict:
@@ -256,11 +353,14 @@ def _make_handler(daemon: SpatterDaemon):
         def log_message(self, fmt, *args):          # route through the daemon
             daemon._log(fmt, *args)
 
-        def _reply(self, code: int, doc: dict) -> None:
+        def _reply(self, code: int, doc: dict,
+                   headers: dict | None = None) -> None:
             body = json.dumps(doc).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
+            for k, v in (headers or {}).items():
+                self.send_header(k, v)
             self.end_headers()
             self.wfile.write(body)
 
@@ -270,6 +370,8 @@ def _make_handler(daemon: SpatterDaemon):
             elif self.path == "/cache":
                 self._reply(200, {"ok": True,
                                   "cache": daemon.cache.stats().to_json()})
+            elif self.path == "/stats":
+                self._reply(200, daemon.stats())
             elif self.path == "/lint":
                 self._reply(200, daemon.lint())
             else:
@@ -319,6 +421,15 @@ def _make_handler(daemon: SpatterDaemon):
                 return
             try:
                 self._reply(200, daemon.run_request(req))
+            except (QueueFull, SchedulerStopped) as e:
+                # backpressure, decided BEFORE the run touched a queue
+                # slot: the client should retry, not fail — Retry-After
+                # scales with how deep the backlog is
+                retry = 1 if isinstance(e, SchedulerStopped) else max(
+                    1, round(e.depth / max(1, e.limit) * 5))
+                self._reply(503, {"ok": False, "error": str(e),
+                                  "retry_after_s": retry},
+                            headers={"Retry-After": str(retry)})
             except ValueError as e:
                 self._reply(400, {"ok": False, "error": str(e)})
             except Exception as e:   # execution failure: report, stay alive
@@ -334,12 +445,19 @@ def main(argv=None) -> None:
                     "(warm ExecutorCache across requests)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8089)
+    ap.add_argument("--workers", type=int, default=DEFAULT_WORKERS,
+                    help="scheduler worker threads (0 = PR 4 serialized "
+                         "run-lock baseline)")
+    ap.add_argument("--max-queue", type=int, default=DEFAULT_MAX_QUEUE,
+                    help="bounded scheduler queue (BucketWork items); "
+                         "overflow returns 503 + Retry-After")
     ap.add_argument("--verbose", action="store_true",
                     help="log one line per handled request")
     args = ap.parse_args(argv)
-    daemon = SpatterDaemon(args.host, args.port, quiet=not args.verbose)
+    daemon = SpatterDaemon(args.host, args.port, quiet=not args.verbose,
+                           workers=args.workers, max_queue=args.max_queue)
     print(f"spatterd listening on {daemon.url}  "
-          f"(POST /run, GET /healthz)", flush=True)
+          f"(POST /run, GET /healthz, GET /stats)", flush=True)
     try:
         daemon.serve_forever()
     except KeyboardInterrupt:

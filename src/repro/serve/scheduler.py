@@ -1,0 +1,371 @@
+"""Concurrent, coalescing work-unit scheduler for spatterd (DESIGN.md §13).
+
+The paper's thesis is that gather/scatter throughput comes from keeping
+many indexed accesses in flight at once (§1; the Cell study in PAPERS.md
+reaches the same conclusion) — and PR 4's daemon contradicted it at the
+serving layer by serializing every request on one run lock.  This module
+replaces the lock with a scheduler over the planner's work-unit pipeline
+(core/plan.py: ``BucketWork`` / ``launch`` / ``demux``):
+
+* ``submit(works)`` enqueues one item per ``BucketWork`` onto a BOUNDED
+  queue (``QueueFull`` when it would overflow — the daemon maps that to
+  503 + Retry-After, *before* any JAX work) and returns a ``SuiteTicket``
+  the handler thread waits on.
+
+* Worker threads drain the queue with **bucket-affinity batching**: a
+  worker pops the head item (FIFO leader), then sweeps the queue for
+  items sharing its coalesce key — ``(BucketWork.family, runs)``, the
+  batch-stripped canonical ``ExecKey`` plus the timing contract — and
+  stacks them into ONE padded launch.  The batch-polymorphic cache
+  already serves any pow-2 bracket, so concatenating pattern batches
+  just lands in a (possibly larger) bracket of the same family; member
+  rows are assembled per-work with per-work seeds, so each member's
+  buffers — and therefore its demuxed sha256 digest — are bit-identical
+  to the serial ``run_plan`` path (DESIGN.md §13 correctness argument).
+  Coalescing is capped by the per-suite assembly budget
+  (``schema.MAX_SUITE_LANES``) and a member ceiling, so a coalesced
+  launch never assembles more than a maximal single request could.
+
+* Telemetry stays EXACT.  ``launch`` reports whether *it* claimed the
+  executable's ``_BuildFuture`` (``LaunchResult.compiled``); the
+  scheduler attributes that compile to the launch leader's ticket, so
+  ``sum(ticket.misses)`` over any set of requests equals the cache's
+  ``misses`` delta — the same "misses is an exact compile count"
+  contract the serial daemon proved with stats snapshots, now valid
+  under concurrency.  Non-leader participants record a hit (their
+  bucket ran warm on a shared launch).  Per-ticket ``queued_ms`` (worst
+  item wait) and ``coalesced_launches`` make the scheduling itself
+  observable.
+
+Scheduling policy is FIFO with *bounded bucket-affinity bypass*: the
+leader is always the oldest queued item, and a swept item only ever
+jumps the line to ride the leader's launch — it cannot delay anything,
+because it adds member rows to a launch that was departing anyway while
+freeing its own future slot.  Items that don't share the leader's key
+keep strict FIFO order.
+
+``pause()``/``resume()`` gate the workers without touching the queue —
+tests use this to stage a full queue and prove coalescing
+deterministically; operators get the same lever for quiescing a live
+daemon.  ``stop()`` drains: queued and in-flight work completes (tickets
+resolve) and only then do workers exit; ``stop(drain=False)`` fails
+queued tickets with ``SchedulerStopped`` instead.
+
+Thread-safety: ONE condition variable (``self._cv``) guards the queue,
+the counters, and all ticket mutation; launches run outside it.  The
+``analysis/ast_lint.py`` concurrency lint enforces both properties
+structurally (guarded-attr mutations, no blocking calls under the lock
+— ``Condition.wait`` on the *held* lock is the one sanctioned
+exception).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+from repro.core.plan import (BucketWork, ExecutorCache, default_cache, demux,
+                             launch)
+
+from .schema import MAX_SUITE_LANES
+
+# serving defaults, importable by daemon/CLI and pinned by tests
+DEFAULT_WORKERS = 2
+DEFAULT_MAX_QUEUE = 256        # queued BucketWork items, not requests
+MAX_COALESCE_MEMBERS = 1024    # pattern rows one coalesced launch may carry
+
+
+class QueueFull(RuntimeError):
+    """submit() would overflow the bounded queue — backpressure, not
+    failure.  ``.depth`` is the queue depth observed; the daemon turns
+    this into 503 + Retry-After."""
+
+    def __init__(self, depth: int, limit: int):
+        super().__init__(f"scheduler queue full ({depth}/{limit} items)")
+        self.depth = depth
+        self.limit = limit
+
+
+class SchedulerStopped(RuntimeError):
+    """The scheduler is stopping/stopped and accepts no new work."""
+
+
+def _work_cost(work: BucketWork) -> int:
+    """A work unit's assembly budget in the schema's units: lanes (or
+    footprint, whichever dominates) x row_width, summed over members —
+    the same quantity ``SuiteRequest.build_patterns`` bounds per
+    request, so the coalescing cap below speaks the wire schema's
+    language."""
+    return sum(max(p.count * p.index_len, p.footprint()) * work.row_width
+               for p in work.patterns)
+
+
+class _Item:
+    """One queued BucketWork plus its bookkeeping (slots: the queue can
+    hold hundreds of these)."""
+    __slots__ = ("ticket", "work", "key", "cost", "t_enq")
+
+    def __init__(self, ticket: "SuiteTicket", work: BucketWork):
+        self.ticket = ticket
+        self.work = work
+        self.key = (work.family, work.runs)   # coalesce identity
+        self.cost = _work_cost(work)
+        self.t_enq = time.perf_counter()
+
+
+class SuiteTicket:
+    """A submitted request's handle: wait on it, then read results.
+
+    ``results`` maps suite position -> RunResult (complete when ``done``
+    is set without ``error``).  Counters mirror the serial daemon's
+    per-request cache telemetry: ``misses`` is the exact number of
+    compiles attributed to THIS request (it claimed the build),
+    ``hits`` the warm serves, ``launches`` how many bucket launches its
+    work rode, ``coalesced_launches`` how many of those were shared
+    with other requests, ``queued_ms`` the worst queue wait among its
+    items.  All mutation happens under the owning scheduler's lock.
+    """
+
+    def __init__(self, n_works: int):
+        self.results: dict[int, object] = {}
+        self.hits = 0
+        self.misses = 0
+        self.launches = 0
+        self.coalesced_launches = 0
+        self.queued_ms = 0.0
+        self.error: BaseException | None = None
+        self.done = threading.Event()
+        self._pending = n_works
+
+    def wait(self, timeout: float | None = None) -> "SuiteTicket":
+        """Block until the ticket resolves; re-raise its failure."""
+        if not self.done.wait(timeout):
+            raise TimeoutError("scheduler ticket not resolved in time")
+        if self.error is not None:
+            raise self.error
+        return self
+
+    def telemetry(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "launches": self.launches,
+            "coalesced_launches": self.coalesced_launches,
+            "queued_ms": self.queued_ms,
+        }
+
+
+class Scheduler:
+    """Bounded-queue, multi-worker, bucket-affinity-coalescing executor
+    over ``plan.launch``/``plan.demux`` (module docstring; DESIGN.md
+    §13)."""
+
+    def __init__(self, cache: ExecutorCache | None = None, *,
+                 workers: int = DEFAULT_WORKERS,
+                 max_queue: int = DEFAULT_MAX_QUEUE,
+                 max_coalesce_cost: int = MAX_SUITE_LANES,
+                 max_coalesce_members: int = MAX_COALESCE_MEMBERS):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.cache = cache if cache is not None else default_cache()
+        self.max_queue = max_queue
+        self.max_coalesce_cost = max_coalesce_cost
+        self.max_coalesce_members = max_coalesce_members
+        self._cv = threading.Condition()
+        self._queue: deque[_Item] = deque()
+        self._paused = False
+        self._stopping = False
+        self._busy = 0
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.total_launches = 0
+        self.coalesced_launches = 0
+        self._threads = [
+            threading.Thread(target=self._worker,
+                             name=f"spatterd-worker-{i}", daemon=True)
+            for i in range(workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, works: list[BucketWork]) -> SuiteTicket:
+        """Enqueue one request's work units; returns its ticket.
+
+        Raises ``QueueFull`` (backpressure) or ``SchedulerStopped``
+        BEFORE accepting anything — a request is queued whole or not at
+        all, so a ticket's ``_pending`` accounting can never be split
+        across an overflow.
+        """
+        if not works:
+            raise ValueError("submit needs at least one work unit")
+        ticket = SuiteTicket(len(works))
+        items = [_Item(ticket, w) for w in works]
+        with self._cv:
+            if self._stopping:
+                raise SchedulerStopped("scheduler is stopping")
+            if len(self._queue) + len(items) > self.max_queue:
+                raise QueueFull(len(self._queue), self.max_queue)
+            self._queue.extend(items)
+            self.submitted += 1
+            self._cv.notify_all()
+        return ticket
+
+    # -- worker loop ---------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stopping \
+                        and (self._paused or not self._queue):
+                    self._cv.wait()
+                if not self._queue:            # stopping and drained
+                    return
+                batch = self._take_locked()
+                if batch:
+                    self._busy += 1
+            if not batch:                      # head items were all dead
+                continue
+            try:
+                self._execute(batch)
+            finally:
+                with self._cv:
+                    self._busy -= 1
+                    self._cv.notify_all()
+
+    def _take_locked(self) -> list[_Item]:
+        """Pop the FIFO leader plus every queued item sharing its
+        coalesce key, within the assembly-cost and member caps.  Items
+        whose ticket already failed are retired on the spot (their
+        request got its 500 from an earlier launch)."""
+        while self._queue and self._queue[0].ticket.error is not None:
+            self._finish_locked(self._queue.popleft())
+        if not self._queue:
+            return []
+        leader = self._queue.popleft()
+        batch = [leader]
+        cost = leader.cost
+        members = leader.work.n_members
+        for it in list(self._queue):
+            if it.key != leader.key or it.ticket.error is not None:
+                continue
+            if cost + it.cost > self.max_coalesce_cost:
+                continue
+            if members + it.work.n_members > self.max_coalesce_members:
+                continue
+            self._queue.remove(it)
+            batch.append(it)
+            cost += it.cost
+            members += it.work.n_members
+        return batch
+
+    def _finish_locked(self, item: _Item) -> None:
+        """Retire one item of a ticket; resolves the ticket when it was
+        the last."""
+        t = item.ticket
+        t._pending -= 1
+        if t._pending == 0 and not t.done.is_set():
+            if t.error is None:
+                self.completed += 1
+            t.done.set()
+
+    def _fail_locked(self, item: _Item, exc: BaseException) -> None:
+        """Fail an item's whole ticket immediately: the handler thread
+        gets its 500 now; the ticket's still-queued items are retired
+        as dead when a worker reaches them."""
+        t = item.ticket
+        if t.error is None:
+            t.error = exc
+            self.failed += 1
+        if not t.done.is_set():
+            t.done.set()
+        t._pending -= 1
+
+    def _execute(self, batch: list[_Item]) -> None:
+        """Run one (possibly coalesced) launch and demux per ticket."""
+        t_start = time.perf_counter()
+        works = [it.work for it in batch]
+        try:
+            result = launch(works, self.cache)
+            demuxed, offset = [], 0
+            for it in batch:
+                demuxed.append(demux(result, it.work, offset))
+                offset += it.work.n_members
+        except BaseException as exc:
+            with self._cv:
+                self.total_launches += 1
+                for it in batch:
+                    self._fail_locked(it, exc)
+            return
+        shared = len(batch) > 1
+        with self._cv:
+            self.total_launches += 1
+            if shared:
+                self.coalesced_launches += 1
+            for i, it in enumerate(batch):
+                t = it.ticket
+                if t.error is None:
+                    for pos, r in demuxed[i]:
+                        t.results[pos] = r
+                t.launches += 1
+                if shared:
+                    t.coalesced_launches += 1
+                # the compile (if any) belongs to the launch leader:
+                # serve_poly_info said whether THIS launch claimed the
+                # _BuildFuture, so summed ticket misses == cache misses
+                if i == 0 and result.compiled:
+                    t.misses += 1
+                else:
+                    t.hits += 1
+                t.queued_ms = max(t.queued_ms,
+                                  (t_start - it.t_enq) * 1e3)
+                self._finish_locked(it)
+
+    # -- control plane -------------------------------------------------------
+    def pause(self) -> None:
+        """Stop workers from taking NEW batches (in-flight ones finish).
+        Submissions still queue; tests stage a full queue under pause to
+        make coalescing deterministic."""
+        with self._cv:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._cv:
+            self._paused = False
+            self._cv.notify_all()
+
+    def stop(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Shut the workers down.  With ``drain`` (default) queued and
+        in-flight work completes and every ticket resolves before the
+        workers exit; with ``drain=False`` queued tickets fail with
+        ``SchedulerStopped`` (in-flight launches still finish — a JAX
+        execution cannot be cancelled midway)."""
+        with self._cv:
+            self._stopping = True
+            self._paused = False
+            if not drain:
+                while self._queue:
+                    self._fail_locked(self._queue.popleft(),
+                                      SchedulerStopped("scheduler stopped"))
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=timeout)
+
+    def snapshot(self) -> dict:
+        """Queue/worker occupancy + lifetime counters (GET /stats)."""
+        with self._cv:
+            return {
+                "workers": len(self._threads),
+                "busy": self._busy,
+                "queue_depth": len(self._queue),
+                "max_queue": self.max_queue,
+                "paused": self._paused,
+                "stopping": self._stopping,
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "total_launches": self.total_launches,
+                "coalesced_launches": self.coalesced_launches,
+            }

@@ -21,9 +21,25 @@ bare suite format ``load_suite`` already reads — a JSON list of
      "stream_n": 4194304}
 
 Every field is validated HERE, before any JAX work starts, so a bad
-request is a 400 with a one-line reason and never occupies the daemon's
-run lock.  Unknown envelope keys are rejected too — the missing-``mode=``
-bug class this PR fixes started life as a silently-dropped option.
+request is a 400 with a one-line reason and never occupies a scheduler
+queue slot.  Unknown envelope keys are rejected too — the
+missing-``mode=`` bug class started life as a silently-dropped option.
+
+Responses: a 200 carries ``stats`` (SuiteStats.to_json), ``cache``
+(per-request hits/misses — misses is an EXACT compile count, attributed
+per launch by the scheduler — plus lifetime counters), ``plan``
+(n_buckets/pad_waste), ``serve`` (scheduler telemetry: ``queued_ms``,
+``launches``, ``coalesced_launches``; null on a workers=0 daemon), and
+``elapsed_s``.  When the scheduler's bounded queue is full the daemon
+answers **503 with a Retry-After header** and a ``retry_after_s`` field
+— backpressure decided before the request costs anything; clients should
+back off and retry the identical request (DESIGN.md §13).
+
+The geometry budget below (``MAX_SUITE_LANES``) does double duty: it
+bounds one request's assembled buffers AND caps how many concurrent
+requests' work units the scheduler may coalesce into a single launch
+(serve/scheduler.py), so a coalesced launch never assembles more than a
+maximal single request could.
 """
 from __future__ import annotations
 

@@ -218,6 +218,127 @@ def test_rule_fires_serve_blocking_under_lock():
     assert "sleep" in hits[0].message
 
 
+BAD_SCHEDULER_SRC = textwrap.dedent("""\
+    import threading
+    import time
+
+
+    class BadScheduler:
+        def __init__(self):
+            self._cv = threading.Condition()
+            self.queue = []
+            self.busy = 0
+
+        def submit(self, item):
+            with self._cv:
+                self.queue.append(item)
+                self._cv.notify_all()
+
+        def steal(self, item):
+            self.queue.remove(item)
+
+        def tick(self):
+            self.busy += 1
+
+        def _drain_locked(self):
+            self.busy -= 1
+            time.sleep(1)
+
+        def park(self, ev):
+            with self._cv:
+                self._cv.wait()
+                self._cv.wait_for(lambda: self.queue)
+                ev.wait()
+    """)
+
+
+def test_ast_lint_condition_variable_counts_as_lock():
+    # the scheduler's idiom: with self._cv: acquires the Condition's
+    # lock, so a mutation inside seeds guarded-attr inference and the
+    # unguarded mutations elsewhere fire — extending the PR 6 lint to
+    # cover serve/scheduler.py without annotations
+    violations = lint_source(BAD_SCHEDULER_SRC, "bad_scheduler.py")
+    lock = _fired(violations, "serve-lock-discipline")
+    assert {v.location.split(":")[-1] for v in lock} == {"17", "20"}
+    assert all("queue" in v.message or "busy" in v.message for v in lock)
+
+
+def test_ast_lint_locked_suffix_method_convention():
+    # *_locked methods assert caller-held locks: their mutations count
+    # as guarded (busy -= 1 on line 23 must NOT fire) while blocking
+    # calls inside them DO fire, same as a lexical with-block
+    violations = lint_source(BAD_SCHEDULER_SRC, "bad_scheduler.py")
+    lines = {v.location.split(":")[-1]
+             for v in violations if v.rule == "serve-lock-discipline"}
+    assert "23" not in lines
+    blocking = _fired(violations, "serve-blocking-under-lock")
+    assert any("sleep" in v.message and v.location.endswith(":24")
+               for v in blocking)
+
+
+def test_ast_lint_sanctions_wait_on_held_cv_only():
+    # Condition.wait / wait_for on the HELD cv atomically release the
+    # lock — the one blocking call cv code cannot exist without — but
+    # ev.wait() under the cv is a genuine deadlock shape and stays
+    # flagged
+    violations = lint_source(BAD_SCHEDULER_SRC, "bad_scheduler.py")
+    blocking = [v for v in violations
+                if v.rule == "serve-blocking-under-lock"]
+    flagged_lines = {v.location.split(":")[-1] for v in blocking}
+    assert "28" not in flagged_lines          # self._cv.wait()
+    assert "29" not in flagged_lines          # self._cv.wait_for(...)
+    assert "30" in flagged_lines              # ev.wait() under the cv
+
+
+def test_ast_lint_lock_token_matching_is_word_based():
+    # "_recv" must not read as a cv; "state_cond" must — token-wise
+    # matching, not substring soup
+    from repro.analysis.ast_lint import _is_lock_expr
+    import ast as _ast
+
+    def expr(s):
+        return _ast.parse(s, mode="eval").body
+
+    assert not _is_lock_expr(expr("self._recv"))
+    assert _is_lock_expr(expr("self._cv"))
+    assert _is_lock_expr(expr("self.state_cond"))
+    assert _is_lock_expr(expr("self._memo_lock"))
+    assert not _is_lock_expr(expr("self.blocked"))
+
+
+def test_rule_fires_canonical_exec_key():
+    # a key a coalescing bug could mint: un-padded combined batch,
+    # non-pow2 geometry, dtype alias, unparseable placement spelling
+    from repro.core.plan import ExecKey
+    from repro.analysis.rules import ExecUnit
+    bad = ExecKey(backend="xla", kind="gather", idx_len=24, footprint=48,
+                  dtype="f32", row_width=1, mode="", batch=6,
+                  placement="mesh(4,2)")
+    unit = ExecUnit(key=bad, builder=None, avals=())
+    hits = _fired(run_rules(unit, ["canonical-exec-key"]),
+                  "canonical-exec-key")
+    msgs = " | ".join(v.message for v in hits)
+    assert "bracket-stable" in msgs           # batch=6 not padded
+    assert "pow-2" in msgs                    # idx_len=24 / footprint=48
+    assert "canonical dtype" in msgs          # "f32" alias
+    assert "placement" in msgs                # placement_grid can't parse
+
+
+def test_canonical_exec_key_accepts_planner_keys_and_adhoc_units():
+    from repro.core.plan import BucketSpec, bucket_key
+    from repro.analysis.rules import ExecUnit
+    # exactly what the hot path and a coalesced launch both mint
+    good = bucket_key("xla", BucketSpec("scatter", 8, 16), jnp.float32,
+                      1, "store", 6, None)     # batch 6 -> bracket 8
+    assert good.batch == 8
+    unit = ExecUnit(key=good, builder=None, avals=())
+    assert run_rules(unit, ["canonical-exec-key"]) == []
+    # unit_for's zeroed ad-hoc keys are out of scope, not violations
+    adhoc = unit_for(jax.jit(lambda x: x + 1), (X,), backend="xla",
+                     kind="gather")
+    assert run_rules(adhoc, ["canonical-exec-key"]) == []
+
+
 def test_ast_lint_allows_unguarded_by_design_state():
     # attributes never mutated under ANY lock are handler-local by
     # design (the daemon's server-thread handle): no false positive

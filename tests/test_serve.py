@@ -13,6 +13,7 @@ import subprocess
 import sys
 import textwrap
 import threading
+import time
 
 import pytest
 
@@ -362,10 +363,18 @@ def test_bad_framing_gets_an_error_response(served):
     assert served.health()["ok"]               # daemon unharmed
 
 
-def test_concurrent_requests_serialize_with_exact_telemetry(served):
-    # N identical concurrent requests: the run lock serializes execution,
-    # so exactly ONE request compiles each bucket and the others are pure
-    # hits — per-request deltas must sum to one cold + (N-1) warm runs.
+def test_concurrent_requests_keep_exact_telemetry(served):
+    # N identical concurrent requests through the scheduler: every
+    # compile is attributed to exactly ONE request (the launch that
+    # claimed the _BuildFuture), so per-request misses sum EXACTLY to
+    # the daemon's lifetime compile count — no lost or double-counted
+    # compiles under concurrency.  Coalescing may stack requests into
+    # shared launches whose combined batch lands in a larger pow-2
+    # bracket, so the sum can exceed n_buckets (one compile per DISTINCT
+    # bracket actually launched), but never non-deterministically drift
+    # from the cache's own count.  Results stay bit-identical regardless
+    # of which launch carried which request.
+    before = served.stats()["cache"]["misses"]
     results = []
 
     def post():
@@ -378,10 +387,170 @@ def test_concurrent_requests_serialize_with_exact_telemetry(served):
         t.join()
     assert len(results) == 4 and all(r["ok"] for r in results)
     n_buckets = results[0]["plan"]["n_buckets"]
-    assert sum(r["cache"]["misses"] for r in results) == n_buckets
+    compiles = served.stats()["cache"]["misses"] - before
+    assert sum(r["cache"]["misses"] for r in results) == compiles
+    assert compiles >= n_buckets              # each family compiled once
     digests = {tuple(t["digest"] for t in r["stats"]["table"])
                for r in results}
     assert len(digests) == 1                  # all four bit-identical
+    # every request reports its scheduler telemetry
+    assert all(r["serve"]["launches"] == n_buckets for r in results)
+
+
+def test_stats_endpoint_reports_scheduler_snapshot(served):
+    s0 = served.stats()
+    assert s0["ok"] and s0["n_requests"] == 0 and s0["uptime_s"] >= 0
+    assert s0["cache"]["misses"] == 0
+    sched = s0["scheduler"]
+    assert sched["workers"] >= 1 and sched["queue_depth"] == 0
+    assert sched["submitted"] == 0 and sched["total_launches"] == 0
+    served.run_suite(SUITE, runs=1)
+    s1 = served.stats()
+    assert s1["n_requests"] == 1
+    assert s1["cache"]["misses"] > 0            # lifetime compile count
+    assert s1["scheduler"]["submitted"] == 1
+    assert s1["scheduler"]["completed"] == 1
+    assert s1["scheduler"]["total_launches"] >= 1
+
+
+def test_serial_baseline_daemon_has_no_scheduler():
+    # workers=0 keeps the PR 4 run-lock path: /stats says so (null
+    # scheduler) and /run still serves with exact telemetry, minus the
+    # serve section
+    with SpatterDaemon(port=0, cache=ExecutorCache(), workers=0) as d:
+        c = SpatterClient(d.url)
+        assert c.stats()["scheduler"] is None
+        r = c.run_suite(SUITE, runs=1)
+        assert r["ok"] and r["serve"] is None
+        assert r["cache"]["misses"] == r["plan"]["n_buckets"]
+        assert c.run_suite(SUITE, runs=1)["cache"]["misses"] == 0
+
+
+def test_client_keep_alive_reuses_socket(served):
+    # the whole point of the http.client rewrite: one persistent
+    # connection per (client, thread), not a TCP handshake per probe
+    served.health()
+    conn = served._conn()
+    sock = conn.sock
+    assert sock is not None
+    served.cache()
+    served.stats()
+    assert served._conn() is conn and conn.sock is sock
+    # close() drops only this thread's connection
+    served.close()
+    assert getattr(served._local, "conn", None) is None
+
+
+def test_client_retries_get_across_daemon_restart():
+    # an idle daemon restart leaves the client holding a dead keep-alive
+    # socket; the next GET must remount and succeed (bounded retry),
+    # because read-only probes are idempotent
+    d1 = SpatterDaemon(port=0, cache=ExecutorCache()).start()
+    port = d1.port
+    c = SpatterClient(d1.url)
+    assert c.health()["ok"]
+    assert c._conn().sock is not None           # keep-alive socket cached
+    d1.stop()
+    with SpatterDaemon(port=port, cache=ExecutorCache()) as d2:
+        assert d2.port == port
+        assert c.health()["ok"]                 # retried on the dead socket
+    # with no daemon at all, the retry budget exhausts into status 0
+    # (drop the cached socket first: stopped daemons no longer accept,
+    # but an established keep-alive handler thread would still answer)
+    c.close()
+    with pytest.raises(ServerError) as e:
+        c.health()
+    assert e.value.status == 0
+
+
+def test_backpressure_503_with_retry_after():
+    # a full scheduler queue rejects BEFORE the run — the handler maps
+    # QueueFull to 503 + Retry-After while staged requests are unharmed
+    one = [SUITE[0]]                            # single bucket -> 1 item
+    with SpatterDaemon(port=0, cache=ExecutorCache(), workers=1,
+                       max_queue=2) as d:
+        c = SpatterClient(d.url)
+        d.scheduler.pause()
+        results, threads = [], []
+        for _ in range(2):                      # stage the queue full
+            t = threading.Thread(
+                target=lambda: results.append(c.run_suite(one, runs=1)))
+            t.start()
+            threads.append(t)
+        deadline = time.time() + 60
+        while (d.scheduler.snapshot()["queue_depth"] < 2
+               and time.time() < deadline):
+            time.sleep(0.01)
+        assert d.scheduler.snapshot()["queue_depth"] == 2
+        # raw exchange so the Retry-After header is visible
+        import http.client
+        conn = http.client.HTTPConnection(d.host, d.port, timeout=60)
+        try:
+            body = json.dumps({"patterns": one, "runs": 1})
+            conn.request("POST", "/run", body=body,
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            doc = json.loads(resp.read())
+            assert resp.status == 503
+            assert int(resp.getheader("Retry-After")) >= 1
+            assert not doc["ok"] and doc["retry_after_s"] >= 1
+            assert "queue full" in doc["error"]
+        finally:
+            conn.close()
+        assert d.cache.stats().misses == 0      # rejected before any work
+        d.scheduler.resume()
+        for t in threads:
+            t.join(timeout=300)
+        assert len(results) == 2 and all(r["ok"] for r in results)
+        assert c.health()["ok"]
+
+
+def test_acceptance_16_clients_coalesce_to_one_compile():
+    # ISSUE 7 acceptance: 16 concurrent clients posting the same
+    # single-bucket suite cause exactly ONE compile and fewer launches
+    # than requests, with responses bit-identical to the serial
+    # run_plan path.  pause() stages all 16 in the queue so the sweep
+    # is deterministic, then resume() releases one coalesced launch.
+    from repro.core import SuitePlan
+    from repro.core.plan import run_plan
+    one = [SUITE[0]]
+    with SpatterDaemon(port=0, cache=ExecutorCache()) as d:
+        c = SpatterClient(d.url)
+        d.scheduler.pause()
+        results = []
+        threads = [threading.Thread(
+            target=lambda: results.append(c.run_suite(one, runs=1)))
+            for _ in range(16)]
+        for t in threads:
+            t.start()
+        deadline = time.time() + 120
+        while (d.scheduler.snapshot()["queue_depth"] < 16
+               and time.time() < deadline):
+            time.sleep(0.01)
+        assert d.scheduler.snapshot()["queue_depth"] == 16
+        d.scheduler.resume()
+        for t in threads:
+            t.join(timeout=600)
+        snap = d.scheduler.snapshot()
+        compiles = d.cache.stats().misses
+
+    assert len(results) == 16 and all(r["ok"] for r in results)
+    # exactly one compile, attributed to exactly one request
+    assert compiles == 1
+    assert sum(r["cache"]["misses"] for r in results) == 1
+    # fewer launches than requests — in the staged case, exactly one
+    assert snap["total_launches"] == 1 < 16
+    assert snap["coalesced_launches"] == 1
+    assert all(r["serve"]["launches"] == 1 for r in results)
+    assert all(r["serve"]["coalesced_launches"] == 1 for r in results)
+    # bit-identical to the serial run_plan path
+    pats = SuiteRequest.from_json(one).build_patterns()
+    ref = run_plan(SuitePlan.build(pats), runs=1, cache=ExecutorCache(),
+                   digest=True)
+    refd = [r.out_digest for r in ref]
+    assert all(refd)
+    for r in results:
+        assert [t["digest"] for t in r["stats"]["table"]] == refd
 
 
 # ---------------------------------------------------------------------------
