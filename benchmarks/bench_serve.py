@@ -24,6 +24,19 @@ coalesce counters.  The ISSUE 7 acceptance number is
 ``serve/speedup_p50_16shared``: scheduler p50 over the run-lock p50 in
 the SAME process, same suite, same client count.
 
+Part 3 (restart warmth, DESIGN.md §14): what the persistent disk tier
+buys a restarted process.  Three first-request latencies on the same
+suite:
+
+    cold       fresh daemon, empty cache dir: full compile cost
+    warm       same process, identical repeat: the in-process floor
+    restart    a brand-NEW daemon on the now-populated cache dir —
+               zero compiles (asserted), digests bit-identical to cold
+
+merged as ``BENCH_suite.json: restart_warmth``; the headline ratio is
+``cold / restart`` (how much of the ~20x cold penalty the disk tier
+refunds across a process boundary).
+
 The sweep merges into ``BENCH_suite.json`` (key ``serve_concurrency``)
 so the serving-layer trajectory rides the canonical perf record, with
 the same no-silent-clobber guard bench_sharded_suite uses
@@ -34,6 +47,7 @@ from __future__ import annotations
 import json
 import os
 import statistics
+import tempfile
 import threading
 import time
 
@@ -148,6 +162,45 @@ def _sweep_one(workers: int, pats: list[dict], runs: int) -> dict:
     return out
 
 
+def _restart_warmth(pats: list[dict], runs: int) -> dict:
+    """Cold vs in-process-warm vs disk-warm-restart first-request
+    latency (one process boundary crossed between cold and restart)."""
+    cache_dir = tempfile.mkdtemp(prefix="bench-spatterd-")
+
+    def timed(client):
+        t0 = time.perf_counter()
+        r = client.run_suite(pats, backend="xla", runs=runs)
+        return time.perf_counter() - t0, r
+
+    with SpatterDaemon(port=0, cache=ExecutorCache(),
+                       cache_dir=cache_dir) as d:
+        c = SpatterClient(d.url)
+        cold_s, r_cold = timed(c)
+        warm_s, r_warm = timed(c)
+        assert r_warm["cache"]["misses"] == 0, r_warm["cache"]
+        c.close()
+
+    # the restart: a different PROCESS in spirit — fresh ExecutorCache,
+    # fresh daemon, same cache directory.  run_request waits on the
+    # readiness gate, so this latency honestly includes deserialization.
+    with SpatterDaemon(port=0, cache=ExecutorCache(),
+                       cache_dir=cache_dir) as d2:
+        c = SpatterClient(d2.url)
+        restart_s, r_restart = timed(c)
+        assert r_restart["cache"]["misses"] == 0, r_restart["cache"]
+        c.close()
+    d_cold = [t["digest"] for t in r_cold["stats"]["table"]]
+    d_restart = [t["digest"] for t in r_restart["stats"]["table"]]
+    assert d_cold == d_restart and all(d_cold), (d_cold, d_restart)
+
+    return {"cold_ms": cold_s * 1e3, "warm_ms": warm_s * 1e3,
+            "restart_ms": restart_s * 1e3,
+            "compiles_cold": r_cold["cache"]["misses"],
+            "compiles_restart": 0,
+            "restart_speedup": cold_s / restart_s,
+            "warm_floor_ratio": restart_s / warm_s}
+
+
 def run(runs: int = 3, suite: str = DEFAULT_SUITE, count_cap: int = 512,
         *, out_path: str | None = OUT_PATH):
     pats = _load_suite(suite, count_cap)
@@ -203,6 +256,15 @@ def run(runs: int = 3, suite: str = DEFAULT_SUITE, count_cap: int = 512,
     emit("serve/speedup_p50_16", 0.0,
          f"{(ratios['shared'] * ratios['disjoint']) ** 0.5:.2f}x")
 
+    # -- part 3: restart warmth (disk tier across a process boundary) --------
+    warmth = _restart_warmth(pats, runs)
+    emit("serve/restart_cold", warmth["cold_ms"] * 1e3,
+         f"compiles={warmth['compiles_cold']}")
+    emit("serve/restart_warm", warmth["restart_ms"] * 1e3,
+         "compiles=0 (disk)")
+    emit("serve/restart_speedup", 0.0,
+         f"{warmth['restart_speedup']:.1f}x")
+
     # -- merge into the canonical perf record --------------------------------
     if out_path:
         root = os.path.abspath(os.path.join(os.path.dirname(__file__),
@@ -214,6 +276,7 @@ def run(runs: int = 3, suite: str = DEFAULT_SUITE, count_cap: int = 512,
             with open(out_path) as f:
                 doc = json.load(f)
         doc["serve_concurrency"] = sweep
+        doc["restart_warmth"] = warmth
         with open(out_path, "w") as f:
             json.dump(doc, f, indent=2)
         emit("serve/json", 0.0, out_path)

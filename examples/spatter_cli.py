@@ -114,6 +114,9 @@ def main():
                     help="--serve bind address (default 127.0.0.1)")
     ap.add_argument("--port", type=int, default=None,
                     help="--serve port (default 8089)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="--serve: persist compiled executables here so a "
+                         "restarted daemon starts warm (DESIGN.md §14)")
     args = ap.parse_args()
 
     def _given(names):
@@ -128,7 +131,8 @@ def main():
         # contradiction, not something to drop silently
         bad = _given(("json", "no_batch", "client", "kernel", "pattern",
                       "delta", "count", "runs", "stream_r", "host",
-                      "port", "stats")) + (["--serve"] if args.serve else [])
+                      "port", "stats",
+                      "cache_dir")) + (["--serve"] if args.serve else [])
         if bad:
             ap.error(f"{', '.join(bad)}: not applicable to --lint "
                      f"(static audit; only --mesh/--backend/--mode/"
@@ -173,7 +177,10 @@ def main():
         from repro.serve import daemon
         host = LOCAL_DEFAULTS["host"] if args.host is None else args.host
         port = LOCAL_DEFAULTS["port"] if args.port is None else args.port
-        daemon.main(["--host", host, "--port", str(port)])
+        argv = ["--host", host, "--port", str(port)]
+        if args.cache_dir is not None:
+            argv += ["--cache-dir", args.cache_dir]
+        daemon.main(argv)
         return
 
     if args.client:
@@ -181,7 +188,8 @@ def main():
             # the read-only stats verb: no suite, no execution options
             extra = _given(("json", "no_batch", "mesh", "mode", "backend",
                             "row_width", "runs", "kernel", "pattern",
-                            "delta", "count", "stream_r", "host", "port"))
+                            "delta", "count", "stream_r", "host", "port",
+                            "cache_dir"))
             if extra:
                 ap.error(f"{', '.join(extra)}: --stats is a read-only "
                          f"query; it takes only --client URL")
@@ -197,7 +205,7 @@ def main():
         if single:
             ap.error(f"{', '.join(single)}: single-pattern options don't "
                      f"apply to --client suite posts (use --json)")
-        local = _given(("host", "port"))
+        local = _given(("host", "port", "cache_dir"))
         if local:
             ap.error(f"{', '.join(local)}: --serve options — the target "
                      f"daemon is the --client URL")
@@ -221,7 +229,7 @@ def main():
         sc.main(argv)
         return
 
-    stray = _given(("host", "port"))
+    stray = _given(("host", "port", "cache_dir"))
     if stray:
         ap.error(f"{', '.join(stray)}: --serve options (add --serve, or "
                  f"target a running daemon with --client URL)")

@@ -120,29 +120,37 @@ def lint_cache(cache, rules=None) -> LintReport:
     """Audit every compiled entry of a LIVE ExecutorCache.
 
     Launch avals are reconstructed from each ExecKey alone
-    (``placement_grid`` + ``bucket_avals``), so the audit holds exactly
-    the information the key promises — if the key lies about its
-    executable, a rule fires.  Read-only: ``cache.entries()`` perturbs
-    neither counters nor LRU order.
-    """
-    import jax.numpy as jnp
+    (``plan.key_avals``), so the audit holds exactly the information the
+    key promises — if the key lies about its executable, a rule fires.
+    Read-only: ``cache.entries()`` perturbs neither counters nor LRU
+    order.
 
-    from repro.core.plan import (BucketSpec, bucket_avals, pad_lanes,
-                                 placement_grid)
+    Disk-restored entries (``fn.restored`` — diskcache.py) trace to an
+    opaque ``call_exported`` primitive, so trace-based rules cannot see
+    inside them; they get only the key-shape rules that need no jaxpr.
+    The ``restored`` count in ``meta`` says how many were downgraded.
+    """
+    from repro.core.plan import key_avals
+
+    # the rule subset that inspects ONLY the ExecKey, never the jaxpr —
+    # safe on an opaque restored executable
+    key_only = ("canonical-exec-key",)
     violations: list[Violation] = []
     entries = cache.entries()
+    n_restored = 0
     for key, fn in entries:
-        _, l_shards, _ = placement_grid(key.placement)
-        spec = BucketSpec(kind=key.kind, idx_len=key.idx_len,
-                          footprint=key.footprint)
-        avals = bucket_avals(spec, key.batch,
-                             pad_lanes(key.idx_len, l_shards),
-                             jnp.dtype(key.dtype), key.row_width)
+        avals = key_avals(key)
         unit = ExecUnit(key=key, builder=None, avals=avals, fn=fn)
-        violations.extend(run_rules(unit, rules))
+        if getattr(fn, "restored", False):
+            n_restored += 1
+            names = key_only if rules is None else \
+                tuple(n for n in key_only if n in rules)
+            violations.extend(run_rules(unit, names))
+        else:
+            violations.extend(run_rules(unit, rules))
     return LintReport(violations=violations, n_units=len(entries),
                       rules=_rule_names("executable"),
-                      meta={"source": "live-cache"})
+                      meta={"source": "live-cache", "restored": n_restored})
 
 
 def lint_serve(paths=None, rules=None) -> LintReport:

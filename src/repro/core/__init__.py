@@ -15,6 +15,7 @@ from .engine import GSEngine, RunResult, gs_shardings, SCATTER_MODES
 from .plan import (SuitePlan, BucketSpec, Bucket, ExecutorCache, CacheStats,
                    Placement, ShardedExecutor, as_placement, run_plan,
                    execute_bucket, default_cache, pad_batch, pad_lanes)
+from .diskcache import DiskTier, RestoredExecutable, exec_key_str
 from .suite import run_suite, run_suite_file, stream_reference, \
     harmonic_mean, pearson_r, SuiteStats
 from .tracing import trace_gs, TraceReport, TracedAccess
@@ -28,6 +29,7 @@ __all__ = [
     "SuitePlan", "BucketSpec", "Bucket", "ExecutorCache", "CacheStats",
     "Placement", "ShardedExecutor", "as_placement",
     "run_plan", "execute_bucket", "default_cache", "pad_batch", "pad_lanes",
+    "DiskTier", "RestoredExecutable", "exec_key_str",
     "run_suite", "run_suite_file", "stream_reference", "harmonic_mean",
     "pearson_r", "SuiteStats",
     "trace_gs", "TraceReport", "TracedAccess",

@@ -250,11 +250,20 @@ class CacheStats:
     by a warm executable with a *larger* pattern-batch via ``best_batch``
     instead of compiling an exact-size one.  They are a subset of
     ``hits`` — each one also counts as a plain hit on the larger key.
+
+    ``disk_hits`` counts serves satisfied by the persistent tier
+    (restored AOT executables — no compile ran, so they are NOT misses:
+    a warm restart proves itself with ``misses == 0``).  ``degraded``
+    counts fallback compiles: a requested builder failed and the key was
+    served by the ``xla`` fallback instead (DESIGN.md §14) — a subset of
+    ``misses`` (the fallback did compile).
     """
     hits: int
     misses: int
     size: int
     batch_hits: int = 0
+    disk_hits: int = 0
+    degraded: int = 0
 
     def delta(self, before: "CacheStats") -> "CacheStats":
         """Elementwise difference — every field of the result is a delta
@@ -263,7 +272,9 @@ class CacheStats:
         return CacheStats(hits=self.hits - before.hits,
                           misses=self.misses - before.misses,
                           size=self.size - before.size,
-                          batch_hits=self.batch_hits - before.batch_hits)
+                          batch_hits=self.batch_hits - before.batch_hits,
+                          disk_hits=self.disk_hits - before.disk_hits,
+                          degraded=self.degraded - before.degraded)
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -272,13 +283,15 @@ class CacheStats:
 class _BuildFuture:
     """In-flight compile slot: the owning thread publishes the built
     executable (or the builder's exception) and every racing thread on
-    the same key waits instead of building a duplicate."""
-    __slots__ = ("done", "fn", "exc")
+    the same key waits instead of building a duplicate.  ``degraded`` is
+    set (before ``done``) when the owner served the fallback builder."""
+    __slots__ = ("done", "fn", "exc", "degraded")
 
     def __init__(self):
         self.done = threading.Event()
         self.fn = None
         self.exc = None
+        self.degraded = False
 
 
 class ExecutorCache:
@@ -305,17 +318,29 @@ class ExecutorCache:
     stripped key (``_family``), so the polymorphic lookup scans only that
     family's candidate batches instead of every cached entry under the
     lock on each bucket launch.
+
+    ``disk`` is the optional persistent tier (core/diskcache.DiskTier,
+    DESIGN.md §14): a build owner probes it before compiling (restores
+    count ``disk_hits``, not ``misses``) and persists fresh non-degraded
+    builds after publishing them.  ``fault_hook`` is the fault-injection
+    seam: when set it is called with ``"compile"`` immediately before a
+    builder runs and may raise (serve/faults.py).
     """
 
-    def __init__(self, maxsize: int = 128):
+    def __init__(self, maxsize: int = 128, *, disk=None, fault_hook=None):
         self.maxsize = maxsize
+        self.disk = disk
+        self.fault_hook = fault_hook
         self._entries: OrderedDict[ExecKey, Callable] = OrderedDict()
         self._pending: dict[ExecKey, _BuildFuture] = {}
         self._families: dict[ExecKey, set[int]] = {}   # family -> batches
+        self._degraded_keys: set[ExecKey] = set()
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.batch_hits = 0
+        self.disk_hits = 0
+        self.degraded = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -348,44 +373,120 @@ class ExecutorCache:
         return fn
 
     def _claim_locked(self, key: ExecKey) -> tuple[_BuildFuture, bool]:
-        # caller holds self._lock; returns (future, this thread owns build)
+        # caller holds self._lock; returns (future, this thread owns build).
+        # The owner is NOT counted as a miss here: whether the claim
+        # becomes a miss (builder ran) or a disk_hit (restored from the
+        # persistent tier) is only known when the build resolves
+        # (_await_or_build) — misses must stay the exact compile count.
         fut = self._pending.get(key)
         if fut is None:
             fut = _BuildFuture()
             self._pending[key] = fut
-            self.misses += 1           # exactly one thread owns the build
             return fut, True
         self.hits += 1                 # raced: that build is in flight
         return fut, False
 
+    def _fail_build(self, key: ExecKey, fut: _BuildFuture,
+                    exc: BaseException) -> None:
+        fut.exc = exc
+        with self._lock:
+            if self._pending.get(key) is fut:
+                del self._pending[key]
+        fut.done.set()
+
     def _await_or_build(self, key: ExecKey, fut: _BuildFuture, owner: bool,
-                        builder: Callable[[], Callable]) -> Callable:
-        # runs OUTSIDE the lock: distinct keys compile concurrently
+                        builder: Callable[[], Callable],
+                        fallback: Callable[[], Callable] | None = None
+                        ) -> tuple[Callable, bool, bool]:
+        """Resolve a claimed build; returns ``(fn, compiled, degraded)``.
+
+        Runs OUTSIDE the lock: distinct keys compile concurrently.  The
+        owner first probes the disk tier (a restore compiles nothing —
+        ``disk_hits``, not ``misses``), then runs ``builder`` — and on
+        builder failure, ``fallback`` when given (the pallas→xla
+        degradation path; the key is marked degraded so telemetry can
+        flag every launch it serves).  ``compiled`` is True only when a
+        builder actually ran, which is what keeps ``misses`` exact.
+        """
         if not owner:
             fut.done.wait()
             if fut.exc is not None:
                 raise fut.exc
-            return fut.fn
-        try:
-            fn = builder()
-        except BaseException as e:
-            fut.exc = e
-            with self._lock:
-                if self._pending.get(key) is fut:
-                    del self._pending[key]
-            fut.done.set()
-            raise
+            return fut.fn, False, fut.degraded
+        fn = None
+        degraded = False
+        disk = self.disk
+        if disk is not None:
+            try:
+                fn = disk.load(key)
+            except Exception:
+                fn = None
+        from_disk = fn is not None
+        if fn is None:
+            hook = self.fault_hook
+            try:
+                if hook is not None:
+                    hook("compile")
+                fn = builder()
+            except BaseException as e:
+                if fallback is None:
+                    self._fail_build(key, fut, e)
+                    raise
+                try:
+                    if hook is not None:
+                        hook("compile")
+                    fn = fallback()
+                    degraded = True
+                except BaseException:
+                    self._fail_build(key, fut, e)   # report the root cause
+                    raise e
         with self._lock:
             # insert only if this build's claim is still current — a
             # clear() while we compiled outside the lock emptied _pending,
             # and re-inserting would desync the freshly reset counters
-            # (size > 0 with misses == 0)
+            # (size > 0 with misses == 0).  Counters move under the same
+            # hold as the insert so a stats() snapshot never sees one
+            # without the other.
             if self._pending.get(key) is fut:
                 del self._pending[key]
                 self._insert(key, fn)
+                if from_disk:
+                    self.disk_hits += 1
+                else:
+                    self.misses += 1   # exactly one thread ran the builder
+                if degraded:
+                    self.degraded += 1
+                    self._degraded_keys.add(key)
+        fut.degraded = degraded
         fut.fn = fn
         fut.done.set()
-        return fn
+        # persist fresh, non-degraded builds (degradation must not become
+        # sticky across restarts — §14); store failures are counted by
+        # the tier and never surface here
+        if disk is not None and not from_disk and not degraded:
+            try:
+                disk.store(key, fn, key_avals(key))
+            except Exception:
+                pass
+        return fn, not from_disk, degraded
+
+    def attach_disk(self, tier, preload: bool = True) -> int:
+        """Adopt a persistent tier; optionally preload every verifiable
+        entry into memory (a restarted daemon starts warm).  Returns the
+        number of executables restored.  Deserialization runs outside
+        the lock; only the inserts are serialized."""
+        self.disk = tier
+        if not preload:
+            return 0
+        restored = tier.load_all()
+        n = 0
+        with self._lock:
+            for key, fn in restored:
+                if key not in self._entries:
+                    self._insert(key, fn)
+                    self.disk_hits += 1
+                    n += 1
+        return n
 
     def get(self, key: ExecKey, builder: Callable[[], Callable]) -> Callable:
         with self._lock:
@@ -393,7 +494,7 @@ class ExecutorCache:
             if fn is not None:
                 return fn
             fut, owner = self._claim_locked(key)
-        return self._await_or_build(key, fut, owner, builder)
+        return self._await_or_build(key, fut, owner, builder)[0]
 
     def serve_poly(self, key: ExecKey, builder: Callable[[], Callable]
                    ) -> tuple[Callable, ExecKey]:
@@ -406,14 +507,16 @@ class ExecutorCache:
         neither count a phantom cross-batch hit nor compile at a stale
         larger batch), and ``misses`` stays the exact compile count.
         """
-        fn, served, _ = self.serve_poly_info(key, builder)
+        fn, served, _, _ = self.serve_poly_info(key, builder)
         return fn, served
 
-    def serve_poly_info(self, key: ExecKey, builder: Callable[[], Callable]
-                        ) -> tuple[Callable, ExecKey, bool]:
+    def serve_poly_info(self, key: ExecKey, builder: Callable[[], Callable],
+                        fallback: Callable[[], Callable] | None = None
+                        ) -> tuple[Callable, ExecKey, bool, bool]:
         """``serve_poly`` plus compile attribution: ``(fn, served_key,
-        compiled)`` where ``compiled`` is True iff THIS call claimed the
-        key's ``_BuildFuture`` and ran the builder.
+        compiled, degraded)`` where ``compiled`` is True iff THIS call
+        claimed the key's ``_BuildFuture`` and ran a builder (a restore
+        from the disk tier compiles nothing and reports False).
 
         Exactly one caller per compile sees ``compiled=True`` (racers on
         the same key wait on the in-flight future and see False), so a
@@ -421,6 +524,11 @@ class ExecutorCache:
         delta exactly — the serving scheduler uses this to attribute each
         compile to the one request that claimed it, keeping per-request
         ``misses`` exact without bracketing global counters.
+
+        ``degraded`` is True when the serve is backed by the fallback
+        builder — either this call degraded, or it hit a key an earlier
+        call degraded (``_degraded_keys`` remembers) — so every launch
+        on a degraded executable is flagged, not just the first.
         """
         with self._lock:
             best = self._best_batch_locked(key)
@@ -431,9 +539,11 @@ class ExecutorCache:
                 if fn is not None:
                     if best.batch > key.batch:
                         self.batch_hits += 1
-                    return fn, best, False
+                    return fn, best, False, best in self._degraded_keys
             fut, owner = self._claim_locked(key)
-        return self._await_or_build(key, fut, owner, builder), key, owner
+        fn, compiled, degraded = self._await_or_build(key, fut, owner,
+                                                      builder, fallback)
+        return fn, key, compiled, degraded
 
     def _best_batch_locked(self, key: ExecKey) -> ExecKey | None:
         # caller holds self._lock
@@ -459,11 +569,13 @@ class ExecutorCache:
             return self._best_batch_locked(key)
 
     def stats(self) -> CacheStats:
-        """Consistent (hits, misses, size, batch_hits) snapshot."""
+        """Consistent counter snapshot (one lock hold)."""
         with self._lock:
             return CacheStats(hits=self.hits, misses=self.misses,
                               size=len(self._entries),
-                              batch_hits=self.batch_hits)
+                              batch_hits=self.batch_hits,
+                              disk_hits=self.disk_hits,
+                              degraded=self.degraded)
 
     def entries(self) -> list[tuple[ExecKey, Callable]]:
         """Read-only snapshot of ``(key, executable)`` pairs, LRU order.
@@ -482,9 +594,12 @@ class ExecutorCache:
             # orphan in-flight builds: their completion sees its claim is
             # gone and skips the insert (waiters still receive the fn)
             self._pending.clear()
+            self._degraded_keys.clear()
             self.hits = 0
             self.misses = 0
             self.batch_hits = 0
+            self.disk_hits = 0
+            self.degraded = 0
 
 
 _DEFAULT_CACHE = ExecutorCache()
@@ -746,6 +861,22 @@ def bucket_avals(spec: BucketSpec, batch: int, lanes: int, dtype,
     return (table, idx, vals, keep)
 
 
+def key_avals(key: ExecKey) -> tuple:
+    """Abstract launch operands reconstructed from an ``ExecKey`` alone.
+
+    Every field the avals need rides in the key (that is the cache's
+    one-entry-one-trace contract), so auditors and the persistence layer
+    can trace/serialize an executable without its originating bucket:
+    the live-cache lint (analysis/lint.py), ``DiskTier.store``, and the
+    daemon's ``POST /warm`` zero-buffer calls all reconstruct from here.
+    """
+    _, l_shards, _ = placement_grid(key.placement)
+    spec = BucketSpec(kind=key.kind, idx_len=key.idx_len,
+                      footprint=key.footprint)
+    return bucket_avals(spec, key.batch, pad_lanes(key.idx_len, l_shards),
+                        jnp.dtype(key.dtype), key.row_width)
+
+
 def enumerate_executables(plan: SuitePlan, *, backend: str = "xla",
                           dtype=jnp.float32, row_width: int = 1,
                           mode: str = "store", placement=None,
@@ -999,7 +1130,10 @@ class LaunchResult:
     iff THIS launch claimed the executable's build
     (``ExecutorCache.serve_poly_info``): summed over launches it equals
     the cache's ``misses`` delta exactly, which is how the scheduler
-    attributes each compile to one request.
+    attributes each compile to one request.  ``degraded`` marks a launch
+    served by the xla fallback after the requested backend's builder
+    failed (DESIGN.md §14) — set on EVERY launch of a degraded
+    executable, not only the one that fell back.
     """
     key: ExecKey                      # the key actually served (best_batch)
     t_bucket: float                   # min over runs (paper §3.5)
@@ -1009,6 +1143,7 @@ class LaunchResult:
     real_lanes: tuple[int, ...]       # per member, launch order
     out: np.ndarray | None            # batched output (digest launches)
     compiled: bool
+    degraded: bool = False
 
 
 def make_work(plan: SuitePlan, *, backend: str = "xla", dtype=None,
@@ -1071,7 +1206,12 @@ def launch(works: Sequence[BucketWork],
     key = bucket_key(w0.backend, spec, dtype, w0.row_width, w0.mode,
                      n_members, placement)
     builder = bucket_builder(w0.backend, spec, key.mode, placement)
-    fn, served, compiled = cache.serve_poly_info(key, builder)
+    # graceful degradation: a non-xla builder that fails to compile is
+    # served by the xla builder for the SAME key, flagged degraded —
+    # availability over backend fidelity (DESIGN.md §14)
+    fb = (bucket_builder("xla", spec, key.mode, placement)
+          if w0.backend != "xla" else None)
+    fn, served, compiled, degraded = cache.serve_poly_info(key, builder, fb)
     batch, lanes = served.batch, pad_lanes(spec.idx_len, l_shards)
     patterns = [p for w in works for p in w.patterns]
     seeds = [w.seed for w in works for _ in w.patterns]
@@ -1106,7 +1246,7 @@ def launch(works: Sequence[BucketWork],
                         batch=batch, lanes=lanes, n_members=n_members,
                         real_lanes=tuple(real_lanes),
                         out=np.asarray(out) if want_out else None,
-                        compiled=compiled)
+                        compiled=compiled, degraded=degraded)
 
 
 def demux(result: LaunchResult, work: BucketWork,

@@ -21,6 +21,12 @@ _EXPORTS = {
     "Scheduler": ".scheduler",
     "QueueFull": ".scheduler",
     "SchedulerStopped": ".scheduler",
+    "DeadlineExceeded": ".scheduler",
+    "RequestCancelled": ".scheduler",
+    "FamilyQuarantined": ".scheduler",
+    "FaultInjector": ".faults",
+    "InjectedFault": ".faults",
+    "WorkerKilled": ".faults",
 }
 
 __all__ = list(_EXPORTS)

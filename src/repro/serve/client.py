@@ -27,15 +27,22 @@ same ``SpatterClient`` is routinely shared across submitter threads
 (health/cache/stats/lint) get a small bounded retry on connection
 errors: a daemon restart or an idle-timeout reset shows up as a dead
 cached socket, and remounting it is strictly better than failing a
-read-only probe.  POSTs never retry — a /run may have executed before
-the connection died, and replaying it would silently double work.
+read-only probe.  POSTs never retry on *network* errors — a /run may
+have executed before the connection died, and replaying it would
+silently double work.  A 503, though, is the daemon's own pre-execution
+backpressure verdict (the run never touched a queue slot), so with
+``retries_503 > 0`` the client retries it with jittered exponential
+backoff floored by the server's ``Retry-After`` hint — the fleet-client
+behavior (DESIGN.md §14); the default stays fail-fast.
 """
 from __future__ import annotations
 
 import argparse
 import http.client
 import json
+import random
 import threading
+import time
 from urllib.parse import urlsplit
 
 from .schema import SuiteRequest, parse_mesh
@@ -44,21 +51,44 @@ from .schema import SuiteRequest, parse_mesh
 GET_RETRIES = 2
 
 
+def _retry_after_s(header: str | None) -> float | None:
+    # delta-seconds form only; spatterd never emits the HTTP-date form
+    if header is None:
+        return None
+    try:
+        return max(0.0, float(header))
+    except ValueError:
+        return None
+
+
 class ServerError(RuntimeError):
     """A failed spatterd exchange; ``.status`` is the HTTP code (0 when
-    the daemon could not be reached at all)."""
+    the daemon could not be reached at all), ``.doc`` the parsed error
+    body when there was one, ``.retry_after`` the server's Retry-After
+    hint in seconds (None when absent)."""
 
-    def __init__(self, status: int, message: str):
+    def __init__(self, status: int, message: str, *,
+                 doc: dict | None = None,
+                 retry_after: float | None = None):
         prefix = f"spatterd returned {status}" if status \
             else "cannot reach spatterd"
         super().__init__(f"{prefix}: {message}")
         self.status = status
+        self.doc = doc
+        self.retry_after = retry_after
 
 
 class SpatterClient:
-    def __init__(self, url: str, timeout: float = 600.0):
+    def __init__(self, url: str, timeout: float = 600.0, *,
+                 retries_503: int = 0, backoff_base_s: float = 0.5,
+                 backoff_cap_s: float = 30.0,
+                 backoff_seed: int | None = None):
         self.url = url.rstrip("/")
         self.timeout = timeout
+        self.retries_503 = retries_503
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self._rng = random.Random(backoff_seed)
         parts = urlsplit(self.url if "//" in self.url
                          else "//" + self.url)
         if parts.scheme not in ("", "http"):
@@ -103,7 +133,9 @@ class SpatterClient:
         # not: one attempt, the caller decides about replays.
         attempts = 1 + (GET_RETRIES if method == "GET" else 0)
         err: Exception | None = None
-        for _ in range(attempts):
+        conn_tries = 0
+        tries_503 = 0
+        while conn_tries < attempts:
             conn = self._conn()
             try:
                 conn.request(method, self._prefix + path, body=payload,
@@ -116,22 +148,65 @@ class SpatterClient:
                 # RemoteDisconnected); drop the socket and maybe retry
                 self._drop()
                 err = e
+                conn_tries += 1
                 continue
             if resp.will_close:
                 self._drop()
+            retry_after = _retry_after_s(resp.getheader("Retry-After"))
+            if (resp.status == 503 and method == "POST"
+                    and tries_503 < self.retries_503):
+                # 503 is the daemon's PRE-execution verdict (queue full /
+                # draining): the run never started, so this is the one
+                # POST replay that cannot double work
+                time.sleep(self._backoff_s(tries_503, retry_after))
+                tries_503 += 1
+                continue
             if resp.status >= 400:
+                doc = None
                 try:
-                    msg = json.loads(data).get("error", "")
+                    doc = json.loads(data)
+                    msg = doc.get("error", "")
                 except (ValueError, AttributeError):
                     msg = ""
                 raise ServerError(resp.status,
-                                  msg or f"{resp.status} {resp.reason}")
+                                  msg or f"{resp.status} {resp.reason}",
+                                  doc=doc if isinstance(doc, dict) else None,
+                                  retry_after=retry_after)
             return json.loads(data)
         raise ServerError(0, f"{self.url}: {err}")
+
+    @staticmethod
+    def _shape_suite(patterns, options) -> dict:
+        if isinstance(patterns, str):
+            patterns = json.loads(patterns)
+        if isinstance(patterns, dict):          # envelope document
+            return {**patterns, **options}
+        return {"patterns": list(patterns), **options}
+
+    def _backoff_s(self, attempt: int, retry_after: float | None) -> float:
+        """Jittered exponential delay for 503 retry number ``attempt``,
+        floored by the server's Retry-After hint, capped last so the
+        client's patience bounds even a pathological server hint."""
+        base = self.backoff_base_s * (2 ** attempt) * \
+            (0.5 + self._rng.random())
+        if retry_after is not None:
+            base = max(base, retry_after)
+        return min(base, self.backoff_cap_s)
 
     # -- endpoints -----------------------------------------------------------
     def health(self) -> dict:
         return self._request("/healthz")
+
+    def readyz(self) -> dict:
+        """Readiness document (GET /readyz).  Unlike the other verbs a
+        not-ready 503 is a normal answer here, not a failure: the doc is
+        returned either way and the caller reads ``doc["ready"]``."""
+        try:
+            return self._request("/readyz")
+        except ServerError as e:
+            if e.status == 503 and e.doc is not None:
+                return e.doc
+            raise
 
     def cache(self) -> dict:
         return self._request("/cache")
@@ -158,13 +233,16 @@ class SpatterClient:
         The request is validated client-side first, so a typo'd option
         fails fast with the same message the server would give.
         """
-        if isinstance(patterns, str):
-            patterns = json.loads(patterns)
-        if isinstance(patterns, dict):          # envelope document
-            doc = {**patterns, **options}
-        else:
-            doc = {"patterns": list(patterns), **options}
+        doc = self._shape_suite(patterns, options)
         return self._request("/run", SuiteRequest.from_json(doc).to_json())
+
+    def warm(self, patterns, **options) -> dict:
+        """POST a suite to /warm: compile (or disk-restore) and prime
+        every executable the suite needs WITHOUT running a measured
+        suite — the restart-recovery verb (DESIGN.md §14).  Same
+        patterns/options shapes as :meth:`run_suite`."""
+        doc = self._shape_suite(patterns, options)
+        return self._request("/warm", SuiteRequest.from_json(doc).to_json())
 
 
 def main(argv=None) -> None:
@@ -177,6 +255,16 @@ def main(argv=None) -> None:
                     help="print the daemon's /stats document (cache "
                          "counters + scheduler queue/worker snapshot) "
                          "instead of posting a suite")
+    ap.add_argument("--warm", action="store_true",
+                    help="POST the suite to /warm (compile + prime every "
+                         "executable, no measured runs) instead of /run")
+    ap.add_argument("--deadline-ms", type=int, default=None,
+                    help="per-request queue deadline; an expiry before "
+                         "launch returns 504 without running anything")
+    ap.add_argument("--retries-503", type=int, default=0,
+                    help="retry a backpressure 503 this many times with "
+                         "jittered exponential backoff (Retry-After "
+                         "honored); default fail-fast")
     # option defaults are None = "not given": an envelope suite file's own
     # fields must not be silently overridden by CLI defaults
     ap.add_argument("-b", "--backend", default=None)
@@ -197,7 +285,7 @@ def main(argv=None) -> None:
     ap.add_argument("--no-digest", action="store_true",
                     help="skip the per-pattern output digests")
     args = ap.parse_args(argv)
-    c = SpatterClient(args.url)
+    c = SpatterClient(args.url, retries_503=args.retries_503)
     if args.stats:
         if args.json is not None:
             ap.error("--stats is a read-only verb; drop --json")
@@ -212,7 +300,8 @@ def main(argv=None) -> None:
             [("backend", args.backend), ("runs", args.runs),
              ("mode", args.mode), ("mesh", args.mesh),
              ("row_width", args.row_width), ("metric", args.metric),
-             ("seed", args.seed), ("stream_n", args.stream_n)]
+             ("seed", args.seed), ("stream_n", args.stream_n),
+             ("deadline_ms", args.deadline_ms)]
             if v is not None}
     if args.stream_r:
         opts["stream_r"] = True
@@ -224,6 +313,10 @@ def main(argv=None) -> None:
     try:
         with open(args.json) as f:
             pats = json.load(f)
+        if args.warm:
+            print(json.dumps(c.warm(pats, **opts), indent=2,
+                             sort_keys=True))
+            return
         resp = c.run_suite(pats, **opts)
     except (ServerError, ValueError) as e:
         raise SystemExit(f"error: {e}")

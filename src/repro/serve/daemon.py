@@ -18,14 +18,34 @@ Endpoints (all JSON; stdlib ``http.server``, no dependencies):
                    every bucket launch's pattern-batch dim over N devices;
                    ``mesh: [b, l]`` places launches on a 2-D (batch x
                    lane) mesh (plan.Placement, DESIGN.md §11).  503 +
-                   ``Retry-After`` when the scheduler queue is full.
+                   ``Retry-After`` when the scheduler queue is full;
+                   ``deadline_ms`` in the request arms a queue deadline
+                   mapped to 504 when it expires before launch.
+    POST /warm     prewarm: compile/restore + first-call every executable
+                   a suite needs (zero-filled buffers, nothing timed) so
+                   later /run requests are execute-only
     GET  /healthz  liveness + device/backend inventory + lifetime stats
+    GET  /readyz   readiness, SPLIT from liveness: 503 while the disk
+                   cache preload is running, the scheduler is paused, or
+                   a drain is in progress — a fleet router stops routing
+                   here without declaring the process dead
     GET  /cache    lifetime ExecutorCache counters
     GET  /stats    cache counters + live scheduler snapshot (queue depth,
-                   worker occupancy, launch/coalesce totals)
+                   worker occupancy, launch/coalesce totals, supervision
+                   ledger) + fault-injection and disk-tier telemetry
     GET  /lint     spatterlint audit of the live cache's compiled
                    executables (repro.analysis, DESIGN.md §12) — the
                    report schema the --lint CLI shares
+
+Fault tolerance (DESIGN.md §14): ``cache_dir=`` attaches a crash-safe
+persistent executable tier (core/diskcache.DiskTier) preloaded on a
+background thread at startup, so a restarted daemon serves previously
+seen suites with ``misses == 0``; SIGTERM begins a graceful drain
+(readiness flips off, queued work completes, then the port closes); and
+``faults=`` arms the deterministic fault-injection registry
+(serve/faults.py) whose sites thread through the cache (compile), the
+scheduler (launch, worker), and the disk tier (corruption) — chaos
+tests and the CI ``chaos`` job drive every recovery path through it.
 
 Quickstart::
 
@@ -52,6 +72,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -60,14 +81,20 @@ from repro.core import backends as B
 from repro.core.plan import ExecutorCache, SuitePlan, default_cache, make_work
 from repro.core.suite import aggregate_stats, run_suite, stream_reference
 
+from .faults import ENV_SPEC, FaultInjector
 from .schema import SuiteRequest
-from .scheduler import (DEFAULT_MAX_QUEUE, DEFAULT_WORKERS, QueueFull,
-                        Scheduler, SchedulerStopped)
+from .scheduler import (DEFAULT_MAX_QUEUE, DEFAULT_WORKERS, DeadlineExceeded,
+                        QueueFull, Scheduler, SchedulerStopped)
 
 # how long a handler thread waits on its scheduler ticket before giving
 # the client a 500 — far above any admissible suite (schema bounds runs
 # and geometry), so it only fires on a genuinely wedged device
 TICKET_TIMEOUT_S = 600.0
+
+# extra wait past a request's own deadline before the handler abandons
+# the ticket itself (normally a worker retires expired items first; the
+# grace covers a paused or fully busy pool, where no worker ever looks)
+DEADLINE_GRACE_S = 0.25
 
 
 def _bounded_put(memo: dict, key, value, bound: int = 32) -> None:
@@ -89,17 +116,33 @@ class SpatterDaemon:
     def __init__(self, host: str = "127.0.0.1", port: int = 8089, *,
                  cache: ExecutorCache | None = None, quiet: bool = True,
                  workers: int = DEFAULT_WORKERS,
-                 max_queue: int = DEFAULT_MAX_QUEUE):
+                 max_queue: int = DEFAULT_MAX_QUEUE,
+                 cache_dir: str | None = None,
+                 faults: FaultInjector | None = None):
         self.cache = cache if cache is not None else default_cache()
         self.quiet = quiet
         self.started_at = time.time()
         self.n_requests = 0
+        self.faults = faults
+        if faults is not None and self.cache.fault_hook is None:
+            self.cache.fault_hook = faults.check
+        self.disk = None
+        if cache_dir:
+            from repro.core.diskcache import DiskTier
+            mangle = ((lambda payload: faults.mangle("disk", payload))
+                      if faults is not None else None)
+            self.disk = DiskTier(cache_dir, mangle=mangle)
+        # readiness is NOT liveness: _ready is set once the (background)
+        # disk-cache preload finishes; _draining flips on SIGTERM/stop —
+        # /readyz reports 503 in either state while /healthz stays 200
+        self._ready = threading.Event()
+        self._draining = False
         # workers >= 1: the coalescing scheduler serves every run.
         # workers == 0: PR 4 behavior — execution serialized on _run_lock,
         # telemetry from stats-snapshot deltas — kept as the measurable
         # scheduling baseline (bench_serve) and a debugging fallback.
         self.scheduler = None if workers == 0 else Scheduler(
-            self.cache, workers=workers, max_queue=max_queue)
+            self.cache, workers=workers, max_queue=max_queue, faults=faults)
         self._run_lock = threading.Lock()
         self._memo_lock = threading.Lock()     # guards _placements mutation
         self._state_lock = threading.Lock()    # guards request counters
@@ -123,20 +166,53 @@ class SpatterDaemon:
     def url(self) -> str:
         return f"http://{self.host}:{self.port}"
 
+    def _load(self) -> None:
+        """Background startup loader: preload the disk tier (restored
+        executables count ``disk_hits``, never ``misses``), then flip
+        readiness on.  A failing preload leaves the daemon READY but
+        cold — persistence is an optimization, not a dependency."""
+        try:
+            if self.faults is not None:
+                self.faults.check("load")
+            if self.disk is not None:
+                n = self.cache.attach_disk(self.disk, preload=True)
+                self._log("restored %d executable(s) from %s",
+                          n, self.disk.root)
+        except Exception as e:
+            self._log("disk-cache preload failed (serving cold): %s", e)
+        finally:
+            self._ready.set()
+
+    def _start_loader(self) -> None:
+        threading.Thread(target=self._load, name="spatterd-loader",
+                         daemon=True).start()
+
     def start(self) -> "SpatterDaemon":
+        self._start_loader()
         self._thread = threading.Thread(target=self._httpd.serve_forever,
                                         name="spatterd", daemon=True)
         self._thread.start()
         return self
 
     def serve_forever(self) -> None:
+        self._start_loader()
         self._httpd.serve_forever()
+
+    def begin_drain(self) -> None:
+        """SIGTERM entry point: flip readiness off NOW (a fleet router
+        stops sending new work), then run the blocking drain on a helper
+        thread — ``shutdown()`` must never run on the serving thread, and
+        a signal frame interrupts exactly that thread in the CLI path."""
+        self._draining = True
+        threading.Thread(target=self.stop, name="spatterd-drain",
+                         daemon=True).start()
 
     def stop(self) -> None:
         """Graceful drain: stop accepting connections, let queued and
         in-flight scheduler work finish (their handler threads still
         write responses — ``daemon_threads`` only abandons them at
         process exit), then release the port."""
+        self._draining = True
         self._httpd.shutdown()
         if self.scheduler is not None:
             self.scheduler.stop(drain=True)
@@ -206,8 +282,13 @@ class SpatterDaemon:
         Raises ValueError for request-shaped problems (bad pattern entry,
         mesh larger than the device count) — the handler maps those to
         400s — ``QueueFull``/``SchedulerStopped`` for backpressure (503),
-        and lets genuine execution failures propagate to a 500.
+        ``DeadlineExceeded`` for an expired ``deadline_ms`` (504), and
+        lets genuine execution failures propagate to a 500.
         """
+        # block until the startup disk preload finished: serving a known
+        # suite cold while its warm executables are still deserializing
+        # would break the warm-restart misses==0 proof
+        self._ready.wait(TICKET_TIMEOUT_S)
         # request-shaped failures (bad patterns, oversized mesh) resolve
         # BEFORE any queueing: a 400 never occupies a queue slot
         patterns = req.build_patterns()
@@ -226,6 +307,16 @@ class SpatterDaemon:
         ``elapsed_s`` covers submit -> resolve, so it INCLUDES queue
         wait (reported separately as ``serve.queued_ms``) — under
         concurrency that is the latency the client actually saw.
+
+        A request ``deadline_ms`` arms a scheduler queue deadline:
+        normally a worker retires expired items (``DeadlineExceeded``
+        resolves the ticket); if no worker ever looks (paused/wedged
+        pool) the handler gives up itself after a grace period and
+        CANCELS the ticket, so the expired work is removed from the
+        queue — either way nothing launches after expiry and the client
+        gets a 504.  Any ticket abandoned by timeout is cancelled too
+        (the abandoned-ticket fix: workers must not launch work whose
+        handler — and therefore client — is gone).
         """
         t0 = time.perf_counter()
         stream_ref = self._stream_ref_for(req) if req.stream_r else None
@@ -233,8 +324,19 @@ class SpatterDaemon:
         works = make_work(plan, backend=req.backend, runs=req.runs,
                           row_width=req.row_width, mode=req.mode,
                           seed=req.seed, placement=mesh, digest=req.digest)
-        ticket = self.scheduler.submit(works)       # QueueFull -> 503
-        ticket.wait(TICKET_TIMEOUT_S)
+        deadline_s = req.deadline_ms / 1e3 if req.deadline_ms else None
+        ticket = self.scheduler.submit(works, deadline_s=deadline_s)
+        wait_s = (TICKET_TIMEOUT_S if deadline_s is None
+                  else min(TICKET_TIMEOUT_S, deadline_s + DEADLINE_GRACE_S))
+        try:
+            ticket.wait(wait_s)
+        except TimeoutError:
+            self.scheduler.cancel(ticket)
+            if deadline_s is not None:
+                raise DeadlineExceeded(
+                    f"deadline_ms={req.deadline_ms} expired before the "
+                    f"request's work launched") from None
+            raise
         results = [ticket.results[i] for i in range(len(patterns))]
         stats = aggregate_stats(results, metric=req.metric, plan=plan,
                                 stream_ref=stream_ref)
@@ -295,8 +397,79 @@ class SpatterDaemon:
             "elapsed_s": elapsed_s,
         }
 
+    def warm(self, req: SuiteRequest) -> dict:
+        """POST /warm: make every executable the suite needs hot.
+
+        For each bucket executable the request's plan implies, serve it
+        through the cache (disk restore > compile, with the same
+        pallas→xla degradation the run path gets) and then CALL it once
+        on zero-filled buffers — an AOT-compiled ``fn.lower().compile()``
+        alone would not populate the jit dispatch cache, so the first
+        real request would still pay tracing overhead.  Zero buffers are
+        safe for both kinds: a gather reads row 0, a scatter's all-False
+        keep mask writes nothing.  Nothing is timed and no results are
+        produced; later /run requests are execute-only.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.plan import (bucket_builder, enumerate_executables,
+                                     key_avals)
+        t0 = time.perf_counter()
+        self._ready.wait(TICKET_TIMEOUT_S)
+        patterns = req.build_patterns()
+        mesh = self._placement(req.mesh, req.mesh_axis) if req.mesh else None
+        plan = SuitePlan.build(patterns)
+        units = enumerate_executables(plan, backend=req.backend,
+                                      row_width=req.row_width, mode=req.mode,
+                                      placement=mesh)
+        before = self.cache.stats()
+        compiled = 0
+        for bucket, (key, builder, _) in zip(plan.buckets, units):
+            fb = (bucket_builder("xla", bucket.spec, key.mode, mesh)
+                  if req.backend != "xla" else None)
+            fn, served, built, _ = self.cache.serve_poly_info(key, builder,
+                                                              fb)
+            compiled += bool(built)
+            # first-call at the SERVED batch (best_batch may be larger)
+            args = tuple(jnp.zeros(a.shape, a.dtype)
+                         for a in key_avals(served))
+            if mesh is not None:
+                args = mesh.place(key.kind, args)
+            jax.block_until_ready(fn(*args))
+        delta = self.cache.stats().delta(before)
+        with self._state_lock:
+            self.n_requests += 1
+        return {
+            "ok": True,
+            "n_executables": len(units),
+            "compiled": compiled,
+            "cache": {"hits": delta.hits, "misses": delta.misses,
+                      "disk_hits": delta.disk_hits,
+                      "degraded": delta.degraded,
+                      "lifetime": self.cache.stats().to_json()},
+            "elapsed_s": time.perf_counter() - t0,
+        }
+
+    def readiness(self) -> dict:
+        """GET /readyz: can this process take NEW traffic right now?
+
+        Distinct from /healthz liveness — a loading, paused, or draining
+        daemon is alive (health 200) but not ready (503), which is what
+        a fleet router needs to stop routing without killing the pod.
+        """
+        snap = (self.scheduler.snapshot()
+                if self.scheduler is not None else None)
+        loading = not self._ready.is_set()
+        paused = bool(snap and snap["paused"])
+        draining = self._draining or bool(snap and snap["stopping"])
+        ready = not (loading or paused or draining)
+        return {"ok": ready, "ready": ready, "loading": loading,
+                "paused": paused, "draining": draining}
+
     def stats(self) -> dict:
-        """GET /stats: lifetime cache counters + live scheduler state."""
+        """GET /stats: lifetime cache counters + live scheduler state +
+        fault-injection and disk-tier telemetry."""
         return {
             "ok": True,
             "n_requests": self.n_requests,
@@ -305,6 +478,9 @@ class SpatterDaemon:
             # null when running the workers=0 serialized baseline
             "scheduler": (self.scheduler.snapshot()
                           if self.scheduler is not None else None),
+            "disk": self.disk.stats() if self.disk is not None else None,
+            "faults": (self.faults.snapshot()
+                       if self.faults is not None else None),
         }
 
     def lint(self) -> dict:
@@ -367,6 +543,9 @@ def _make_handler(daemon: SpatterDaemon):
         def do_GET(self):
             if self.path in ("/healthz", "/health"):
                 self._reply(200, daemon.health())
+            elif self.path == "/readyz":
+                doc = daemon.readiness()
+                self._reply(200 if doc["ready"] else 503, doc)
             elif self.path == "/cache":
                 self._reply(200, {"ok": True,
                                   "cache": daemon.cache.stats().to_json()})
@@ -408,10 +587,10 @@ def _make_handler(daemon: SpatterDaemon):
             # drain the body unconditionally: on HTTP/1.1 keep-alive an
             # unread body would be parsed as the NEXT request's start line
             body = self.rfile.read(length)
-            if self.path != "/run":
+            if self.path not in ("/run", "/warm"):
                 self._reply(404, {"ok": False,
                                   "error": f"no such path {self.path!r}; "
-                                           f"POST /run"})
+                                           f"POST /run or /warm"})
                 return
             try:
                 doc = json.loads(body)
@@ -420,7 +599,10 @@ def _make_handler(daemon: SpatterDaemon):
                 self._reply(400, {"ok": False, "error": f"bad request: {e}"})
                 return
             try:
-                self._reply(200, daemon.run_request(req))
+                if self.path == "/warm":
+                    self._reply(200, daemon.warm(req))
+                else:
+                    self._reply(200, daemon.run_request(req))
             except (QueueFull, SchedulerStopped) as e:
                 # backpressure, decided BEFORE the run touched a queue
                 # slot: the client should retry, not fail — Retry-After
@@ -430,6 +612,11 @@ def _make_handler(daemon: SpatterDaemon):
                 self._reply(503, {"ok": False, "error": str(e),
                                   "retry_after_s": retry},
                             headers={"Retry-After": str(retry)})
+            except DeadlineExceeded as e:
+                # the request's own deadline_ms expired in-queue: the
+                # expired work never launched (scheduler contract)
+                self._reply(504, {"ok": False, "error": str(e),
+                                  "deadline_ms": req.deadline_ms})
             except ValueError as e:
                 self._reply(400, {"ok": False, "error": str(e)})
             except Exception as e:   # execution failure: report, stay alive
@@ -451,15 +638,39 @@ def main(argv=None) -> None:
     ap.add_argument("--max-queue", type=int, default=DEFAULT_MAX_QUEUE,
                     help="bounded scheduler queue (BucketWork items); "
                          "overflow returns 503 + Retry-After")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent executable cache directory (JAX AOT "
+                         "serialization): a restarted daemon preloads it "
+                         "and serves previously seen suites with 0 "
+                         "compiles")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec, e.g. "
+                         "'compile:fail:1,worker:kill:2' (default: env "
+                         f"{ENV_SPEC}); see repro.serve.faults")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for injected-latency jitter (reproducible "
+                         "chaos)")
     ap.add_argument("--verbose", action="store_true",
                     help="log one line per handled request")
     args = ap.parse_args(argv)
+    faults = (FaultInjector.from_spec(args.faults, seed=args.fault_seed)
+              if args.faults else FaultInjector.from_env())
     daemon = SpatterDaemon(args.host, args.port, quiet=not args.verbose,
-                           workers=args.workers, max_queue=args.max_queue)
+                           workers=args.workers, max_queue=args.max_queue,
+                           cache_dir=args.cache_dir, faults=faults)
+
+    def _on_sigterm(signum, frame):
+        # graceful drain off the signal frame: readiness flips 503
+        # immediately, the blocking shutdown runs on a helper thread
+        # (shutdown() deadlocks if called from the serving thread)
+        daemon.begin_drain()
+
+    signal.signal(signal.SIGTERM, _on_sigterm)
     print(f"spatterd listening on {daemon.url}  "
-          f"(POST /run, GET /healthz, GET /stats)", flush=True)
+          f"(POST /run /warm, GET /healthz /readyz /stats)", flush=True)
     try:
         daemon.serve_forever()
+        print("spatterd drained cleanly", flush=True)
     except KeyboardInterrupt:
         daemon.stop()
 

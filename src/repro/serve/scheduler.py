@@ -57,6 +57,18 @@ the counters, and all ticket mutation; launches run outside it.  The
 structurally (guarded-attr mutations, no blocking calls under the lock
 — ``Condition.wait`` on the *held* lock is the one sanctioned
 exception).
+
+Fault tolerance (DESIGN.md §14): workers are *supervised* — an
+exception escaping the item loop (previously a silent permanent pool
+shrink) is counted (``dead_workers``) and the thread replaced
+(``respawned``); tickets may carry a **deadline** — work still queued
+past it resolves with ``DeadlineExceeded`` instead of launching (the
+daemon maps that to 504); a work *family* whose launches fail
+``QUARANTINE_AFTER`` consecutive times is quarantined — its queued and
+future items fail fast with ``FamilyQuarantined`` so one poison bucket
+cannot monopolize the workers; and ``cancel(ticket)`` removes an
+abandoned request's queued items (the daemon calls it when the client
+is gone) so workers never launch work nobody will read.
 """
 from __future__ import annotations
 
@@ -73,6 +85,7 @@ from .schema import MAX_SUITE_LANES
 DEFAULT_WORKERS = 2
 DEFAULT_MAX_QUEUE = 256        # queued BucketWork items, not requests
 MAX_COALESCE_MEMBERS = 1024    # pattern rows one coalesced launch may carry
+QUARANTINE_AFTER = 3           # consecutive launch failures -> quarantine
 
 
 class QueueFull(RuntimeError):
@@ -88,6 +101,23 @@ class QueueFull(RuntimeError):
 
 class SchedulerStopped(RuntimeError):
     """The scheduler is stopping/stopped and accepts no new work."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The ticket's deadline passed while its work was still queued —
+    nothing launched for the expired items.  The daemon maps this to
+    504 (the request's ``deadline_ms``)."""
+
+
+class RequestCancelled(RuntimeError):
+    """The ticket was cancelled (``Scheduler.cancel``) — typically the
+    daemon abandoning a request whose client is gone."""
+
+
+class FamilyQuarantined(RuntimeError):
+    """This work family failed ``QUARANTINE_AFTER`` consecutive launches
+    and is quarantined: items fail fast instead of launching (clear with
+    ``Scheduler.clear_quarantine``)."""
 
 
 def _work_cost(work: BucketWork) -> int:
@@ -124,15 +154,24 @@ class SuiteTicket:
     work rode, ``coalesced_launches`` how many of those were shared
     with other requests, ``queued_ms`` the worst queue wait among its
     items.  All mutation happens under the owning scheduler's lock.
+
+    ``deadline`` is an absolute ``time.monotonic()`` instant (or None):
+    a worker reaching a queued item past it retires the item with
+    ``DeadlineExceeded`` instead of launching.  ``degraded_launches``
+    counts launches this request rode that were served by a degraded
+    (fallback-built) executable — threaded from
+    ``LaunchResult.degraded`` so per-request telemetry shows it.
     """
 
-    def __init__(self, n_works: int):
+    def __init__(self, n_works: int, deadline: float | None = None):
         self.results: dict[int, object] = {}
         self.hits = 0
         self.misses = 0
         self.launches = 0
         self.coalesced_launches = 0
+        self.degraded_launches = 0
         self.queued_ms = 0.0
+        self.deadline = deadline
         self.error: BaseException | None = None
         self.done = threading.Event()
         self._pending = n_works
@@ -151,6 +190,7 @@ class SuiteTicket:
             "misses": self.misses,
             "launches": self.launches,
             "coalesced_launches": self.coalesced_launches,
+            "degraded_launches": self.degraded_launches,
             "queued_ms": self.queued_ms,
         }
 
@@ -164,7 +204,8 @@ class Scheduler:
                  workers: int = DEFAULT_WORKERS,
                  max_queue: int = DEFAULT_MAX_QUEUE,
                  max_coalesce_cost: int = MAX_SUITE_LANES,
-                 max_coalesce_members: int = MAX_COALESCE_MEMBERS):
+                 max_coalesce_members: int = MAX_COALESCE_MEMBERS,
+                 faults=None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if max_queue < 1:
@@ -173,36 +214,56 @@ class Scheduler:
         self.max_queue = max_queue
         self.max_coalesce_cost = max_coalesce_cost
         self.max_coalesce_members = max_coalesce_members
+        self._faults = faults          # FaultInjector | None (serve/faults)
         self._cv = threading.Condition()
         self._queue: deque[_Item] = deque()
         self._paused = False
         self._stopping = False
         self._busy = 0
+        self._n_workers = workers
+        self._fail_streak: dict = {}   # family -> consecutive launch fails
+        self._quarantined: set = set()
         self.submitted = 0
         self.completed = 0
         self.failed = 0
+        self.cancelled = 0
+        self.deadline_expired = 0
+        self.dead_workers = 0
+        self.respawned = 0
         self.total_launches = 0
         self.coalesced_launches = 0
+        self.degraded_launches = 0
         self._threads = [
-            threading.Thread(target=self._worker,
+            threading.Thread(target=self._run_worker,
                              name=f"spatterd-worker-{i}", daemon=True)
             for i in range(workers)
         ]
-        for t in self._threads:
+        # snapshot: a worker killed at its loop top appends its OWN
+        # replacement (already started) to _threads while this loop runs
+        for t in list(self._threads):
             t.start()
 
     # -- submission ----------------------------------------------------------
-    def submit(self, works: list[BucketWork]) -> SuiteTicket:
+    def submit(self, works: list[BucketWork], *,
+               deadline_s: float | None = None) -> SuiteTicket:
         """Enqueue one request's work units; returns its ticket.
 
         Raises ``QueueFull`` (backpressure) or ``SchedulerStopped``
         BEFORE accepting anything — a request is queued whole or not at
         all, so a ticket's ``_pending`` accounting can never be split
         across an overflow.
+
+        ``deadline_s`` (relative, seconds) arms a queue deadline: items
+        still queued when it passes are retired with
+        ``DeadlineExceeded`` — they never launch.  Work already
+        in-flight at expiry finishes (a JAX execution cannot be
+        cancelled midway); its result is discarded by the failed ticket.
         """
         if not works:
             raise ValueError("submit needs at least one work unit")
-        ticket = SuiteTicket(len(works))
+        ticket = SuiteTicket(len(works),
+                             deadline=(time.monotonic() + deadline_s
+                                       if deadline_s is not None else None))
         items = [_Item(ticket, w) for w in works]
         with self._cv:
             if self._stopping:
@@ -215,8 +276,37 @@ class Scheduler:
         return ticket
 
     # -- worker loop ---------------------------------------------------------
+    def _run_worker(self) -> None:
+        """Supervised worker shell.  An exception escaping ``_worker``'s
+        item loop used to kill the thread silently, shrinking the pool
+        forever; now it is counted (``dead_workers``) and the thread
+        replaced (``respawned``) — chaos tests kill workers through the
+        fault harness and assert the pool recovers.  Item-level failures
+        never get here: ``_execute`` resolves them into their tickets.
+        """
+        try:
+            self._worker()
+            return                         # clean exit: stopping
+        except BaseException:
+            pass
+        replacement = None
+        with self._cv:
+            self.dead_workers += 1
+            if not self._stopping:
+                self.respawned += 1
+                replacement = threading.Thread(
+                    target=self._run_worker,
+                    name=f"spatterd-worker-r{self.respawned}", daemon=True)
+                self._threads.append(replacement)
+        if replacement is not None:
+            replacement.start()
+
     def _worker(self) -> None:
         while True:
+            # the worker-kill fault fires BEFORE taking from the queue,
+            # so a killed worker can never strand claimed items
+            if self._faults is not None:
+                self._faults.check("worker")
             with self._cv:
                 while not self._stopping \
                         and (self._paused or not self._queue):
@@ -237,11 +327,28 @@ class Scheduler:
 
     def _take_locked(self) -> list[_Item]:
         """Pop the FIFO leader plus every queued item sharing its
-        coalesce key, within the assembly-cost and member caps.  Items
-        whose ticket already failed are retired on the spot (their
-        request got its 500 from an earlier launch)."""
-        while self._queue and self._queue[0].ticket.error is not None:
-            self._finish_locked(self._queue.popleft())
+        coalesce key, within the assembly-cost and member caps.  Dead
+        head items are retired on the spot before a leader is chosen:
+        ticket already failed (their request got its 500 from an
+        earlier launch), deadline passed (``DeadlineExceeded`` — the
+        item never launches), or family quarantined
+        (``FamilyQuarantined`` fail-fast)."""
+        now = time.monotonic()
+        while self._queue:
+            head = self._queue[0]
+            t = head.ticket
+            if t.error is not None:
+                self._finish_locked(self._queue.popleft())
+            elif t.deadline is not None and now > t.deadline:
+                self.deadline_expired += 1
+                self._fail_locked(self._queue.popleft(), DeadlineExceeded(
+                    "deadline expired while queued; work never launched"))
+            elif head.key[0] in self._quarantined:
+                self._fail_locked(self._queue.popleft(), FamilyQuarantined(
+                    f"work family quarantined after {QUARANTINE_AFTER} "
+                    f"consecutive launch failures: {head.key[0]}"))
+            else:
+                break
         if not self._queue:
             return []
         leader = self._queue.popleft()
@@ -251,6 +358,8 @@ class Scheduler:
         for it in list(self._queue):
             if it.key != leader.key or it.ticket.error is not None:
                 continue
+            if it.ticket.deadline is not None and now > it.ticket.deadline:
+                continue               # expired: head loop retires it
             if cost + it.cost > self.max_coalesce_cost:
                 continue
             if members + it.work.n_members > self.max_coalesce_members:
@@ -284,10 +393,20 @@ class Scheduler:
         t._pending -= 1
 
     def _execute(self, batch: list[_Item]) -> None:
-        """Run one (possibly coalesced) launch and demux per ticket."""
+        """Run one (possibly coalesced) launch and demux per ticket.
+
+        Launch failures feed the quarantine ledger: ``QUARANTINE_AFTER``
+        consecutive failures of one family (reset by any success)
+        quarantine it, so a poison bucket stops reaching the workers.
+        """
         t_start = time.perf_counter()
         works = [it.work for it in batch]
+        family = batch[0].key[0]
         try:
+            # the launch fault site: injected exceptions/latency land
+            # exactly where a real launch failure would
+            if self._faults is not None:
+                self._faults.check("launch")
             result = launch(works, self.cache)
             demuxed, offset = [], 0
             for it in batch:
@@ -296,14 +415,21 @@ class Scheduler:
         except BaseException as exc:
             with self._cv:
                 self.total_launches += 1
+                streak = self._fail_streak.get(family, 0) + 1
+                self._fail_streak[family] = streak
+                if streak >= QUARANTINE_AFTER:
+                    self._quarantined.add(family)
                 for it in batch:
                     self._fail_locked(it, exc)
             return
         shared = len(batch) > 1
         with self._cv:
             self.total_launches += 1
+            self._fail_streak.pop(family, None)
             if shared:
                 self.coalesced_launches += 1
+            if result.degraded:
+                self.degraded_launches += 1
             for i, it in enumerate(batch):
                 t = it.ticket
                 if t.error is None:
@@ -312,6 +438,8 @@ class Scheduler:
                 t.launches += 1
                 if shared:
                     t.coalesced_launches += 1
+                if result.degraded:
+                    t.degraded_launches += 1
                 # the compile (if any) belongs to the launch leader:
                 # serve_poly_info said whether THIS launch claimed the
                 # _BuildFuture, so summed ticket misses == cache misses
@@ -324,6 +452,48 @@ class Scheduler:
                 self._finish_locked(it)
 
     # -- control plane -------------------------------------------------------
+    def cancel(self, ticket: SuiteTicket,
+               exc: BaseException | None = None) -> int:
+        """Abandon a ticket: remove its still-queued items and resolve it.
+
+        The abandoned-ticket fix: a handler whose ``ticket.wait``
+        timed out (client gone) previously left queued items live, so
+        workers later launched work nobody would read.  Returns the
+        number of queued items removed.  In-flight items finish (their
+        results are discarded by the failed ticket); a ticket that
+        already completed cleanly is left untouched.
+        """
+        exc = exc if exc is not None else RequestCancelled(
+            "request cancelled; queued work removed")
+        removed = 0
+        with self._cv:
+            if ticket.done.is_set() and ticket.error is None:
+                return 0
+            for it in [i for i in self._queue if i.ticket is ticket]:
+                self._queue.remove(it)
+                self._fail_locked(it, exc)
+                removed += 1
+            newly = False
+            if ticket.error is None:
+                ticket.error = exc
+                self.failed += 1
+                newly = True
+            if not ticket.done.is_set():
+                ticket.done.set()
+                newly = True
+            if removed or newly:
+                self.cancelled += 1
+        return removed
+
+    def clear_quarantine(self) -> int:
+        """Drop every quarantine + failure streak (operator reset after
+        fixing the underlying cause); returns families released."""
+        with self._cv:
+            n = len(self._quarantined)
+            self._quarantined.clear()
+            self._fail_streak.clear()
+        return n
+
     def pause(self) -> None:
         """Stop workers from taking NEW batches (in-flight ones finish).
         Submissions still queue; tests stage a full queue under pause to
@@ -350,14 +520,25 @@ class Scheduler:
                     self._fail_locked(self._queue.popleft(),
                                       SchedulerStopped("scheduler stopped"))
             self._cv.notify_all()
-        for t in self._threads:
+            threads = list(self._threads)   # respawns append concurrently
+        for t in threads:
             t.join(timeout=timeout)
 
     def snapshot(self) -> dict:
-        """Queue/worker occupancy + lifetime counters (GET /stats)."""
+        """Queue/worker occupancy + lifetime counters (GET /stats).
+
+        ``workers`` is the configured pool size; ``alive_workers`` the
+        threads currently running (supervision keeps them equal outside
+        the instant between a death and its respawn); ``dead_workers``/
+        ``respawned`` the supervisor's lifetime ledger.
+        """
         with self._cv:
             return {
-                "workers": len(self._threads),
+                "workers": self._n_workers,
+                "alive_workers": sum(1 for t in self._threads
+                                     if t.is_alive()),
+                "dead_workers": self.dead_workers,
+                "respawned": self.respawned,
                 "busy": self._busy,
                 "queue_depth": len(self._queue),
                 "max_queue": self.max_queue,
@@ -366,6 +547,10 @@ class Scheduler:
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "failed": self.failed,
+                "cancelled": self.cancelled,
+                "deadline_expired": self.deadline_expired,
+                "quarantined_families": len(self._quarantined),
                 "total_launches": self.total_launches,
                 "coalesced_launches": self.coalesced_launches,
+                "degraded_launches": self.degraded_launches,
             }

@@ -18,7 +18,8 @@ bare suite format ``load_suite`` already reads — a JSON list of
      "mesh_axis": "data",
      "seed": 0,                    # host-buffer RNG seed
      "stream_r": false,            # paper Eq. 1 vs a STREAM-like reference
-     "stream_n": 4194304}
+     "stream_n": 4194304,
+     "deadline_ms": 0}             # >0: queue deadline -> 504 on expiry
 
 Every field is validated HERE, before any JAX work starts, so a bad
 request is a 400 with a one-line reason and never occupies a scheduler
@@ -151,6 +152,9 @@ class SuiteRequest:
     digest: bool = True      # per-pattern sha256 bit-identity proof;
                              # opt out to skip the device->host pull +
                              # hash on latency-critical sweeps
+    deadline_ms: int = 0     # 0 = none; else queue deadline: work still
+                             # queued when it expires never launches and
+                             # the request returns 504 (DESIGN.md §14)
 
     def __post_init__(self):
         # choice sets mirrored from core (backends.BACKENDS,
@@ -190,6 +194,13 @@ class SuiteRequest:
             raise ValueError(f"stream_n must be an int in "
                              f"[8, {MAX_PATTERN_LANES}], "
                              f"got {self.stream_n!r}")
+        # deadline_ms: 0 disables; capped at 24h so a typo'd value can't
+        # pin a ticket's absolute deadline into the far future
+        if not isinstance(self.deadline_ms, int) \
+                or isinstance(self.deadline_ms, bool) \
+                or not 0 <= self.deadline_ms <= 86_400_000:
+            raise ValueError(f"deadline_ms must be an int in "
+                             f"[0, 86400000], got {self.deadline_ms!r}")
         # mesh: N devices on the pattern-batch axis, or [b, l] for a 2-D
         # (batch x lane) placement.  Validated HERE — before the daemon's
         # run lock, like everything else — and the daemon additionally

@@ -1,0 +1,324 @@
+"""serve/faults + daemon recovery under injected chaos (DESIGN.md §14).
+
+The acceptance regime per fault class: the daemon STAYS LIVE (health
+200 and a clean request succeeds afterwards), /readyz and /stats
+reflect the state, and the telemetry stays EXACT — the summed
+per-request ``misses`` of successful requests equal the lifetime
+cache-miss delta even with faults firing in between.
+
+``CHAOS_WORKERS`` (env) dials the scheduler pool — the CI chaos job
+runs this file at 2 and 4 workers.
+"""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import ExecutorCache
+from repro.serve import (FaultInjector, InjectedFault, ServerError,
+                         SpatterClient, SpatterDaemon, WorkerKilled)
+from repro.serve.faults import ENV_SPEC, _parse_rule
+
+WORKERS = int(os.environ.get("CHAOS_WORKERS", "2"))
+
+SUITE = [
+    {"name": "g1", "kernel": "Gather", "pattern": "UNIFORM:4:1",
+     "delta": 4, "count": 64},
+    {"name": "g2", "kernel": "Gather", "pattern": "UNIFORM:4:2",
+     "delta": 4, "count": 64},
+    {"name": "s1", "kernel": "Scatter", "pattern": "UNIFORM:4:2",
+     "delta": 2, "count": 64},
+]
+ONE = [SUITE[0]]
+
+
+def _daemon(spec=None, seed=0, **kw):
+    faults = FaultInjector.from_spec(spec, seed=seed) if spec else None
+    kw.setdefault("workers", WORKERS)
+    return SpatterDaemon(port=0, cache=ExecutorCache(), faults=faults, **kw)
+
+
+def _wait(pred, timeout=60.0):
+    deadline = time.time() + timeout
+    while not pred():
+        assert time.time() < deadline, "condition never became true"
+        time.sleep(0.01)
+
+
+# ---------------------------------------------------------------------------
+# the injector itself
+# ---------------------------------------------------------------------------
+
+def test_spec_parsing():
+    inj = FaultInjector.from_spec(
+        "compile:fail:1, launch:delay:2:0.05,worker:kill:3")
+    snap = inj.snapshot()
+    assert [r["site"] for r in snap["rules"]] == ["compile", "launch",
+                                                 "worker"]
+    assert snap["rules"][1]["arg"] == 0.05
+    assert snap["triggered"] == 0
+    for bad in ("compile:fail", "disk:corrupt:0", "nope:fail:1",
+                "compile:explode:1", "launch:delay:1:x", "launch:fail:-2"):
+        with pytest.raises(ValueError):
+            _parse_rule(bad)
+
+
+def test_from_env_reads_spec_and_seed():
+    assert FaultInjector.from_env({}) is None
+    inj = FaultInjector.from_env({ENV_SPEC: "launch:fail:2",
+                                  ENV_SPEC + "_SEED": "7"})
+    assert inj.seed == 7
+    assert inj.snapshot()["rules"][0]["times"] == 2
+
+
+def test_rules_fire_exactly_times_then_exhaust():
+    inj = FaultInjector.from_spec("compile:fail:2,worker:kill:1")
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            inj.check("compile")
+    inj.check("compile")                      # exhausted: passes clean
+    with pytest.raises(WorkerKilled):
+        inj.check("worker")
+    inj.check("worker")
+    inj.check("launch")                       # no rule: always clean
+    snap = inj.snapshot()
+    assert snap["triggered"] == 3
+    assert snap["consults"] == {"compile": 3, "worker": 2, "launch": 1}
+
+
+def test_delay_jitter_is_seeded_deterministic(monkeypatch):
+    import repro.serve.faults as F
+    slept = []
+    monkeypatch.setattr(F.time, "sleep", slept.append)
+    a = FaultInjector.from_spec("launch:delay:3:0.2", seed=11)
+    b = FaultInjector.from_spec("launch:delay:3:0.2", seed=11)
+    for _ in range(3):
+        a.check("launch")
+    first = list(slept)
+    slept.clear()
+    for _ in range(3):
+        b.check("launch")
+    assert slept == first                     # replayable chaos
+    assert all(0.1 <= s < 0.3 for s in first)  # arg x [0.5, 1.5)
+
+
+def test_mangle_flips_one_byte_then_exhausts():
+    inj = FaultInjector.from_spec("disk:corrupt:1")
+    payload = bytes(range(64))
+    bad = inj.mangle("disk", payload)
+    assert bad != payload and len(bad) == len(payload)
+    assert sum(x != y for x, y in zip(bad, payload)) == 1
+    assert inj.mangle("disk", payload) == payload   # exhausted: pass-through
+
+
+# ---------------------------------------------------------------------------
+# daemon recovery, one fault class at a time
+# ---------------------------------------------------------------------------
+
+def test_compile_fault_fails_request_then_recovers():
+    with _daemon("compile:fail:1") as d:
+        c = SpatterClient(d.url)
+        with pytest.raises(ServerError) as e:
+            c.run_suite(ONE, runs=1)
+        assert e.value.status == 500
+        assert "InjectedFault" in str(e.value)
+        assert c.health()["ok"]               # alive after the failure
+        r = c.run_suite(ONE, runs=1)          # injector exhausted
+        assert r["ok"] and r["cache"]["misses"] > 0
+        s = c.stats()
+        assert s["faults"]["triggered"] == 1
+        # exactness through the fault: the failed build never counted
+        assert r["cache"]["misses"] == s["cache"]["misses"]
+
+
+def test_compile_fault_degrades_to_xla_fallback():
+    # a non-xla backend gets the xla fallback builder: the injected
+    # compile failure degrades the key instead of failing the request,
+    # and EVERY launch served by the degraded executable is flagged
+    with _daemon("compile:fail:1") as d:
+        c = SpatterClient(d.url)
+        r1 = c.run_suite(ONE, runs=1, backend="scalar")
+        assert r1["ok"] and r1["serve"]["degraded_launches"] == 1
+        assert r1["cache"]["misses"] == 1     # the fallback DID compile
+        assert r1["cache"]["lifetime"]["degraded"] == 1
+        r2 = c.run_suite(ONE, runs=1, backend="scalar")
+        assert r2["cache"]["misses"] == 0     # warm on the degraded entry
+        assert r2["serve"]["degraded_launches"] == 1   # still flagged
+        assert d.scheduler.snapshot()["degraded_launches"] == 2
+
+
+def test_launch_fault_fails_one_request_only():
+    with _daemon("launch:fail:1") as d:
+        c = SpatterClient(d.url)
+        with pytest.raises(ServerError) as e:
+            c.run_suite(SUITE, runs=1)
+        assert e.value.status == 500
+        r = c.run_suite(SUITE, runs=1)
+        assert r["ok"]
+        s = c.stats()
+        assert s["scheduler"]["failed"] == 1
+        # the injected launch failure fired BEFORE any compile: lifetime
+        # misses are exactly the successful request's
+        assert s["cache"]["misses"] == r["cache"]["misses"]
+
+
+def test_latency_fault_slows_but_serves():
+    with _daemon("launch:delay:1:0.2", seed=3) as d:
+        c = SpatterClient(d.url)
+        r = c.run_suite(ONE, runs=1)
+        assert r["ok"] and r["elapsed_s"] >= 0.1   # jitter floor: 0.5 x arg
+        assert c.stats()["faults"]["triggered"] == 1
+
+
+def test_worker_kill_is_survived_and_respawned():
+    with _daemon("worker:kill:1") as d:
+        c = SpatterClient(d.url)
+        # the kill fires at a worker's loop top; the supervisor counts
+        # the death and replaces the thread
+        _wait(lambda: c.stats()["scheduler"]["dead_workers"] == 1)
+        _wait(lambda: c.stats()["scheduler"]["alive_workers"] == WORKERS)
+        sched = c.stats()["scheduler"]
+        assert sched["respawned"] == 1
+        # a full request train still serves on the recovered pool
+        r1 = c.run_suite(SUITE, runs=1)
+        r2 = c.run_suite(SUITE, runs=1)
+        assert r1["ok"] and r2["ok"]
+        assert r2["cache"]["misses"] == 0
+
+
+def test_quarantine_then_operator_reset():
+    from repro.serve.scheduler import QUARANTINE_AFTER
+    with _daemon(f"launch:fail:{QUARANTINE_AFTER}") as d:
+        c = SpatterClient(d.url)
+        for _ in range(QUARANTINE_AFTER):
+            with pytest.raises(ServerError):
+                c.run_suite(ONE, runs=1)
+        assert c.stats()["scheduler"]["quarantined_families"] == 1
+        # fail-FAST now: the injector is exhausted, so a launch would
+        # succeed — but the family must not reach a worker at all
+        launches = c.stats()["scheduler"]["total_launches"]
+        with pytest.raises(ServerError, match="quarantined"):
+            c.run_suite(ONE, runs=1)
+        assert c.stats()["scheduler"]["total_launches"] == launches
+        assert d.scheduler.clear_quarantine() == 1
+        assert c.run_suite(ONE, runs=1)["ok"]
+
+
+def test_load_fault_serves_cold_not_dead(tmp_path):
+    with _daemon("load:fail:1", cache_dir=str(tmp_path)) as d:
+        c = SpatterClient(d.url)
+        _wait(lambda: c.readyz()["ready"])    # preload failure != not ready
+        r = c.run_suite(ONE, runs=1)
+        assert r["ok"] and r["cache"]["misses"] > 0   # cold, but serving
+        assert c.stats()["faults"]["triggered"] == 1
+
+
+def test_disk_corruption_quarantined_on_restart(tmp_path):
+    root = str(tmp_path)
+    with _daemon("disk:corrupt:1", cache_dir=root) as d:
+        c = SpatterClient(d.url)
+        r1 = c.run_suite(SUITE, runs=1)
+        n_buckets = r1["plan"]["n_buckets"]
+        digests = [t["digest"] for t in r1["stats"]["table"]]
+        assert d.disk.stats()["stores"] == n_buckets
+    # restart on the poisoned directory: the checksum catches exactly
+    # the mangled entry — quarantined + recompiled, never loaded
+    with _daemon(cache_dir=root) as d:
+        c = SpatterClient(d.url)
+        r2 = c.run_suite(SUITE, runs=1)
+        assert [t["digest"] for t in r2["stats"]["table"]] == digests
+        assert r2["cache"]["misses"] == 1     # only the corrupt one
+        s = c.stats()
+        assert s["disk"]["quarantined"] == 1
+        assert s["disk"]["loads"] == n_buckets - 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines + readiness through the HTTP layer
+# ---------------------------------------------------------------------------
+
+def test_deadline_ms_expired_in_queue_is_504_and_launches_nothing():
+    with _daemon() as d:
+        c = SpatterClient(d.url)
+        c.health()                            # daemon fully up
+        d.scheduler.pause()                   # no worker will ever look
+        with pytest.raises(ServerError) as e:
+            c.run_suite(ONE, runs=1, deadline_ms=150)
+        assert e.value.status == 504
+        assert e.value.doc["deadline_ms"] == 150
+        # nothing launched, nothing compiled — and the expired work was
+        # CANCELLED out of the queue, not left for the resumed workers
+        snap = d.scheduler.snapshot()
+        assert snap["total_launches"] == 0 and snap["queue_depth"] == 0
+        assert d.cache.stats().misses == 0
+        d.scheduler.resume()
+        assert c.run_suite(ONE, runs=1, deadline_ms=60_000)["ok"]
+
+
+def test_readyz_splits_from_healthz():
+    with _daemon() as d:
+        c = SpatterClient(d.url)
+        _wait(lambda: c.readyz()["ready"])
+        d.scheduler.pause()
+        doc = c.readyz()                      # 503 but a normal answer
+        assert not doc["ready"] and doc["paused"]
+        assert c.health()["ok"]               # liveness unaffected
+        d.scheduler.resume()
+        assert c.readyz()["ready"]
+
+
+def test_client_retries_503_with_backoff(monkeypatch):
+    # retries_503 turns backpressure into a bounded jittered wait; the
+    # staged queue drains on resume so the retry SUCCEEDS
+    one = ONE
+    with SpatterDaemon(port=0, cache=ExecutorCache(), workers=1,
+                       max_queue=1) as d:
+        c = SpatterClient(d.url, retries_503=4, backoff_base_s=0.05,
+                          backoff_cap_s=0.2, backoff_seed=1)
+        d.scheduler.pause()
+        filler = threading.Thread(
+            target=lambda: SpatterClient(d.url).run_suite(one, runs=1))
+        filler.start()
+        _wait(lambda: d.scheduler.snapshot()["queue_depth"] == 1)
+        resumer = threading.Timer(0.3, d.scheduler.resume)
+        resumer.start()
+        try:
+            r = c.run_suite(one, runs=1)      # 503s, backs off, then lands
+            assert r["ok"]
+        finally:
+            resumer.cancel()
+            d.scheduler.resume()
+            filler.join(timeout=300)
+    # fail-fast default unchanged: no retry without opt-in
+    assert SpatterClient("http://x", timeout=1).retries_503 == 0
+
+
+# ---------------------------------------------------------------------------
+# the acceptance invariant, across the whole fault matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "compile:fail:1",
+    "launch:fail:1",
+    "launch:delay:2:0.05",
+    "worker:kill:1",
+    "compile:fail:1,launch:fail:1,worker:kill:1",
+])
+def test_miss_exactness_survives_fault_matrix(spec):
+    # whatever the chaos, successful responses' summed per-request
+    # misses equal the daemon's lifetime compile count — faults can fail
+    # requests but can never lose or double-count a compile
+    with _daemon(spec, seed=5) as d:
+        c = SpatterClient(d.url)
+        ok = []
+        for suite in (SUITE, ONE, SUITE, SUITE):
+            try:
+                ok.append(c.run_suite(suite, runs=1))
+            except ServerError as e:
+                assert e.status == 500
+        assert len(ok) >= 1                   # chaos never took it down
+        assert c.health()["ok"]
+        lifetime = c.stats()["cache"]["misses"]
+        assert sum(r["cache"]["misses"] for r in ok) == lifetime
+        assert c.stats()["faults"]["triggered"] >= 1

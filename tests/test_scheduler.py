@@ -17,11 +17,16 @@ Determinism recipe: ``pause()`` stages every request in the queue, then
 whole same-key queue into one launch, so "coalesced" stops being a race
 and becomes an assertion.
 """
+import time
+
 import pytest
 
 from repro.core import ExecutorCache, SuitePlan, make_pattern
 from repro.core.plan import make_work, run_plan
-from repro.serve.scheduler import QueueFull, Scheduler, SchedulerStopped
+from repro.serve.scheduler import (QUARANTINE_AFTER, DeadlineExceeded,
+                                   FamilyQuarantined, QueueFull,
+                                   RequestCancelled, Scheduler,
+                                   SchedulerStopped)
 
 # one bucket: the sharpest coalescing target (N requests -> 1 launch)
 SINGLE = SuitePlan.build(
@@ -250,3 +255,101 @@ def test_launch_failure_fails_only_its_ticket():
     assert good.error is None and len(good.results) == 1
     assert victim.results == {}
     assert sched.snapshot()["queue_depth"] == 0
+
+
+# ---------------------------------------------------------------------------
+# deadlines, cancellation, quarantine (ISSUE 8 fault tolerance)
+# ---------------------------------------------------------------------------
+
+def test_deadline_expired_in_queue_never_launches():
+    cache = ExecutorCache()
+    sched = Scheduler(cache, workers=1)
+    try:
+        # pause -> the item sits queued past its deadline -> resume: the
+        # worker must retire it dead, not launch it
+        sched.pause()
+        doomed = sched.submit(make_work(SINGLE, runs=1), deadline_s=0.05)
+        fine = sched.submit(make_work(SINGLE, runs=1, digest=True))
+        time.sleep(0.2)
+        sched.resume()
+        with pytest.raises(DeadlineExceeded):
+            doomed.wait(timeout=300)
+        fine.wait(timeout=300)
+    finally:
+        sched.stop()
+    snap = sched.snapshot()
+    # the expired request launched NOTHING and compiled NOTHING of its
+    # own: the only launch/compile belongs to the healthy neighbor
+    assert snap["deadline_expired"] == 1
+    assert snap["failed"] == 1 and snap["completed"] == 1
+    assert doomed.results == {} and doomed.launches == 0
+    assert snap["total_launches"] == fine.launches == 1
+    assert cache.stats().misses == 1 and fine.misses == 1
+
+
+def test_unexpired_deadline_is_harmless():
+    sched = Scheduler(ExecutorCache(), workers=1)
+    try:
+        t = sched.submit(make_work(SINGLE, runs=1, digest=True),
+                         deadline_s=300.0)
+        t.wait(timeout=300)
+    finally:
+        sched.stop()
+    assert t.error is None and len(t.results) == 1
+    assert sched.snapshot()["deadline_expired"] == 0
+
+
+def test_cancel_removes_queued_items_before_launch():
+    cache = ExecutorCache()
+    sched = Scheduler(cache, workers=1)
+    try:
+        sched.pause()
+        victim = sched.submit(make_work(MIXED, runs=1))
+        survivor = sched.submit(make_work(SINGLE, runs=1, digest=True))
+        removed = sched.cancel(victim)
+        assert removed == 3                      # all queued items pulled
+        assert sched.snapshot()["queue_depth"] == 1
+        sched.resume()
+        with pytest.raises(RequestCancelled):
+            victim.wait(timeout=300)
+        survivor.wait(timeout=300)
+    finally:
+        sched.stop()
+    snap = sched.snapshot()
+    assert snap["cancelled"] == 1 and snap["failed"] == 1
+    # cancelled items never launched: only the survivor's launch ran
+    assert victim.results == {} and victim.launches == 0
+    assert snap["total_launches"] == 1
+    assert cache.stats().misses == 1
+    # cancelling a completed ticket is a no-op
+    assert sched.cancel(survivor) == 0
+    assert sched.snapshot()["cancelled"] == 1
+
+
+def test_quarantine_after_consecutive_launch_failures():
+    from repro.serve.faults import FaultInjector
+    n_fail = QUARANTINE_AFTER
+    faults = FaultInjector.from_spec(f"launch:fail:{n_fail}")
+    sched = Scheduler(ExecutorCache(), workers=1, max_coalesce_members=1,
+                      faults=faults)
+    try:
+        # each submit is its own launch (coalescing capped off), so the
+        # streak builds one failure at a time
+        for _ in range(n_fail):
+            t = sched.submit(make_work(SINGLE, runs=1))
+            with pytest.raises(Exception):
+                t.wait(timeout=300)
+        assert sched.snapshot()["quarantined_families"] == 1
+        # the family now fails FAST: no launch, injector exhausted
+        t = sched.submit(make_work(SINGLE, runs=1))
+        with pytest.raises(FamilyQuarantined):
+            t.wait(timeout=300)
+        assert sched.snapshot()["total_launches"] == n_fail
+        # operator reset: the family launches (and succeeds) again
+        assert sched.clear_quarantine() == 1
+        t = sched.submit(make_work(SINGLE, runs=1, digest=True))
+        t.wait(timeout=300)
+        assert len(t.results) == 1
+    finally:
+        sched.stop()
+    assert sched.snapshot()["quarantined_families"] == 0

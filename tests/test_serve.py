@@ -199,7 +199,8 @@ def test_health_and_cache_endpoints(served):
     assert h["ok"] and h["service"] == "spatterd"
     assert h["n_devices"] >= 1 and "xla" in h["backends"]
     assert served.cache()["cache"] == {"hits": 0, "misses": 0, "size": 0,
-                                       "batch_hits": 0}
+                                       "batch_hits": 0, "disk_hits": 0,
+                                       "degraded": 0}
 
 
 def test_lint_endpoint_audits_warm_cache(served):
@@ -602,3 +603,173 @@ def test_acceptance_sharded_serve_8dev_subprocess():
                        capture_output=True, text=True, timeout=540)
     assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
     assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# warm start: POST /warm, persistent cache across restarts, crash safety
+# ---------------------------------------------------------------------------
+
+def test_warm_endpoint_makes_run_execute_only(served):
+    w = served.warm(SUITE)
+    assert w["ok"] and w["n_executables"] > 0
+    assert w["compiled"] == w["n_executables"]
+    assert w["cache"]["misses"] == w["compiled"]
+    # the warmed executables are first-called too (jit dispatch cache
+    # populated), so the next /run is execute-only: zero compiles
+    r = served.run_suite(SUITE, runs=1)
+    assert r["ok"] and r["cache"]["misses"] == 0
+    assert all(t["digest"] for t in r["stats"]["table"])
+    w2 = served.warm(SUITE)                   # warming twice is idempotent
+    assert w2["compiled"] == 0 and w2["cache"]["misses"] == 0
+
+
+def test_warm_restart_zero_compiles_bit_identical(tmp_path):
+    root = str(tmp_path)
+    with SpatterDaemon(port=0, cache=ExecutorCache(), cache_dir=root) as d:
+        c = SpatterClient(d.url)
+        r1 = c.run_suite(SUITE, runs=1)
+        n_buckets = r1["plan"]["n_buckets"]
+        digests = [t["digest"] for t in r1["stats"]["table"]]
+        assert d.disk.stats()["stores"] == n_buckets
+    # a FRESH daemon process-equivalent (new ExecutorCache) on the
+    # populated directory: the whole suite serves with zero compiles
+    with SpatterDaemon(port=0, cache=ExecutorCache(), cache_dir=root) as d:
+        c = SpatterClient(d.url)
+        r2 = c.run_suite(SUITE, runs=1)
+        assert r2["cache"]["misses"] == 0
+        assert r2["cache"]["lifetime"]["misses"] == 0
+        assert r2["cache"]["lifetime"]["disk_hits"] == n_buckets
+        assert [t["digest"] for t in r2["stats"]["table"]] == digests
+        assert c.stats()["disk"]["quarantined"] == 0
+
+
+CRASH_PHASE1 = textwrap.dedent("""\
+    import json, os, signal, sys
+    sys.path.insert(0, %r)
+    from repro.core import ExecutorCache
+    from repro.serve import SpatterClient, SpatterDaemon
+
+    SUITE = %s
+    root, out = sys.argv[1], sys.argv[2]
+    d = SpatterDaemon(port=0, cache=ExecutorCache(), cache_dir=root).start()
+    c = SpatterClient(d.url)
+    r = c.run_suite(SUITE, runs=1)
+    json.dump({"digests": [t["digest"] for t in r["stats"]["table"]],
+               "n_buckets": r["plan"]["n_buckets"],
+               "stores": d.disk.stats()["stores"]}, open(out, "w"))
+    os.kill(os.getpid(), signal.SIGKILL)   # hard crash: no atexit, no drain
+    """)
+
+CRASH_PHASE2 = textwrap.dedent("""\
+    import json, sys
+    sys.path.insert(0, %r)
+    from repro.core import ExecutorCache
+    from repro.serve import SpatterClient, SpatterDaemon
+
+    SUITE = %s
+    root, ref_path = sys.argv[1], sys.argv[2]
+    ref = json.load(open(ref_path))
+    with SpatterDaemon(port=0, cache=ExecutorCache(), cache_dir=root) as d:
+        c = SpatterClient(d.url)
+        r = c.run_suite(SUITE, runs=1)
+        assert r["cache"]["misses"] == 0, r["cache"]        # pre-kill entries
+        assert [t["digest"] for t in r["stats"]["table"]] == ref["digests"]
+        assert d.disk.stats()["quarantined"] == 1, d.disk.stats()
+    print("OK")
+    """)
+
+
+def test_crash_safety_sigkill_then_warm_restart(tmp_path):
+    # a daemon SIGKILLed after serving must leave a cache directory a
+    # fresh daemon can trust: complete entries restore (0 compiles,
+    # bit-identical), and a torn half-written entry — planted here as a
+    # truncated copy, what a non-atomic writer would leave — is caught
+    # by the checksum and quarantined, never loaded
+    import glob
+    import signal as _signal
+    root = str(tmp_path / "cache")
+    out = str(tmp_path / "phase1.json")
+    r1 = subprocess.run(
+        [sys.executable, "-c", CRASH_PHASE1 % (SRC, json.dumps(SUITE)),
+         root, out],
+        capture_output=True, text=True, timeout=540)
+    assert r1.returncode == -_signal.SIGKILL, (r1.stdout, r1.stderr[-3000:])
+    ref = json.load(open(out))
+    assert ref["stores"] == ref["n_buckets"]
+    victim = sorted(glob.glob(os.path.join(root, "*.spx")))[0]
+    with open(victim, "rb") as f:
+        raw = f.read()
+    with open(os.path.join(root, "f" * 40 + ".spx"), "wb") as f:
+        f.write(raw[:len(raw) - 7])
+    r2 = subprocess.run(
+        [sys.executable, "-c", CRASH_PHASE2 % (SRC, json.dumps(SUITE)),
+         root, out],
+        capture_output=True, text=True, timeout=540)
+    assert r2.returncode == 0, (r2.stdout[-1000:], r2.stderr[-3000:])
+    assert "OK" in r2.stdout
+
+
+SHARDED_RESTART = textwrap.dedent("""\
+    import json, os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    sys.path.insert(0, %r)
+    from repro.core import ExecutorCache
+    from repro.serve import SpatterClient, SpatterDaemon
+
+    SUITE = %s
+    root, ref_path, phase = sys.argv[1], sys.argv[2], sys.argv[3]
+    with SpatterDaemon(port=0, cache=ExecutorCache(), cache_dir=root) as d:
+        c = SpatterClient(d.url)
+        digs = {}
+        for name, kw in (("flat", {}), ("mesh8", {"mesh": 8}),
+                         ("mesh4x2", {"mesh": [4, 2]})):
+            r = c.run_suite(SUITE, runs=1, **kw)
+            digs[name] = [t["digest"] for t in r["stats"]["table"]]
+            if phase == "warm":
+                assert r["cache"]["misses"] == 0, (name, r["cache"])
+        if phase == "warm":
+            assert d.cache.stats().misses == 0      # across ALL placements
+            assert json.load(open(ref_path)) == digs
+        else:
+            json.dump(digs, open(ref_path, "w"))
+    print("OK")
+    """)
+
+
+def test_acceptance_sharded_warm_restart_subprocess(tmp_path):
+    # the ISSUE 8 restart proof on the 2-D placement path: a fresh
+    # 8-device daemon on a populated cache dir serves flat, mesh=8, AND
+    # mesh=[4,2] with zero compiles and bit-identical digests
+    root, ref = str(tmp_path / "cache"), str(tmp_path / "ref.json")
+    code = SHARDED_RESTART % (SRC, json.dumps(SUITE))
+    for phase in ("cold", "warm"):
+        r = subprocess.run([sys.executable, "-c", code, root, ref, phase],
+                           capture_output=True, text=True, timeout=540)
+        assert r.returncode == 0, (phase, r.stdout[-1000:],
+                                   r.stderr[-3000:])
+        assert "OK" in r.stdout
+
+
+def test_sigterm_graceful_drain_cli():
+    import signal as _signal
+    env = {**os.environ, "PYTHONPATH": SRC, "PYTHONUNBUFFERED": "1"}
+    p = subprocess.Popen(
+        [sys.executable, "-m", "repro.serve.daemon", "--port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+    try:
+        line = p.stdout.readline()
+        assert "listening on" in line, line
+        c = SpatterClient(line.split("listening on")[1].split()[0])
+        assert c.run_suite([SUITE[0]], runs=1)["ok"]
+        p.send_signal(_signal.SIGTERM)
+        out, err = p.communicate(timeout=300)
+    finally:
+        p.kill()
+    assert p.returncode == 0, (out, err[-3000:])
+    assert "drained cleanly" in out
+    # fully drained: the port no longer accepts (drop the cached
+    # keep-alive socket first, as in the restart-retry test)
+    c.close()
+    with pytest.raises(ServerError) as e:
+        c.health()
+    assert e.value.status == 0
