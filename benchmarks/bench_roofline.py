@@ -1,12 +1,28 @@
-"""Roofline-terms bench: reads the dry-run cell JSONs (deliverable g).
+"""Roofline-terms bench: reads the dry-run cell JSONs (deliverable g),
+plus the spattercost predicted-vs-measured record (DESIGN.md §15).
 
 Emits one CSV row per (arch x shape) cell on the single-pod mesh with the
 three roofline terms and the dominant bottleneck — the `derived` column is
 the §Roofline table in benchmark form.  Requires the dry-run sweep to have
 run (experiments/dryrun/*.json); emits a pointer row if absent.
+
+The second half evaluates the static traffic model against what this
+host actually measured: for every (suite x placement) cell — demo, apps
+and widelane at single/8x1/4x2/2x4/1x8 — it computes the model's
+predicted GB/s (calibrated roofline x useful/device traffic fraction,
+``analysis.cost.shape_cost``) next to the recorded measurement from
+``BENCH_suite.json`` (the ``backends`` record for demo, the
+``mesh_sweep`` cells for apps/widelane; null where nothing was
+recorded), plus paper Eq. 1's Pearson R over the measured pairs.  Counts
+are capped exactly as the recorded runs were (``meta.count_cap`` /
+``mesh_sweep.count_cap``) so predicted and measured describe the same
+launch geometry.  The record merges into ``BENCH_suite.json`` under
+``cost_model`` (same clobber guard as the other mergers: ``out_path=None``
+skips the write).
 """
 from __future__ import annotations
 
+import dataclasses
 import glob
 import json
 import os
@@ -15,14 +31,70 @@ from .harness import emit
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
+OUT_PATH = "BENCH_suite.json"
+SHAPES = ((8, 1), (4, 2), (2, 4), (1, 8))
+SUITES = ("demo", "apps", "widelane")
 
 
-def run(runs: int = 0):
+def _cost_model(doc: dict, root: str) -> dict:
+    from repro.analysis import cost as C
+    from repro.core import SuitePlan, load_suite
+    from repro.core.suite import pearson_r
+
+    bw = doc.get("backends", {}).get("xla", {}).get("hmean_measured_gbs",
+                                                    0.0)
+    sweep = doc.get("mesh_sweep", {})
+    sweep_suites = sweep.get("suites", {})
+    rec = {"bw_gbs_xla": bw, "suites": {}}
+    pred, meas = [], []
+    for name in SUITES:
+        pats = load_suite(os.path.join(root, "suites", name + ".json"))
+        # predicted and measured must describe the SAME launch geometry:
+        # re-apply the count cap the recorded run used (capping changes
+        # bucket idx_len, so pad waste and the whole byte split move)
+        cap = sweep.get("count_cap", 0) if name in sweep_suites \
+            else doc.get("meta", {}).get("count_cap", 0)
+        if cap:
+            pats = [dataclasses.replace(p, count=min(p.count, cap))
+                    for p in pats]
+        plan = SuitePlan.build(pats)
+        cells = {}
+        for shape in (None,) + tuple(SHAPES):
+            key = "single" if shape is None else f"{shape[0]}x{shape[1]}"
+            sc = C.shape_cost(plan, shape or (1, 1))
+            predicted = bw * sc["useful_bytes"] / sc["device_bytes"] \
+                if bw else None
+            if name in sweep_suites:
+                srec = sweep_suites[name]
+                cell = srec.get("single", {}) if key == "single" \
+                    else srec.get("shapes", {}).get(key, {})
+                measured = cell.get("hmean_gbs")
+            else:
+                measured = doc.get("backends", {}).get(
+                    "xla", {}).get("hmean_measured_gbs") \
+                    if key == "single" else None
+            cells[key] = {"predicted_gbs": predicted,
+                          "measured_gbs": measured,
+                          "overhead": sc["overhead"]}
+            if predicted is not None and measured is not None:
+                pred.append(predicted)
+                meas.append(measured)
+        cells["auto"] = "single" if C.select_shape(
+            plan, n_devices=sweep.get("n_dev", 8)) == (1, 1) \
+            else "%dx%d" % C.select_shape(plan,
+                                          n_devices=sweep.get("n_dev", 8))
+        rec["suites"][name] = cells
+    r = pearson_r(pred, meas)
+    rec["pearson_r"] = r if r == r else None       # NaN -> null
+    rec["n_cells_measured"] = len(pred)
+    return rec
+
+
+def run(runs: int = 0, *, out_path: str | None = OUT_PATH):
     files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__16x16.json")))
     if not files:
         emit("roofline/missing", 0.0,
              "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
-        return
     for fn in files:
         with open(fn) as f:
             j = json.load(f)
@@ -34,6 +106,34 @@ def run(runs: int = 0):
              f"coll={r['t_collective_s']:.2f}s dom={r['dominant']} "
              f"frac={100*r['roofline_fraction']:.1f}% "
              f"useful={r['useful_flops_ratio']:.2f}")
+
+    # predicted-vs-measured for the static traffic model (DESIGN.md §15)
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    bench_path = out_path if out_path and os.path.isabs(out_path) \
+        else os.path.join(root, out_path or OUT_PATH)
+    doc = {}
+    if os.path.exists(bench_path):
+        with open(bench_path) as f:
+            doc = json.load(f)
+    rec = _cost_model(doc, root)
+    for name, cells in rec["suites"].items():
+        for key, cell in cells.items():
+            if not isinstance(cell, dict):
+                continue
+            p, m = cell["predicted_gbs"], cell["measured_gbs"]
+            emit(f"cost_model/{name}_{key}", 0.0,
+                 (f"pred={p:.4f}GB/s;" if p is not None else "pred=n/a;")
+                 + (f"meas={m:.4f}GB/s;" if m is not None else "meas=n/a;")
+                 + f"overhead={cell['overhead']:.2f}x")
+        emit(f"cost_model/{name}_auto", 0.0, f"auto={cells['auto']}")
+    emit("cost_model/pearson_r", 0.0,
+         f"R={rec['pearson_r']};n={rec['n_cells_measured']}")
+    if out_path:
+        doc["cost_model"] = rec
+        with open(bench_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        emit("cost_model/json", 0.0, bench_path)
+    return rec
 
 
 if __name__ == "__main__":

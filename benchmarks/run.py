@@ -46,6 +46,8 @@ def main() -> None:
         suite_kw = {"out_path": None}
     # same guard for the mesh-shape sweep's merge into BENCH_suite.json
     sharded_kw = {} if args.only == "sharded_suite" else {"out_path": None}
+    # and for the cost-model record's cost_model key
+    roofline_kw = {} if args.only == "roofline" else {"out_path": None}
     # and for the serving-concurrency sweep's serve_concurrency key
     serve_kw = {} if args.only == "serve" else {"out_path": None}
     benches = {
@@ -55,7 +57,7 @@ def main() -> None:
         "vector_vs_scalar": lambda: bench_vector_vs_scalar.run(runs=runs),
         "app_patterns": lambda: bench_app_patterns.run(runs=runs),
         "llm_gs": lambda: bench_llm_gs.run(runs=runs),
-        "roofline": lambda: bench_roofline.run(runs=runs),
+        "roofline": lambda: bench_roofline.run(runs=runs, **roofline_kw),
         "suite_scaling": lambda: bench_suite_scaling.run(runs=runs),
         "sharded_suite": lambda: bench_sharded_suite.run(runs=runs,
                                                          **sharded_kw),

@@ -31,6 +31,18 @@ layer's lock-discipline lint; non-zero exit on any violation::
     PYTHONPATH=src python examples/spatter_cli.py --lint suites/demo.json \\
         [--mesh 4x2] [--lint-out LINT_report.json]
 
+Static traffic accounting (spattercost, DESIGN.md §15) — predict the
+exact bytes every executable moves, reconcile against the lowered
+StableHLO, and convert to GB/s via the BENCH-calibrated roofline; with
+``--mesh auto`` the placement is chosen by minimum predicted traffic::
+
+    PYTHONPATH=src python examples/spatter_cli.py --cost suites/demo.json \\
+        [--mesh auto|4x2] [--cost-out COST_report.json]
+
+``--mesh auto`` also works on a live run (--json): the suite executes on
+the min-predicted-cost placement, with ExecKeys (and digests) identical
+to the same explicit --mesh run.
+
 spatterd quickstart (the serving layer, DESIGN.md §10) — one process
 keeps the ExecutorCache warm across requests, so only the FIRST request
 for a suite shape compiles anything:
@@ -80,10 +92,12 @@ def main():
     ap.add_argument("--no-batch", action="store_true",
                     help="suite mode: one compile per pattern instead of "
                          "the bucketed planner (plan.py)")
-    ap.add_argument("--mesh", default=None, metavar="N|BxL",
+    ap.add_argument("--mesh", default=None, metavar="N|BxL|auto",
                     help="suite mode: shard bucket launches over N devices "
                          "(pattern-batch axis) or a BxL (batch x lane) 2-D "
-                         "placement, e.g. 4x2 (default 0 = off)")
+                         "placement, e.g. 4x2; 'auto' picks the minimum "
+                         "predicted-traffic shape (DESIGN.md §15); "
+                         "default 0 = off")
     ap.add_argument("--mode", default=None, choices=["store", "add"],
                     help="scatter write semantics: last-write-wins store "
                          "(paper default) or add accumulation")
@@ -100,6 +114,19 @@ def main():
     ap.add_argument("--lint-out", default=None, metavar="FILE",
                     help="--lint: also write the JSON lint report (the "
                          "same schema GET /lint serves)")
+    ap.add_argument("--cost", default=None, metavar="SUITE",
+                    help="spattercost: statically predict the bytes every "
+                         "executable the planner would build for SUITE "
+                         "moves (no execution; repro.analysis.cost, "
+                         "DESIGN.md §15), reconciled against the lowered "
+                         "HLO and converted to GB/s via the calibrated "
+                         "roofline; honors --mesh (incl. 'auto')/"
+                         "--backend/--mode/--row-width and exits non-zero "
+                         "on any violation")
+    ap.add_argument("--cost-out", default=None, metavar="FILE",
+                    help="--cost: also write the JSON cost report (the "
+                         "same schema GET /cost serves; jax-free to "
+                         "consume)")
     ap.add_argument("--serve", action="store_true",
                     help="run spatterd: serve JSON suites over HTTP off "
                          "the warm executor cache (repro.serve)")
@@ -131,8 +158,8 @@ def main():
         # contradiction, not something to drop silently
         bad = _given(("json", "no_batch", "client", "kernel", "pattern",
                       "delta", "count", "runs", "stream_r", "host",
-                      "port", "stats",
-                      "cache_dir")) + (["--serve"] if args.serve else [])
+                      "port", "stats", "cache_dir", "cost",
+                      "cost_out")) + (["--serve"] if args.serve else [])
         if bad:
             ap.error(f"{', '.join(bad)}: not applicable to --lint "
                      f"(static audit; only --mesh/--backend/--mode/"
@@ -144,6 +171,15 @@ def main():
                 else 0
         except ValueError as e:
             ap.error(f"--mesh: {e}")
+        if mesh == "auto":
+            # resolve before the audit so the report names the concrete
+            # shape the cost model chose (DESIGN.md §15)
+            from repro.analysis.cost import auto_placement
+            from repro.core import load_suite
+            mesh = auto_placement(
+                load_suite(args.lint),
+                row_width=args.row_width or LOCAL_DEFAULTS["row_width"],
+            ) or 0
         backends = (args.backend,) if args.backend else ("xla", "pallas")
         try:
             report = lint_serve().merge(lint_suite_file(
@@ -161,6 +197,41 @@ def main():
 
     if args.lint_out is not None:
         ap.error("--lint-out requires --lint SUITE")
+
+    if args.cost is not None:
+        # like --lint, a static traffic analysis executes nothing
+        bad = _given(("json", "no_batch", "client", "kernel", "pattern",
+                      "delta", "count", "runs", "stream_r", "host",
+                      "port", "stats",
+                      "cache_dir")) + (["--serve"] if args.serve else [])
+        if bad:
+            ap.error(f"{', '.join(bad)}: not applicable to --cost "
+                     f"(static analysis; only --mesh/--backend/--mode/"
+                     f"--row-width apply)")
+        from repro.analysis.cost import cost_suite_file
+        from repro.serve.schema import parse_mesh
+        try:
+            mesh = parse_mesh(str(args.mesh)) if args.mesh is not None \
+                else 0
+        except ValueError as e:
+            ap.error(f"--mesh: {e}")
+        backends = (args.backend,) if args.backend else ("xla", "pallas")
+        try:
+            report = cost_suite_file(
+                args.cost, mesh=mesh or None, backends=backends,
+                mode=args.mode or LOCAL_DEFAULTS["mode"],
+                row_width=args.row_width or LOCAL_DEFAULTS["row_width"])
+        except (ValueError, OSError) as e:
+            ap.error(f"--cost: {e}")
+        if args.cost_out:
+            report.dump(args.cost_out)
+        print(report.summary())
+        if not report.ok:
+            raise SystemExit(1)
+        return
+
+    if args.cost_out is not None:
+        ap.error("--cost-out requires --cost SUITE")
 
     if args.serve:
         if args.client:
@@ -260,11 +331,23 @@ def main():
             ap.error("--mesh only applies to --json suite mode")
         if args.no_batch:
             ap.error("--mesh requires the bucketed planner (drop --no-batch)")
-        try:
-            mesh = Placement.create(mesh_shape)   # validates device count
-        except ValueError as e:
-            ap.error(f"--mesh: {e}")
-        mesh_grid = mesh.grid
+        if mesh_shape == "auto":
+            # §15 cost model picks the shape; the run below then uses the
+            # same ExecKeys an explicit --mesh BxL would, so warm caches
+            # and digests are shared with explicit-mesh runs
+            from repro.analysis.cost import auto_placement
+            mesh_shape = auto_placement(load_suite(args.json),
+                                        row_width=opt["row_width"])
+            chosen = "single (1x1)" if mesh_shape is None \
+                else "x".join(map(str, mesh_shape))
+            print(f"mesh : auto-selected {chosen} "
+                  f"(min predicted traffic, DESIGN.md §15)")
+        if mesh_shape:
+            try:
+                mesh = Placement.create(mesh_shape)  # validates devices
+            except ValueError as e:
+                ap.error(f"--mesh: {e}")
+            mesh_grid = mesh.grid
 
     if args.json:
         stats = run_suite(load_suite(args.json), backend=opt["backend"],

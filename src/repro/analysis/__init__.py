@@ -14,6 +14,13 @@ Three front-ends share one report schema (``report.py``, jax-free):
     GET /lint                              # daemon: audits the live cache
     python -m repro.analysis ...           # CI: the full matrix
 
+``cost.py`` (spattercost, DESIGN.md §15) rides the same three surfaces:
+``spatter --cost SUITE [--mesh auto|BxL]``, ``GET /cost``, and
+``python -m repro.analysis --cost`` — static byte accounting of every
+executable, reconciled against the lowered StableHLO and converted to
+predicted GB/s via the BENCH-calibrated roofline; it also powers
+``mesh="auto"`` placement selection everywhere a mesh is accepted.
+
 Exports resolve lazily (PEP 562) like ``repro.serve``: importing
 ``repro.analysis.report`` or ``.ast_lint`` alone stays jax-free (pinned
 by a tests/test_lint.py subprocess drift guard).
@@ -35,6 +42,15 @@ _EXPORTS = {
     "lint_suite_file": ".lint",
     "lint_cache": ".lint",
     "lint_serve": ".lint",
+    "UnitCost": ".cost",
+    "CostReport": ".cost",
+    "Calibration": ".cost",
+    "cost_plan": ".cost",
+    "cost_suite_file": ".cost",
+    "cost_cache": ".cost",
+    "auto_placement": ".cost",
+    "select_shape": ".cost",
+    "shape_cost": ".cost",
 }
 
 __all__ = list(_EXPORTS)

@@ -1,9 +1,9 @@
-"""spatterlint matrix runner — ``python -m repro.analysis`` (CI's lint
-job; DESIGN.md §12).
+"""spatterlint / spattercost matrix runner — ``python -m repro.analysis``
+(CI's lint and cost jobs; DESIGN.md §12, §15).
 
-Audits every (suite x placement x backend) cell statically plus the
-serving-layer ast lint, writes one merged JSON report, and exits
-non-zero on any violation::
+Default (lint) mode audits every (suite x placement x backend) cell
+statically plus the serving-layer ast lint, writes one merged JSON
+report, and exits non-zero on any violation::
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python -m repro.analysis \\
@@ -11,6 +11,18 @@ non-zero on any violation::
         --suite suites/widelane.json \\
         --mesh 1x1 --mesh 8x1 --mesh 4x2 --mesh 1x8 \\
         --out LINT_report.json
+
+``--cost`` switches to the traffic matrix (repro.analysis.cost): every
+cell's executables are byte-accounted and reconciled against their
+lowered StableHLO, with GB/s predicted off the BENCH-calibrated
+roofline; ``--mesh auto`` is a legal cell (the min-predicted-cost
+shape).  ``--write-baseline FILE`` additionally freezes each unit's
+predicted I/O bytes as the cost-regression gate's committed baseline::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.analysis --cost \\
+        --suite suites/demo.json --mesh 1x1 --mesh 8x1 \\
+        --out COST_report.json [--write-baseline COST_baseline.json]
 
 Placement cells that need more devices than are visible are a hard
 error (exit 2), not a skip: CI asserting "matrix clean" must never
@@ -25,47 +37,92 @@ import sys
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="spatterlint: static audit of planner executables "
-                    "over a suite x placement matrix")
+        description="spatterlint/spattercost: static audit of planner "
+                    "executables over a suite x placement matrix")
     ap.add_argument("--suite", action="append", default=[],
                     metavar="FILE", help="suites/*.json file (repeatable)")
     ap.add_argument("--mesh", action="append", default=[],
-                    metavar="N|BxL",
-                    help="placement cell, e.g. 1x1, 8x1, 4x2, 1x8 "
-                         "(repeatable; default: single-device only)")
+                    metavar="N|BxL|auto",
+                    help="placement cell, e.g. 1x1, 8x1, 4x2, 1x8, or "
+                         "auto (repeatable; default: single-device only)")
     ap.add_argument("--backend", action="append", default=[],
                     choices=["xla", "onehot", "scalar", "pallas"],
                     help="backend(s) to audit (default: xla + pallas)")
     ap.add_argument("--mode", default="store", choices=["store", "add"])
     ap.add_argument("--out", default=None, metavar="FILE",
-                    help="write the merged JSON lint report here")
+                    help="write the merged JSON report here")
     ap.add_argument("--no-serve-lint", action="store_true",
                     help="skip the repro/serve ast concurrency lint")
+    ap.add_argument("--cost", action="store_true",
+                    help="run the spattercost traffic matrix instead of "
+                         "spatterlint (DESIGN.md §15)")
+    ap.add_argument("--write-baseline", default=None, metavar="FILE",
+                    help="--cost: freeze each unit's predicted I/O bytes "
+                         "to FILE — the cost-regression rule's committed "
+                         "baseline")
     args = ap.parse_args(argv)
+    if args.write_baseline and not args.cost:
+        ap.error("--write-baseline requires --cost")
+    if args.cost and args.no_serve_lint:
+        ap.error("--no-serve-lint does not apply to --cost (the traffic "
+                 "matrix has no serve lint)")
+    if args.cost and not args.suite:
+        ap.error("--cost needs at least one --suite FILE")
     if not args.suite and args.no_serve_lint:
         ap.error("nothing to lint: pass --suite and/or drop "
                  "--no-serve-lint")
 
-    from repro.analysis.lint import lint_serve, lint_suite_file
-    from repro.analysis.report import LintReport
     from repro.serve.schema import parse_mesh
 
     backends = tuple(args.backend) or ("xla", "pallas")
     meshes = [parse_mesh(m) for m in args.mesh] or [0]
 
-    report = LintReport()
-    if not args.no_serve_lint:
-        report = report.merge(lint_serve())
-    try:
-        for suite in args.suite:
-            for mesh in meshes:
-                report = report.merge(lint_suite_file(
-                    suite, mesh=mesh, backends=backends, mode=args.mode))
-    except ValueError as e:
-        # an unbuildable cell (mesh > visible devices, bad suite) must
-        # fail the job loudly — a skipped cell is not a clean cell
-        print(f"error: {e}", file=sys.stderr)
-        return 2
+    if args.cost:
+        from repro.analysis.cost import (CostReport, cost_suite_file,
+                                         write_baseline)
+        report = CostReport()
+        try:
+            for suite in args.suite:
+                for mesh in meshes:
+                    report = report.merge(cost_suite_file(
+                        suite, mesh=mesh or None, backends=backends,
+                        mode=args.mode))
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        if args.write_baseline:
+            units = {}
+            for u in report.units:
+                # the matrix may cost one ExecKey from several cells
+                # (shared buckets); the predicted bytes are a pure
+                # function of the key, so collisions agree — keep max
+                # defensively
+                units[u.exec_key] = max(
+                    u.io_bytes, units.get(u.exec_key, 0))
+            write_baseline(units, args.write_baseline,
+                           meta={"suites": args.suite,
+                                 "meshes": args.mesh or ["single"],
+                                 "backends": list(backends)})
+            print(f"baseline: {args.write_baseline} "
+                  f"({len(units)} unit(s))")
+    else:
+        from repro.analysis.lint import lint_serve, lint_suite_file
+        from repro.analysis.report import LintReport
+        report = LintReport()
+        if not args.no_serve_lint:
+            report = report.merge(lint_serve())
+        try:
+            for suite in args.suite:
+                for mesh in meshes:
+                    report = report.merge(lint_suite_file(
+                        suite, mesh=mesh, backends=backends,
+                        mode=args.mode))
+        except ValueError as e:
+            # an unbuildable cell (mesh > visible devices, bad suite)
+            # must fail the job loudly — a skipped cell is not a clean
+            # cell
+            print(f"error: {e}", file=sys.stderr)
+            return 2
 
     if args.out:
         report.dump(args.out)

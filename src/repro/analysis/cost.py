@@ -1,0 +1,574 @@
+"""spattercost — static memory-traffic analysis of every executable
+(DESIGN.md §15).
+
+Walks the same enumeration spatterlint audits
+(``plan.enumerate_executables``) and computes, per ``(bucket,
+placement)``, the exact bytes one launch moves — split by *cause*:
+
+  ``useful``      the analytic minimum (``bandwidth.useful_bytes`` summed
+                  over the bucket's member patterns)
+  ``pad``         pad/scratch traffic from ``pad_batch``/``pad_lanes``
+                  (launched lane-data minus useful)
+  ``index``       the int32 index operand
+  ``table``       the table operand at the padded batch (gather reads it,
+                  scatter reads the dst and writes a fresh result)
+  ``keep``        scatter's host-dedup keep mask
+  ``replicated``  extra table copies along the lane axis — the
+                  ``runtime/sharding.gs_specs`` axis rules shard tables
+                  by batch only, so every lane shard holds a full copy
+
+``io_bytes`` (everything a launch crosses HBM with at its boundary) is
+reconciled against the lowered StableHLO signature via the shared
+``core.hlo`` walker — the ``traffic-conservation`` rule; ``device_bytes``
+adds the replication term and is what placement auto-selection
+(``mesh="auto"``) minimizes.  Bytes convert to predicted GB/s via a
+roofline calibrated from the measured bandwidths in ``BENCH_suite.json``.
+
+Module import stays jax-free (like ``analysis.report``): the heavy
+planner imports happen inside functions, so parsing a committed
+``COST_report.json`` costs no jax import.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+
+from repro.analysis.report import Violation
+
+# NOTE: ``repro.core.hlo`` is stdlib-only but lives under the eager
+# ``repro.core`` package (whose __init__ imports jax), so it is imported
+# inside the functions that reconcile lowered text — never at module
+# scope — to keep this module's import jax-free.
+
+# Tolerances (DESIGN.md §15 records the rationale).  TRAFFIC_TOL covers
+# layout/token slop in a lowered signature (plus a small absolute floor
+# for rank-0 scalars); PAD_WASTE_TOL / GBS_TOL bound how far the auto
+# choice may sit from a recorded sweep cell before `auto-placement-sane`
+# calls it dominated; TIE_TOL is the band inside which two placements
+# count as traffic-equivalent and the tie-break prefers batch shards.
+TRAFFIC_TOL = 0.02
+TRAFFIC_TOL_FLOOR = 64          # bytes
+PAD_WASTE_TOL = 0.02            # absolute pad-waste slack
+GBS_TOL = 0.10                  # relative GB/s slack
+TIE_TOL = 0.05                  # relative device-bytes tie band
+
+BENCH_ENV = "SPATTER_BENCH"
+BENCH_NAME = "BENCH_suite.json"
+BASELINE_ENV = "SPATTER_COST_BASELINE"
+BASELINE_NAME = "COST_baseline.json"
+
+COST_RULES = ("traffic-conservation", "cost-regression")
+# rules computable from ExecKey geometry alone — safe on restored
+# (DiskTier) entries whose executable is one opaque exported call
+KEY_ONLY_COST_RULES = ("cost-regression",)
+
+_INDEX_BYTES = 4                # int32 index operand
+_KEEP_BYTES = 1                 # bool keep mask
+
+
+def _find_upward(name: str, env: str) -> str | None:
+    """Resolve a repo-root data file: $env, then cwd, then the source
+    tree's checkout root (``src/repro/analysis`` -> repo root)."""
+    p = os.environ.get(env)
+    if p:
+        return p if os.path.exists(p) else None
+    if os.path.exists(name):
+        return name
+    root = os.path.normpath(os.path.join(os.path.dirname(__file__),
+                                         "..", "..", ".."))
+    cand = os.path.join(root, name)
+    return cand if os.path.exists(cand) else None
+
+
+def _elem_bytes(dtype) -> int:
+    import numpy as np
+    return int(np.dtype(dtype).itemsize)
+
+
+# --------------------------------------------------------------------------
+# per-unit accounting
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UnitCost:
+    """Traffic accounting for one ``(bucket, placement)`` executable.
+
+    Plain ints/floats/strings only — ``COST_report.json`` parses without
+    jax.  ``-1`` marks *unknown*: ``useful_bytes``/``pad_bytes`` need the
+    plan's member patterns (a bare cache ``ExecKey`` doesn't know them),
+    ``lowered_bytes`` needs a lowerable executable (restored DiskTier
+    entries are opaque), ``predicted_gbs`` needs a calibration.
+    """
+    exec_key: str
+    label: str = ""
+    backend: str = ""
+    kind: str = ""
+    placement: str = ""
+    batch: int = 0
+    lanes: int = 0
+    n_members: int = -1
+    useful_bytes: int = -1
+    pad_bytes: int = -1
+    index_bytes: int = 0
+    table_bytes: int = 0
+    keep_bytes: int = 0
+    replicated_bytes: int = 0
+    io_bytes: int = 0
+    device_bytes: int = 0
+    lowered_bytes: int = -1
+    predicted_gbs: float = -1.0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "UnitCost":
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = set(doc) - known
+        if bad:
+            raise ValueError(f"unknown UnitCost fields: {sorted(bad)}")
+        return cls(**doc)
+
+
+def key_id(key) -> str:
+    """The baseline identity of an executable: the canonical ``ExecKey``
+    repr (total, pure — the ``cache-key-purity`` contract)."""
+    return str(key)
+
+
+def key_cost(key, *, n_members: int = -1, real_elems: int = -1,
+             lowered_bytes: int = -1, calibration=None,
+             label: str = "") -> UnitCost:
+    """Traffic accounting from ``ExecKey`` geometry alone.
+
+    ``real_elems`` (sum of member ``count * index_len``) splits the
+    launched lane-data into useful vs pad; without it both report -1 but
+    every launch-geometry term is still exact — the degraded mode
+    ``GET /cost`` uses for restored executables.
+    """
+    from repro.core.plan import pad_lanes, placement_grid
+    _, l_shards, _ = placement_grid(key.placement)
+    lanes = pad_lanes(key.idx_len, l_shards)
+    e = _elem_bytes(key.dtype)
+    r = key.row_width
+    lane_elems = key.batch * lanes
+    lane_data = lane_elems * e * r
+    index_b = lane_elems * _INDEX_BYTES
+    table_b = key.batch * (key.footprint + 1) * r * e
+    scatter = key.kind == "scatter"
+    keep_b = lane_elems * _KEEP_BYTES if scatter else 0
+    # launch-boundary traffic: operands + results at global shapes.
+    # gather:  table + idx -> lane data.  scatter: dst + idx + vals +
+    # keep -> fresh dst-shaped result (cached executables never donate).
+    copies = 2 if scatter else 1
+    io_b = copies * table_b + index_b + lane_data + keep_b
+    # lane shards replicate every batch-sharded-only operand/result
+    repl_b = copies * table_b * (l_shards - 1)
+    device_b = io_b + repl_b
+    useful = real_elems * e * r if real_elems >= 0 else -1
+    pad = lane_data - useful if useful >= 0 else -1
+    gbs = -1.0
+    if calibration is not None and useful > 0:
+        bw = calibration.bw_gbs.get(key.backend, 0.0)
+        if bw > 0:
+            gbs = bw * useful / device_b
+    return UnitCost(
+        exec_key=key_id(key), label=label, backend=key.backend,
+        kind=key.kind, placement=key.placement, batch=key.batch,
+        lanes=lanes, n_members=n_members, useful_bytes=useful,
+        pad_bytes=pad, index_bytes=index_b, table_bytes=table_b,
+        keep_bytes=keep_b, replicated_bytes=repl_b, io_bytes=io_b,
+        device_bytes=device_b, lowered_bytes=lowered_bytes,
+        predicted_gbs=gbs)
+
+
+# --------------------------------------------------------------------------
+# plan-level accounting + placement selection (pure geometry)
+# --------------------------------------------------------------------------
+
+def shape_cost(plan, shape=(1, 1), *, elem_bytes: int = 4,
+               row_width: int = 1) -> dict:
+    """Aggregate predicted traffic of a plan at a ``(batch, lane)``
+    shard shape — pure arithmetic, no mesh or devices required.
+
+    Matches ``key_cost`` summed over ``enumerate_executables`` at the
+    same placement (a tests/test_properties.py invariant).
+    """
+    from repro.core.plan import pad_batch, pad_lanes
+    b, l = int(shape[0]), int(shape[1])
+    useful = pad = index_b = table_b = keep_b = repl_b = 0
+    for bucket in plan.buckets:
+        batch = pad_batch(len(bucket.members), b)
+        lanes = pad_lanes(bucket.spec.idx_len, l)
+        real = sum(plan.patterns[i].count * plan.patterns[i].index_len
+                   for i in bucket.members)
+        lane_elems = batch * lanes
+        scatter = bucket.spec.kind == "scatter"
+        copies = 2 if scatter else 1
+        useful += real * elem_bytes * row_width
+        pad += (lane_elems - real) * elem_bytes * row_width
+        index_b += lane_elems * _INDEX_BYTES
+        table_b += copies * batch * (bucket.spec.footprint + 1) \
+            * row_width * elem_bytes
+        keep_b += lane_elems * _KEEP_BYTES if scatter else 0
+        repl_b += copies * batch * (bucket.spec.footprint + 1) \
+            * row_width * elem_bytes * (l - 1)
+    io_b = useful + pad + index_b + table_b + keep_b
+    return {"shape": [b, l], "useful_bytes": useful, "pad_bytes": pad,
+            "index_bytes": index_b, "table_bytes": table_b,
+            "keep_bytes": keep_b, "replicated_bytes": repl_b,
+            "io_bytes": io_b, "device_bytes": io_b + repl_b,
+            "overhead": (io_b + repl_b) / useful if useful else float("inf")}
+
+
+def candidate_shapes(n_devices: int) -> list[tuple[int, int]]:
+    """``(1, 1)`` plus every 2-D split of the full device count."""
+    shapes = [(1, 1)]
+    if n_devices > 1:
+        for b in range(1, n_devices + 1):
+            if n_devices % b == 0:
+                shapes.append((b, n_devices // b))
+    return shapes
+
+
+def select_shape(plan, *, n_devices: int = 1, elem_bytes: int = 4,
+                 row_width: int = 1) -> tuple[int, int]:
+    """The min-predicted-cost shard shape for a plan.
+
+    Minimizes total predicted device traffic (``device_bytes`` — pad
+    and replication both count against a shape); shapes within
+    ``TIE_TOL`` of the minimum are traffic-equivalent and the tie breaks
+    toward more *batch* shards (free wall-time division on real
+    multi-chip hardware, bit-identical results), never toward lane
+    shards (those replicate the table for no traffic win).
+    """
+    shapes = candidate_shapes(n_devices)
+    costs = {s: shape_cost(plan, s, elem_bytes=elem_bytes,
+                           row_width=row_width)["device_bytes"]
+             for s in shapes}
+    best = min(costs.values())
+    tied = [s for s in shapes if costs[s] <= best * (1 + TIE_TOL)]
+    return max(tied, key=lambda s: (s[0], -s[1]))
+
+
+def auto_placement(patterns_or_plan, *, n_devices: int | None = None,
+                   dtype=None, row_width: int = 1):
+    """Resolve ``mesh="auto"`` to a concrete shard shape (or ``None``
+    for single-device — the unplaced ``ExecKey`` placement ``""``).
+
+    Returns a plain ``(batch, lane)`` tuple consumable by every
+    ``as_placement`` surface, so auto-placed runs produce exactly the
+    ExecKeys an explicit ``--mesh BxL`` run would (PR 5's placement
+    strings unchanged) — warm repeats compile 0 and digests match.
+    """
+    from repro.core.plan import SuitePlan
+    plan = patterns_or_plan
+    if not hasattr(plan, "buckets"):
+        plan = SuitePlan.build(list(patterns_or_plan))
+    if n_devices is None:
+        import jax
+        n_devices = len(jax.devices())
+    eb = _elem_bytes("float32" if dtype is None else dtype)
+    shape = select_shape(plan, n_devices=n_devices, elem_bytes=eb,
+                         row_width=row_width)
+    return None if shape == (1, 1) else shape
+
+
+# --------------------------------------------------------------------------
+# calibration + baseline (committed artifacts)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured bandwidths lifted from ``BENCH_suite.json``.
+
+    ``bw_gbs`` maps backend -> single-device effective GB/s (the
+    roofline ceiling the predictor scales by traffic overhead);
+    ``sweep`` maps suite -> cell-name -> ``{hmean_gbs, pad_waste}`` from
+    the recorded mesh sweep (what ``auto-placement-sane`` audits
+    against).
+    """
+    source: str = ""
+    bw_gbs: dict = dataclasses.field(default_factory=dict)
+    sweep: dict = dataclasses.field(default_factory=dict)
+    n_dev: int = 1
+
+    @classmethod
+    def from_bench(cls, path: str | None = None) -> "Calibration":
+        if path is None:
+            path = _find_upward(BENCH_NAME, BENCH_ENV)
+        if path is None or not os.path.exists(path):
+            return cls(source="uncalibrated")
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            return cls(source="uncalibrated")
+        bw = {bk: rec["hmean_measured_gbs"]
+              for bk, rec in doc.get("backends", {}).items()
+              if isinstance(rec, dict) and "hmean_measured_gbs" in rec}
+        sweep, n_dev = {}, int(doc.get("mesh_sweep", {}).get("n_dev", 1))
+        for suite, rec in doc.get("mesh_sweep", {}).get("suites",
+                                                        {}).items():
+            cells = {}
+            if "single" in rec:
+                cells["single"] = rec["single"]
+            cells.update(rec.get("shapes", {}))
+            sweep[suite] = cells
+        return cls(source=path, bw_gbs=bw, sweep=sweep, n_dev=n_dev)
+
+    def to_json(self) -> dict:
+        return {"source": self.source, "bw_gbs": dict(self.bw_gbs),
+                "n_dev": self.n_dev}
+
+
+_SUITE_RE = re.compile(r"([\w.\-]+)\.json")
+
+
+def suite_stem(label: str) -> str:
+    """The suite name a lint/cost cell label refers to (`"" `if none)."""
+    m = _SUITE_RE.search(label)
+    return os.path.basename(m.group(1)) if m else ""
+
+
+def baseline_path() -> str | None:
+    return _find_upward(BASELINE_NAME, BASELINE_ENV)
+
+
+def load_baseline(path: str | None = None) -> dict:
+    """``{exec-key-string: predicted io_bytes}``; ``{}`` when nothing is
+    committed (absence gates nothing — only a *smaller* committed value
+    fires ``cost-regression``)."""
+    if path is None:
+        path = baseline_path()
+    if path is None or not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    return {k: int(v) for k, v in doc.get("units", {}).items()}
+
+
+def write_baseline(units: dict, path: str, meta: dict | None = None
+                   ) -> None:
+    doc = {"meta": meta or {}, "units": {k: int(v)
+                                         for k, v in sorted(units.items())}}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+# --------------------------------------------------------------------------
+# the report (same schema discipline as analysis/report.py)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CostReport:
+    """Per-unit traffic accounting + any gate violations; jax-free."""
+    units: list = dataclasses.field(default_factory=list)
+    violations: list = dataclasses.field(default_factory=list)
+    calibration: dict = dataclasses.field(default_factory=dict)
+    rules: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_units(self) -> int:
+        return len(self.units)
+
+    @property
+    def n_violations(self) -> int:
+        return len(self.violations)
+
+    @property
+    def ok(self) -> bool:
+        return not any(v.severity == "error" for v in self.violations)
+
+    def merge(self, other: "CostReport") -> "CostReport":
+        meta = dict(self.meta)
+        for k, v in other.meta.items():
+            if k == "cells" and isinstance(meta.get(k), list):
+                meta[k] = meta[k] + v
+            else:
+                meta[k] = v
+        cal = self.calibration or other.calibration
+        return CostReport(units=self.units + other.units,
+                          violations=self.violations + other.violations,
+                          calibration=cal,
+                          rules=tuple(dict.fromkeys(self.rules
+                                                    + other.rules)),
+                          meta=meta)
+
+    def to_json(self) -> dict:
+        return {"units": [u.to_json() for u in self.units],
+                "violations": [v.to_json() for v in self.violations],
+                "calibration": dict(self.calibration),
+                "rules": list(self.rules), "meta": self.meta,
+                "n_units": self.n_units, "ok": self.ok}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "CostReport":
+        known = {"units", "violations", "calibration", "rules", "meta",
+                 "n_units", "ok"}
+        bad = set(doc) - known
+        if bad:
+            raise ValueError(f"unknown CostReport fields: {sorted(bad)}")
+        return cls(units=[UnitCost.from_json(u)
+                          for u in doc.get("units", [])],
+                   violations=[Violation.from_json(v)
+                               for v in doc.get("violations", [])],
+                   calibration=dict(doc.get("calibration", {})),
+                   rules=tuple(doc.get("rules", ())),
+                   meta=dict(doc.get("meta", {})))
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    def summary(self) -> str:
+        io = sum(u.io_bytes for u in self.units)
+        useful = sum(u.useful_bytes for u in self.units
+                     if u.useful_bytes > 0)
+        head = (f"spattercost: {self.n_units} unit(s), "
+                f"{io} predicted I/O bytes"
+                + (f" ({io / useful:.2f}x analytic minimum)"
+                   if useful else "")
+                + f", {self.n_violations} violation(s)")
+        lines = [head]
+        for v in self.violations:
+            lines.append(f"  [{v.severity}] {v.rule}: {v.message}"
+                         + (f" ({v.exec_key})" if v.exec_key else ""))
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# drivers: plan / suite file / live cache
+# --------------------------------------------------------------------------
+
+def cost_plan(patterns, *, backend: str = "xla", dtype=None,
+              row_width: int = 1, mode: str = "store", placement=None,
+              mesh_axis: str = "data", label: str = "",
+              calibration=None, lowered: bool = True,
+              rules: tuple | None = None) -> CostReport:
+    """Cost every executable one plan x placement cell would compile.
+
+    Mirrors ``lint_plan``: same enumeration, same cell labelling; adds
+    the member-aware useful/pad split and (when ``lowered``) the
+    StableHLO reconciliation that feeds ``traffic-conservation``.
+    """
+    import jax.numpy as jnp
+    from repro.analysis.lint import run_rules
+    from repro.analysis.rules import PlanUnit, rules_for
+    from repro.core import hlo
+    from repro.core.plan import SuitePlan, as_placement
+    if calibration is None:
+        calibration = Calibration.from_bench()
+    plan = patterns if hasattr(patterns, "buckets") \
+        else SuitePlan.build(list(patterns))
+    place = as_placement(placement, mesh_axis)
+    place_str = place.placement if place else "single"
+    cell = f"{label} @ {place_str} backend={backend}" if label \
+        else f"@ {place_str} backend={backend}"
+    dtype = dtype or jnp.float32
+    exec_rules = COST_RULES if rules is None \
+        else tuple(n for n in COST_RULES if n in rules)
+    units, violations = [], []
+    for unit, bucket in zip(_enumerate_units(plan, backend, dtype,
+                                             row_width, mode, place),
+                            plan.buckets):
+        real = sum(plan.patterns[i].count * plan.patterns[i].index_len
+                   for i in bucket.members)
+        low = hlo.main_io_bytes(unit.lowered_text)["total"] if lowered \
+            else -1
+        units.append(key_cost(unit.key, n_members=len(bucket.members),
+                              real_elems=real, lowered_bytes=low,
+                              calibration=calibration, label=unit.label))
+        violations.extend(run_rules(unit, exec_rules))
+    grid = place.grid if place else (1, 1)
+    plan_rules = ("auto-placement-sane",) if rules is None \
+        or "auto-placement-sane" in rules else ()
+    if plan_rules:
+        plan_unit = PlanUnit(plan=plan, grid=tuple(grid), label=cell)
+        for r in rules_for("plan", plan_rules):
+            violations.extend(r.check(plan_unit))
+    return CostReport(units=units, violations=violations,
+                      calibration=calibration.to_json(),
+                      rules=exec_rules + plan_rules,
+                      meta={"cells": [{"cell": cell,
+                                       "n_units": len(units)}]})
+
+
+def _enumerate_units(plan, backend, dtype, row_width, mode, place):
+    from repro.analysis.rules import ExecUnit
+    from repro.core.plan import enumerate_executables
+    return [ExecUnit(key=key, builder=builder, avals=avals)
+            for key, builder, avals in enumerate_executables(
+                plan, backend=backend, dtype=dtype, row_width=row_width,
+                mode=mode, placement=place)]
+
+
+def cost_suite_file(path: str, *, mesh=None, backends=("xla", "pallas"),
+                    mode: str = "store", row_width: int = 1, dtype=None,
+                    calibration=None, rules: tuple | None = None
+                    ) -> CostReport:
+    """Cost a suite file across backends at one placement.
+
+    ``mesh="auto"`` resolves to the min-predicted-cost shape first (the
+    choice lands in ``meta.auto``), so the report's ExecKeys are exactly
+    what an explicit ``--mesh BxL`` run would compile.
+    """
+    from repro.core import load_suite
+    from repro.core.plan import SuitePlan
+    patterns = load_suite(path)
+    plan = SuitePlan.build(patterns)
+    auto = None
+    if mesh == "auto":
+        mesh = auto_placement(plan, dtype=dtype, row_width=row_width)
+        auto = "single" if mesh is None else f"{mesh[0]}x{mesh[1]}"
+    report = CostReport()
+    for backend in backends:
+        report = report.merge(cost_plan(
+            plan, backend=backend, dtype=dtype, row_width=row_width,
+            mode=mode, placement=mesh, label=path,
+            calibration=calibration, rules=rules))
+    if auto is not None:
+        report.meta["auto"] = {path: auto}
+    return report
+
+
+def cost_cache(cache, *, calibration=None) -> CostReport:
+    """``GET /cost``: traffic-account the daemon's live cache.
+
+    Restored (DiskTier) executables are one opaque exported call — no
+    lowered signature to reconcile — so they degrade to the key-geometry
+    terms plus the key-only rules, mirroring ``lint_cache``'s downgrade.
+    """
+    from repro.analysis.lint import run_rules
+    from repro.analysis.rules import ExecUnit
+    from repro.core import hlo
+    from repro.core.plan import key_avals
+    if calibration is None:
+        calibration = Calibration.from_bench()
+    units, violations, n_restored = [], [], 0
+    for key, fn in cache.entries():
+        restored = bool(getattr(fn, "restored", False))
+        unit = ExecUnit(key=key, builder=None, avals=key_avals(key),
+                        fn=fn)
+        low = -1
+        if restored:
+            n_restored += 1
+            names = KEY_ONLY_COST_RULES
+        else:
+            low = hlo.main_io_bytes(unit.lowered_text)["total"]
+            names = COST_RULES
+        units.append(key_cost(key, lowered_bytes=low,
+                              calibration=calibration, label=unit.label))
+        violations.extend(run_rules(unit, names))
+    return CostReport(units=units, violations=violations,
+                      calibration=calibration.to_json(), rules=COST_RULES,
+                      meta={"source": "live-cache",
+                            "restored": n_restored})

@@ -133,8 +133,10 @@ def lint_cache(cache, rules=None) -> LintReport:
     from repro.core.plan import key_avals
 
     # the rule subset that inspects ONLY the ExecKey, never the jaxpr —
-    # safe on an opaque restored executable
-    key_only = ("canonical-exec-key",)
+    # safe on an opaque restored executable (the cost rules that need
+    # the lowered signature are skipped; cost-regression reads nothing
+    # but key geometry, so restored entries keep their perf gate)
+    key_only = ("canonical-exec-key", "cost-regression")
     violations: list[Violation] = []
     entries = cache.entries()
     n_restored = 0

@@ -402,6 +402,102 @@ def _key_purity(unit: PlanUnit) -> list[Violation]:
     return out
 
 
+# cost rules (DESIGN.md §15) -------------------------------------------------
+
+@rule("traffic-conservation", scope="executable")
+def _traffic_conservation(unit: ExecUnit) -> list[Violation]:
+    """Every byte in the lowered StableHLO signature is accounted for by
+    the key's traffic model (useful + pad + index + table + keep), and
+    vice versa: excess means redundant materialization the planner does
+    not know about; deficit means the key lies about its geometry."""
+    k = unit.key
+    if k.idx_len == 0 and k.footprint == 0 and k.batch == 0:
+        return []                      # ad-hoc unit, no planner geometry
+    from repro.analysis import cost as C
+    from repro.core import hlo
+    uc = C.key_cost(k)
+    lowered = hlo.main_io_bytes(unit.lowered_text)["total"]
+    # backends that dedup without the keep operand (scalar's serial
+    # writes) legitimately prune it from the lowered signature — the
+    # one allowed deficit; anything else is a geometry lie
+    floor = uc.io_bytes - uc.keep_bytes
+    tol = max(C.TRAFFIC_TOL * uc.io_bytes, C.TRAFFIC_TOL_FLOOR)
+    if lowered > uc.io_bytes + tol or lowered < floor - tol:
+        kind = "unaccounted lowered traffic (redundant " \
+            "materialization?)" if lowered > uc.io_bytes else \
+            "key geometry overstates the lowered module"
+        return [Violation(
+            rule="traffic-conservation", exec_key=unit.label,
+            location=f"lowered={lowered}B predicted={uc.io_bytes}B",
+            message=(f"lowered I/O is {lowered} B but the key's traffic "
+                     f"model predicts {uc.io_bytes} B "
+                     f"(allowed deficit: the {uc.keep_bytes} B keep "
+                     f"mask; tolerance {tol:.0f} B): {kind}"))]
+    return []
+
+
+@rule("auto-placement-sane", scope="plan")
+def _auto_placement_sane(unit: PlanUnit) -> list[Violation]:
+    """On suites with a recorded mesh sweep, the placement ``mesh="auto"``
+    would pick must not be dominated by a recorded cell — no cell may
+    beat it on *both* measured pad waste and measured GB/s beyond
+    tolerance (the cost model may trade the axes, but not lose both)."""
+    from repro.analysis import cost as C
+    cal = C.Calibration.from_bench()
+    cells = cal.sweep.get(C.suite_stem(unit.label))
+    if not cells:
+        return []                      # no recorded sweep: nothing to audit
+    shape = C.select_shape(unit.plan, n_devices=cal.n_dev)
+    name = "single" if shape == (1, 1) else f"{shape[0]}x{shape[1]}"
+    chosen = cells.get(name)
+    if chosen is None:
+        return []                      # auto chose an unrecorded cell
+    out = []
+    for other_name, other in cells.items():
+        if other_name == name:
+            continue
+        if (other["pad_waste"] < chosen["pad_waste"] - C.PAD_WASTE_TOL
+                and other["hmean_gbs"] > chosen["hmean_gbs"]
+                * (1 + C.GBS_TOL)):
+            out.append(Violation(
+                rule="auto-placement-sane", exec_key=unit.label,
+                location=f"auto={name} dominated-by={other_name}",
+                message=(f"auto placement {name} (pad waste "
+                         f"{chosen['pad_waste']:.3f}, "
+                         f"{chosen['hmean_gbs']:.4g} GB/s) is dominated "
+                         f"by recorded cell {other_name} "
+                         f"({other['pad_waste']:.3f}, "
+                         f"{other['hmean_gbs']:.4g} GB/s) — the cost "
+                         f"model disagrees with the measured sweep")))
+    return out
+
+
+@rule("cost-regression", scope="executable")
+def _cost_regression(unit: ExecUnit) -> list[Violation]:
+    """Predicted I/O bytes per executable may not grow versus the
+    committed ``COST_baseline.json`` without updating it (regenerate via
+    ``python -m repro.analysis --cost --write-baseline``).  Key-geometry
+    only, so it also audits restored DiskTier entries."""
+    k = unit.key
+    if k.idx_len == 0 and k.footprint == 0 and k.batch == 0:
+        return []                      # ad-hoc unit, no planner geometry
+    from repro.analysis import cost as C
+    baseline = C.load_baseline()
+    committed = baseline.get(C.key_id(k))
+    if committed is None:
+        return []                      # nothing committed for this key
+    predicted = C.key_cost(k).io_bytes
+    if predicted > committed:
+        return [Violation(
+            rule="cost-regression", exec_key=unit.label,
+            location=f"baseline={committed}B predicted={predicted}B",
+            message=(f"predicted I/O bytes grew {committed} -> "
+                     f"{predicted} vs the committed baseline — update "
+                     f"COST_baseline.json (--write-baseline) if the "
+                     f"growth is intended"))]
+    return []
+
+
 # serve-scope rules ----------------------------------------------------------
 
 @rule("serve-lock-discipline", scope="serve")

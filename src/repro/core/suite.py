@@ -183,6 +183,13 @@ def run_suite(patterns: list[Pattern], *, backend: str = "xla",
     if mode not in SCATTER_MODES:           # mirror the metric validation
         raise ValueError(f"unknown mode {mode!r}; "
                          f"expected one of {SCATTER_MODES}")
+    # mesh="auto": resolve through the §15 cost model first — the
+    # selection names a plain (batch, lane) shape, so the ExecKeys (and
+    # digests) are exactly what the same explicit mesh would produce
+    if mesh == "auto":
+        from repro.analysis.cost import auto_placement
+        mesh = auto_placement(patterns, dtype=dtype,
+                              row_width=row_width)
     # normalize every accepted mesh= form (int, (b, l) tuple, Mesh,
     # Placement) up front so shape/device-count errors surface here, with
     # this function's signature in the traceback, not mid-plan

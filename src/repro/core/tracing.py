@@ -16,7 +16,6 @@ Usage:
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Any, Callable, Iterator
 
 import jax
@@ -303,23 +302,10 @@ def find_dtype_eqns(jaxpr, dtype_name: str, *,
 # lowered-text (StableHLO) census: the walker's HLO side.  Donation and
 # mesh placement are invisible in the jaxpr — they only exist in the
 # lowered module — so the donation-honored and sharding-spec-consistency
-# rules read these markers instead.
-_RE_PARTITIONS = re.compile(r"num_partitions\s*=\s*(\d+)")
-_RE_SHARDING = re.compile(r'mhlo\.sharding\s*=\s*"([^"]*)"')
-_RE_ALIASING = re.compile(r"tf\.aliasing_output|jax\.buffer_donor")
-
-
-def hlo_stats(text: str) -> dict:
-    """Structured census of a lowered module's text
-    (``fn.lower(*avals).as_text()``).
-
-    Returns ``num_partitions`` (1 when unpartitioned), the set of
-    ``mhlo.sharding`` attribute strings, and ``aliased_params`` — the
-    number of input/output aliasing (donation) markers.
-    """
-    m = _RE_PARTITIONS.search(text)
-    return {
-        "num_partitions": int(m.group(1)) if m else 1,
-        "shardings": set(_RE_SHARDING.findall(text)),
-        "aliased_params": len(_RE_ALIASING.findall(text)),
-    }
+# rules read these markers instead.  The parsing itself lives in the
+# shared ``core.hlo`` walker (DESIGN.md §15); the old private regex
+# names stay as aliases for callers.
+from repro.core.hlo import (RE_ALIASING as _RE_ALIASING,        # noqa: F401,E402
+                            RE_PARTITIONS as _RE_PARTITIONS,
+                            RE_SHARDING as _RE_SHARDING,
+                            hlo_stats)

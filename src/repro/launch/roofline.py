@@ -21,16 +21,16 @@ import math
 import re
 from collections import defaultdict
 
+# shape/byte parsing is shared with core.tracing and analysis.cost
+# (DESIGN.md §15); the old private names stay as aliases for callers
+from repro.core.hlo import (DTYPE_BYTES as _DTYPE_BYTES,        # noqa: F401
+                            SHAPE_RE as _SHAPE_RE,
+                            shape_bytes as _shape_bytes,
+                            shape_dims as _shape_dims)
+
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
 
 _SKIP_OPS = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -41,7 +41,6 @@ _SKIP_OPS = {
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 # op line:  %name = <type> opcode(operands...), attrs...
 # <type> may be a tuple type with layouts and /*index=N*/ comments; the
 # opcode is the last lowercase identifier before the first argument paren.
@@ -50,27 +49,6 @@ _OP_RE = re.compile(
     r"([a-z][\w\-]*)\((.*)$")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def _shape_dims(type_str: str) -> list[int]:
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return []
-    return [int(d) for d in m.group(2).split(",") if d]
 
 
 @dataclasses.dataclass

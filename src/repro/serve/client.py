@@ -223,6 +223,13 @@ class SpatterClient:
         document — parse it jax-free with ``LintReport.from_json``."""
         return self._request("/lint")
 
+    def cost(self) -> dict:
+        """spattercost traffic accounting of the daemon's live cache
+        (GET /cost); the ``report`` field is an
+        ``analysis.cost.CostReport`` document — parse it jax-free with
+        ``CostReport.from_json``."""
+        return self._request("/cost")
+
     def run_suite(self, patterns, **options) -> dict:
         """POST a suite; ``patterns`` is a list of suite-JSON dicts, a
         full ``{"patterns": [...], ...}`` envelope, or a JSON string of

@@ -255,6 +255,27 @@ class SpatterDaemon:
                              Placement.create(shape, batch_axis=axis))
             return self._placements[key]
 
+    def _resolve_mesh(self, req: SuiteRequest, patterns):
+        """The request's concrete placement, auto-selected when unpinned.
+
+        An explicit ``mesh=N``/``[b, l]`` resolves exactly as before;
+        ``mesh="auto"`` and requests that pass no ``mesh=`` at all go
+        through the §15 cost model (``analysis.cost.auto_placement``):
+        the min-predicted-traffic shape for THIS suite's plan over the
+        visible devices.  The selection only names a shape — placement
+        strings and ExecKeys are exactly what an explicit ``--mesh BxL``
+        request would produce, so warm repeats stay compile-free and
+        digests bit-identical.  Single device (or no traffic win from
+        sharding) resolves to ``None``, the unplaced fast path.
+        """
+        if req.mesh == "auto" or not req.mesh:
+            from repro.analysis.cost import auto_placement
+            shape = auto_placement(patterns)
+            if shape is None:
+                return None
+            return self._placement(tuple(shape), req.mesh_axis)
+        return self._placement(req.mesh, req.mesh_axis)
+
     def _stream_ref_for(self, req: SuiteRequest):
         """Memoized STREAM reference RunResult for a stream_r request.
 
@@ -292,7 +313,7 @@ class SpatterDaemon:
         # request-shaped failures (bad patterns, oversized mesh) resolve
         # BEFORE any queueing: a 400 never occupies a queue slot
         patterns = req.build_patterns()
-        mesh = self._placement(req.mesh, req.mesh_axis) if req.mesh else None
+        mesh = self._resolve_mesh(req, patterns)
         if self.scheduler is None:
             doc = self._run_serial(req, patterns, mesh)
         else:
@@ -390,6 +411,10 @@ class SpatterDaemon:
                 # the actual launched batch, plan.run_plan)
                 "pad_waste": stats.plan.pad_waste(
                     *(mesh.grid if mesh is not None else (1, 1))),
+                # the placement actually used — for mesh="auto" (and
+                # unpinned requests) this is the cost model's choice
+                "placement": (mesh.placement if mesh is not None
+                              else "single"),
             },
             # scheduler telemetry: queued_ms, launches, coalesced_launches
             # (null on the workers=0 baseline path)
@@ -418,7 +443,7 @@ class SpatterDaemon:
         t0 = time.perf_counter()
         self._ready.wait(TICKET_TIMEOUT_S)
         patterns = req.build_patterns()
-        mesh = self._placement(req.mesh, req.mesh_axis) if req.mesh else None
+        mesh = self._resolve_mesh(req, patterns)
         plan = SuitePlan.build(patterns)
         units = enumerate_executables(plan, backend=req.backend,
                                       row_width=req.row_width, mode=req.mode,
@@ -497,6 +522,22 @@ class SpatterDaemon:
         report = lint_cache(self.cache)
         return {"ok": report.ok, "report": report.to_json()}
 
+    def cost(self) -> dict:
+        """GET /cost: static traffic accounting of the live cache.
+
+        Every cached ExecKey gets the §15 per-unit byte split (useful
+        terms need the plan, so a bare key reports launch geometry
+        only), reconciled against its lowered StableHLO signature
+        (``traffic-conservation``) and the committed byte baseline
+        (``cost-regression``).  Restored DiskTier entries are opaque
+        exported calls — they degrade to key-geometry terms and the
+        key-only rules, exactly like ``GET /lint``'s downgrade.
+        Read-only, same as ``lint``.
+        """
+        from repro.analysis.cost import cost_cache
+        report = cost_cache(self.cache)
+        return {"ok": report.ok, "report": report.to_json()}
+
     def health(self) -> dict:
         import jax
         return {
@@ -553,6 +594,8 @@ def _make_handler(daemon: SpatterDaemon):
                 self._reply(200, daemon.stats())
             elif self.path == "/lint":
                 self._reply(200, daemon.lint())
+            elif self.path == "/cost":
+                self._reply(200, daemon.cost())
             else:
                 self._reply(404, {"ok": False,
                                   "error": f"no such path {self.path!r}"})

@@ -77,21 +77,24 @@ WIRE_METRICS = ("measured", "measured_cpu_gbs", "modeled",
                 "modeled_v5e_gbs")
 
 
-def parse_mesh(spec: str) -> "int | tuple[int, int]":
-    """CLI mesh spec -> wire value: ``"8"`` -> 8, ``"4x2"`` -> (4, 2).
+def parse_mesh(spec: str) -> "int | str | tuple[int, int]":
+    """CLI mesh spec -> wire value: ``"8"`` -> 8, ``"4x2"`` -> (4, 2),
+    ``"auto"`` -> ``"auto"`` (cost-model placement selection).
 
     Stays stdlib-only (the jax-free client parses ``--mesh`` with this);
     full validation happens in ``SuiteRequest`` like every other field.
     """
     s = spec.strip().lower()
+    if s == "auto":
+        return "auto"
     try:
         if "x" in s:
             b, l = s.split("x")
             return int(b), int(l)
         return int(s)
     except ValueError:
-        raise ValueError(f"mesh must be N or BxL (e.g. 8 or 4x2), "
-                         f"got {spec!r}") from None
+        raise ValueError(f"mesh must be N, BxL, or 'auto' (e.g. 8 or "
+                         f"4x2), got {spec!r}") from None
 
 
 # the declared index-buffer length is bounded much tighter than lanes:
@@ -143,8 +146,9 @@ class SuiteRequest:
     mode: str = "store"
     metric: str = "measured"
     row_width: int = 1
-    mesh: int | list = 0        # N (batch-only) or [b, l] 2-D placement;
-                                # normalized to int | tuple[int, int]
+    mesh: int | str | list = 0  # N (batch-only), [b, l] 2-D placement,
+                                # or "auto" (cost-model selection);
+                                # normalized to int | str | tuple
     mesh_axis: str = "data"
     seed: int = 0
     stream_r: bool = False
@@ -201,23 +205,25 @@ class SuiteRequest:
                 or not 0 <= self.deadline_ms <= 86_400_000:
             raise ValueError(f"deadline_ms must be an int in "
                              f"[0, 86400000], got {self.deadline_ms!r}")
-        # mesh: N devices on the pattern-batch axis, or [b, l] for a 2-D
-        # (batch x lane) placement.  Validated HERE — before the daemon's
-        # run lock, like everything else — and the daemon additionally
-        # checks b*l against the visible device count outside the lock.
+        # mesh: N devices on the pattern-batch axis, [b, l] for a 2-D
+        # (batch x lane) placement, or the literal "auto" (the daemon
+        # resolves it through the §15 cost model).  Validated HERE —
+        # before the daemon's run lock, like everything else — and the
+        # daemon additionally checks b*l against the visible device
+        # count outside the lock.
         if isinstance(self.mesh, list):
             object.__setattr__(self, "mesh", tuple(self.mesh))
         mesh = self.mesh
         mesh_ok = (isinstance(mesh, int) and not isinstance(mesh, bool)
-                   and 0 <= mesh <= MAX_MESH_DIM)
+                   and 0 <= mesh <= MAX_MESH_DIM) or mesh == "auto"
         if isinstance(mesh, tuple):
             mesh_ok = (len(mesh) == 2 and all(
                 isinstance(s, int) and not isinstance(s, bool)
                 and 1 <= s <= MAX_MESH_DIM for s in mesh))
         if not mesh_ok:
-            raise ValueError(f"mesh must be an int >= 0 or a [batch, lane] "
+            raise ValueError(f"mesh must be an int >= 0, a [batch, lane] "
                              f"pair of ints >= 1 (dims <= {MAX_MESH_DIM}), "
-                             f"got {self.mesh!r}")
+                             f"or 'auto', got {self.mesh!r}")
         if not isinstance(self.seed, int) or isinstance(self.seed, bool) \
                 or self.seed < 0:
             raise ValueError(f"seed must be an int >= 0, got {self.seed!r}")
@@ -320,7 +326,7 @@ class SuiteRequest:
 # the two can never drift (a new SuiteRequest field is automatically
 # accepted by from_json); patterns is handled separately
 _WIRE_TYPES = {"str": str, "int": int, "bool": bool,
-               "int | list": (int, list, tuple)}
+               "int | str | list": (int, str, list, tuple)}
 _OPTION_FIELDS: dict[str, type] = {
     f.name: _WIRE_TYPES[f.type]
     for f in dataclasses.fields(SuiteRequest) if f.name != "patterns"

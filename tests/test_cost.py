@@ -1,0 +1,366 @@
+"""spattercost (repro/analysis/cost.py, DESIGN.md §15).
+
+Same three-layer discipline as test_lint.py:
+
+* seeded-violation fixtures — each new rule (traffic-conservation,
+  auto-placement-sane, cost-regression) proved to FIRE on the defect it
+  encodes;
+* clean paths: the shipped suites cost clean, the traffic model
+  reconciles byte-for-byte against real lowered StableHLO, and
+  ``mesh="auto"`` resolves to shapes whose ExecKeys match explicit-mesh
+  runs (warm repeats compile 0, digests bit-identical);
+* schema/infrastructure: jax-free module import, CostReport JSON
+  roundtrip, baseline write/load, and the ``python -m repro.analysis
+  --cost`` front-end's exit codes.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+ROOT = os.path.dirname(SRC)
+DEMO = os.path.join(ROOT, "suites", "demo.json")
+
+import jax.numpy as jnp                                    # noqa: E402
+
+from repro.analysis import cost as C                       # noqa: E402
+from repro.analysis.lint import run_rules                  # noqa: E402
+from repro.analysis.rules import RULES, ExecUnit, PlanUnit  # noqa: E402
+from repro.core import ExecutorCache, load_suite, make_pattern, \
+    run_suite                                              # noqa: E402
+from repro.core.plan import (ExecKey, SuitePlan,
+                             enumerate_executables)        # noqa: E402
+
+
+def _fired(violations, rule):
+    hits = [v for v in violations if v.rule == rule]
+    assert hits, f"rule {rule} did not fire: {violations}"
+    return hits
+
+
+def _small_plan():
+    pats = [make_pattern("UNIFORM:8:1", kind="gather", delta=8, count=512,
+                         name="g"),
+            make_pattern("UNIFORM:8:1", kind="scatter", delta=8, count=512,
+                         name="s")]
+    return SuitePlan.build(pats)
+
+
+def _first_unit(plan, backend="xla", placement=None):
+    key, builder, avals = next(iter(enumerate_executables(
+        plan, backend=backend, dtype=jnp.float32, row_width=1,
+        mode="store", placement=placement)))
+    return ExecUnit(key=key, builder=builder, avals=avals)
+
+
+# ---------------------------------------------------------------------------
+# the traffic model itself (pure geometry, no devices)
+# ---------------------------------------------------------------------------
+
+def test_key_cost_gather_arithmetic():
+    key = ExecKey(backend="xla", kind="gather", idx_len=32, footprint=16,
+                  dtype="float32", row_width=1, mode="", batch=2,
+                  placement="")
+    uc = C.key_cost(key)
+    assert uc.lanes == 32
+    assert uc.index_bytes == 2 * 32 * 4
+    assert uc.table_bytes == 2 * (16 + 1) * 4
+    assert uc.keep_bytes == 0
+    # table + idx -> lane data
+    assert uc.io_bytes == uc.table_bytes + uc.index_bytes + 2 * 32 * 4
+    assert uc.replicated_bytes == 0
+    assert uc.device_bytes == uc.io_bytes
+
+
+def test_key_cost_scatter_reads_and_writes_the_table():
+    key = ExecKey(backend="xla", kind="scatter", idx_len=32, footprint=16,
+                  dtype="float32", row_width=1, mode="store", batch=2,
+                  placement="")
+    uc = C.key_cost(key)
+    assert uc.keep_bytes == 2 * 32          # one bool per lane element
+    # dst + idx + vals + keep -> fresh dst-shaped result
+    assert uc.io_bytes == 2 * uc.table_bytes + uc.index_bytes \
+        + 2 * 32 * 4 + uc.keep_bytes
+
+
+def test_lane_shards_replicate_the_table():
+    plan = _small_plan()
+    single = C.shape_cost(plan, (1, 1))
+    split = C.shape_cost(plan, (1, 8))
+    assert single["replicated_bytes"] == 0
+    assert split["replicated_bytes"] > 0
+    # useful bytes are placement-invariant; only overheads move
+    assert split["useful_bytes"] == single["useful_bytes"]
+    assert split["device_bytes"] > single["device_bytes"]
+
+
+def test_shape_cost_matches_key_cost_sum():
+    plan = _small_plan()
+    agg = C.shape_cost(plan, (1, 1))
+    total = 0
+    for key, _, _ in enumerate_executables(plan, backend="xla",
+                                           dtype=jnp.float32, row_width=1,
+                                           mode="store", placement=None):
+        total += C.key_cost(key).io_bytes
+    assert total == agg["io_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# placement auto-selection
+# ---------------------------------------------------------------------------
+
+def test_select_shape_shipped_suites_prefer_single():
+    # on the shipped suites every multi-device split inflates pad or
+    # replicates tables: the model must pick (1, 1), matching the
+    # recorded mesh sweep where "single" wins both axes
+    for name in ("demo", "apps", "widelane"):
+        plan = SuitePlan.build(load_suite(
+            os.path.join(ROOT, "suites", name + ".json")))
+        assert C.select_shape(plan, n_devices=8) == (1, 1), name
+
+
+def test_select_shape_tie_breaks_toward_batch_shards():
+    # 8 identical patterns -> one bucket of batch 8: splitting the batch
+    # 8 ways moves zero extra bytes (a pure tie), and the tie-break must
+    # take the free wall-time division, never a lane split
+    pats = [make_pattern("UNIFORM:8:1", kind="gather", delta=8, count=512,
+                         name=f"g{i}") for i in range(8)]
+    plan = SuitePlan.build(pats)
+    assert C.select_shape(plan, n_devices=8) == (8, 1)
+    assert C.auto_placement(plan, n_devices=8) == (8, 1)
+
+
+def test_auto_placement_single_is_none():
+    plan = _small_plan()
+    assert C.auto_placement(plan, n_devices=1) is None
+    assert C.auto_placement(plan, n_devices=8) is None
+
+
+def test_candidate_shapes():
+    assert C.candidate_shapes(1) == [(1, 1)]
+    assert set(C.candidate_shapes(8)) == {(1, 1), (1, 8), (2, 4), (4, 2),
+                                          (8, 1)}
+
+
+# ---------------------------------------------------------------------------
+# seeded-violation fixtures: every new rule must fire on its defect
+# ---------------------------------------------------------------------------
+
+def test_rule_fires_traffic_conservation_overstated_key():
+    plan = _small_plan()
+    unit = _first_unit(plan)
+    assert run_rules(unit, ["traffic-conservation"]) == []
+    # a key that claims 8x the index length it lowered with is lying
+    # about its geometry: predicted >> lowered
+    lying = dataclasses.replace(unit.key, idx_len=unit.key.idx_len * 8)
+    bad = ExecUnit(key=lying, builder=unit.builder, avals=unit.avals)
+    hits = _fired(run_rules(bad, ["traffic-conservation"]),
+                  "traffic-conservation")
+    assert "overstates" in hits[0].message
+
+
+def test_rule_fires_traffic_conservation_unaccounted_traffic():
+    plan = _small_plan()
+    unit = _first_unit(plan)
+    # a key that understates its geometry leaves lowered bytes
+    # unaccounted: lowered >> predicted
+    lying = dataclasses.replace(unit.key, idx_len=unit.key.idx_len // 4,
+                                footprint=unit.key.footprint // 4)
+    bad = ExecUnit(key=lying, builder=unit.builder, avals=unit.avals)
+    hits = _fired(run_rules(bad, ["traffic-conservation"]),
+                  "traffic-conservation")
+    assert "unaccounted" in hits[0].message
+
+
+def test_rule_fires_cost_regression(tmp_path, monkeypatch):
+    plan = _small_plan()
+    unit = _first_unit(plan)
+    io = C.key_cost(unit.key).io_bytes
+    base = tmp_path / "COST_baseline.json"
+    C.write_baseline({C.key_id(unit.key): io - 1}, str(base))
+    monkeypatch.setenv(C.BASELINE_ENV, str(base))
+    hits = _fired(run_rules(unit, ["cost-regression"]), "cost-regression")
+    assert "baseline" in hits[0].message
+    # exact match (or headroom) is clean
+    C.write_baseline({C.key_id(unit.key): io}, str(base))
+    assert run_rules(unit, ["cost-regression"]) == []
+
+
+def test_rule_cost_regression_clean_when_nothing_committed(tmp_path,
+                                                           monkeypatch):
+    # pointing at a missing file gates nothing
+    monkeypatch.setenv(C.BASELINE_ENV, str(tmp_path / "absent.json"))
+    plan = _small_plan()
+    assert run_rules(_first_unit(plan), ["cost-regression"]) == []
+
+
+def _bench_doc(single, split):
+    return {"backends": {"xla": {"hmean_measured_gbs": 1.0}},
+            "mesh_sweep": {"n_dev": 8, "suites": {"demo": {
+                "single": single, "shapes": {"8x1": split}}}}}
+
+
+def test_rule_fires_auto_placement_sane(tmp_path, monkeypatch):
+    plan = SuitePlan.build(load_suite(DEMO))
+    unit = PlanUnit(plan=plan, grid=(1, 1),
+                    label="suites/demo.json @ single backend=xla")
+    # a sweep where the recorded 8x1 cell beats auto's "single" choice
+    # on BOTH pad waste and GB/s: the model is measurably wrong
+    bench = tmp_path / "BENCH_suite.json"
+    bench.write_text(json.dumps(_bench_doc(
+        {"pad_waste": 0.5, "hmean_gbs": 1.0},
+        {"pad_waste": 0.1, "hmean_gbs": 2.0})))
+    monkeypatch.setenv(C.BENCH_ENV, str(bench))
+    hits = _fired(RULES["auto-placement-sane"].check(unit),
+                  "auto-placement-sane")
+    assert "dominated" in hits[0].message
+    # ...and the real-world shape (single wins an axis) is clean
+    bench.write_text(json.dumps(_bench_doc(
+        {"pad_waste": 0.1, "hmean_gbs": 1.0},
+        {"pad_waste": 0.5, "hmean_gbs": 2.0})))
+    assert RULES["auto-placement-sane"].check(unit) == []
+
+
+def test_rule_auto_placement_sane_clean_without_sweep(tmp_path,
+                                                      monkeypatch):
+    monkeypatch.setenv(C.BENCH_ENV, str(tmp_path / "absent.json"))
+    plan = _small_plan()
+    unit = PlanUnit(plan=plan, grid=(1, 1), label="fixture @ single")
+    assert RULES["auto-placement-sane"].check(unit) == []
+
+
+# ---------------------------------------------------------------------------
+# clean paths: real lowered reconciliation + shipped artifacts
+# ---------------------------------------------------------------------------
+
+def test_cost_plan_demo_reconciles_and_is_clean():
+    report = C.cost_plan(load_suite(DEMO), backend="xla",
+                         label="suites/demo.json")
+    assert report.ok, report.summary()
+    assert report.n_units > 0
+    for u in report.units:
+        assert u.useful_bytes > 0
+        assert u.pad_bytes >= 0
+        copies = 2 if u.kind == "scatter" else 1   # dst read + result
+        assert u.useful_bytes + u.pad_bytes + u.index_bytes \
+            + copies * u.table_bytes + u.keep_bytes == u.io_bytes
+        # the lowered StableHLO agrees with the predicted bytes within
+        # the documented tolerance (keep-mask deficit allowed)
+        tol = max(C.TRAFFIC_TOL * u.io_bytes, C.TRAFFIC_TOL_FLOOR)
+        assert u.io_bytes - u.keep_bytes - tol <= u.lowered_bytes \
+            <= u.io_bytes + tol
+
+
+def test_cost_plan_calibrated_predictions():
+    cal = C.Calibration(source="test", bw_gbs={"xla": 10.0}, n_dev=1)
+    report = C.cost_plan(load_suite(DEMO), backend="xla",
+                         calibration=cal, label="suites/demo.json")
+    for u in report.units:
+        # predicted = ceiling x useful/device fraction, so it can never
+        # beat the calibrated roofline
+        assert 0 < u.predicted_gbs < 10.0
+        assert u.predicted_gbs == pytest.approx(
+            10.0 * u.useful_bytes / u.device_bytes)
+
+
+def test_cost_suite_file_auto_records_choice():
+    report = C.cost_suite_file(DEMO, mesh="auto", backends=("xla",))
+    assert report.ok, report.summary()
+    assert report.meta["auto"] == {DEMO: "single"}
+    # auto resolved to single-device: unplaced ExecKeys
+    assert all(u.placement == "" for u in report.units)
+
+
+# ---------------------------------------------------------------------------
+# mesh="auto" end-to-end: ExecKeys (and digests) match explicit runs
+# ---------------------------------------------------------------------------
+
+def test_run_suite_auto_mesh_matches_explicit():
+    pats = [make_pattern("UNIFORM:8:1", kind="gather", delta=8, count=256,
+                         name="g")]
+    cache = ExecutorCache()
+    explicit = run_suite(pats, runs=1, cache=cache, digest=True, mesh=None)
+    warm = cache.stats().misses
+    auto = run_suite(pats, runs=1, cache=cache, digest=True, mesh="auto")
+    # the auto run resolved to the same placement: same ExecKeys, so a
+    # warm cache compiles NOTHING for it...
+    assert cache.stats().misses == warm
+    # ...and the results are bit-identical
+    assert [r.out_digest for r in auto.results] \
+        == [r.out_digest for r in explicit.results]
+
+
+# ---------------------------------------------------------------------------
+# schema / report infrastructure
+# ---------------------------------------------------------------------------
+
+def test_cost_module_is_jax_free():
+    code = ("import sys; import repro.analysis.cost; "
+            "assert 'jax' not in sys.modules, 'cost imported jax'")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
+
+
+def test_cost_report_json_roundtrip():
+    report = C.cost_plan(load_suite(DEMO), backend="xla",
+                         label="suites/demo.json")
+    doc = json.loads(json.dumps(report.to_json()))
+    back = C.CostReport.from_json(doc)
+    assert back.n_units == report.n_units
+    assert back.ok == report.ok
+    assert [u.exec_key for u in back.units] \
+        == [u.exec_key for u in report.units]
+    with pytest.raises(ValueError):
+        C.CostReport.from_json({"unitz": []})
+    with pytest.raises(ValueError):
+        C.UnitCost.from_json({"exec_key": "k", "bogus": 1})
+
+
+def test_baseline_roundtrip(tmp_path):
+    path = tmp_path / "COST_baseline.json"
+    C.write_baseline({"k1": 100, "k2": 200}, str(path),
+                     meta={"suites": ["x"]})
+    assert C.load_baseline(str(path)) == {"k1": 100, "k2": 200}
+    doc = json.loads(path.read_text())
+    assert doc["meta"]["suites"] == ["x"]
+
+
+def test_committed_baseline_covers_the_matrix():
+    # the repo ships COST_baseline.json; the demo suite's single-device
+    # keys must all be present (the CI gate audits against it)
+    base = C.load_baseline(os.path.join(ROOT, "COST_baseline.json"))
+    assert base, "COST_baseline.json missing or empty"
+    plan = SuitePlan.build(load_suite(DEMO))
+    for key, _, _ in enumerate_executables(plan, backend="xla",
+                                           dtype=jnp.float32, row_width=1,
+                                           mode="store", placement=None):
+        assert C.key_id(key) in base
+        assert base[C.key_id(key)] == C.key_cost(key).io_bytes
+
+
+def test_calibration_from_committed_bench():
+    cal = C.Calibration.from_bench(os.path.join(ROOT, "BENCH_suite.json"))
+    assert cal.bw_gbs.get("xla", 0) > 0
+    assert cal.n_dev >= 1
+
+
+def test_suite_stem():
+    assert C.suite_stem("suites/demo.json @ single backend=xla") == "demo"
+    assert C.suite_stem("no suite here") == ""
+
+
+def test_module_cli_cost_matrix(tmp_path):
+    # the CI front-end: one small cell, report written, exit 0
+    from repro.analysis.__main__ import main
+    out = tmp_path / "COST_report.json"
+    base = tmp_path / "baseline.json"
+    rc = main(["--cost", "--suite", DEMO, "--backend", "xla",
+               "--out", str(out), "--write-baseline", str(base)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["ok"] and doc["n_units"] > 0
+    assert C.load_baseline(str(base))

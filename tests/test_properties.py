@@ -172,3 +172,91 @@ def test_pad_lanes_bracket_stability(n1, n2, n_shards):
     from repro.core.plan import next_pow2, pad_lanes
     if next_pow2(n1) == next_pow2(n2):
         assert pad_lanes(n1, n_shards) == pad_lanes(n2, n_shards)
+
+
+# ---------------------------------------------------------------------------
+# spattercost traffic model (analysis/cost.py, DESIGN.md §15): the byte
+# accounting is pure plan geometry, so its invariants hold for EVERY
+# suite x shard shape — useful bytes never move with placement, overhead
+# only ever grows along a shard axis, and the pad fraction reconciles
+# exactly with the planner's own pad_waste metric.
+# ---------------------------------------------------------------------------
+
+@st.composite
+def small_suites(draw):
+    n = draw(st.integers(1, 5))
+    out = []
+    for i in range(n):
+        m = draw(st.integers(1, 16))
+        stride = draw(st.integers(1, 8))
+        count = draw(st.integers(1, 64))
+        kind = draw(st.sampled_from(["gather", "scatter"]))
+        idx = tuple(j * stride for j in range(m))
+        out.append(Pattern(f"p{i}", kind, idx, m * stride, count))
+    return out
+
+
+_SHARDS = st.sampled_from([1, 2, 4, 8])
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_suites(), _SHARDS, _SHARDS)
+def test_cost_useful_bytes_placement_invariant(pats, b, l):
+    from repro.analysis import cost as C
+    from repro.core.plan import SuitePlan
+    plan = SuitePlan.build(pats)
+    single = C.shape_cost(plan, (1, 1))
+    placed = C.shape_cost(plan, (b, l))
+    # placement moves pad/replication, never the analytic minimum
+    assert placed["useful_bytes"] == single["useful_bytes"]
+    assert placed["useful_bytes"] \
+        == sum(p.count * p.index_len for p in pats) * 4
+    # and the overhead axes are one-directional
+    assert placed["pad_bytes"] >= single["pad_bytes"]
+    assert placed["replicated_bytes"] >= single["replicated_bytes"]
+    assert placed["device_bytes"] >= single["device_bytes"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_suites(), _SHARDS, _SHARDS)
+def test_cost_pad_fraction_matches_plan_pad_waste(pats, b, l):
+    from repro.analysis import cost as C
+    from repro.core.plan import SuitePlan
+    plan = SuitePlan.build(pats)
+    sc = C.shape_cost(plan, (b, l))
+    lane_data = sc["useful_bytes"] + sc["pad_bytes"]
+    assert sc["pad_bytes"] / lane_data == pytest.approx(
+        plan.pad_waste(b, l))
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_suites(), _SHARDS, _SHARDS)
+def test_cost_monotone_in_shards(pats, b, l):
+    from repro.analysis import cost as C
+    from repro.core.plan import SuitePlan
+    plan = SuitePlan.build(pats)
+    base = C.shape_cost(plan, (b, l))
+    # doubling either shard axis can only add pad (batch axis) or pad +
+    # table replication (lane axis) — predicted traffic never shrinks
+    more_b = C.shape_cost(plan, (2 * b, l))
+    more_l = C.shape_cost(plan, (b, 2 * l))
+    assert more_b["device_bytes"] >= base["device_bytes"]
+    assert more_l["device_bytes"] >= base["device_bytes"]
+    assert more_l["replicated_bytes"] > base["replicated_bytes"] \
+        or base["table_bytes"] == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_suites(), _SHARDS, _SHARDS)
+def test_cost_reproducible_across_reenumeration(pats, b, l):
+    from repro.analysis import cost as C
+    from repro.core.plan import SuitePlan
+    # the model is a pure function of the plan: rebuilding the plan from
+    # the same patterns predicts bit-identical traffic (what makes the
+    # committed COST_baseline.json a stable gate)
+    c1 = C.shape_cost(SuitePlan.build(pats), (b, l))
+    c2 = C.shape_cost(SuitePlan.build(list(pats)), (b, l))
+    assert c1 == c2
+    s1 = C.select_shape(SuitePlan.build(pats), n_devices=8)
+    s2 = C.select_shape(SuitePlan.build(list(pats)), n_devices=8)
+    assert s1 == s2

@@ -71,11 +71,24 @@ def test_schema_mesh_accepts_2d_shapes():
         {"patterns": SUITE, "mesh": (4, 2)}).mesh == (4, 2)
 
 
+def test_schema_mesh_accepts_auto():
+    # mesh="auto" rides the wire as the literal string; the daemon
+    # resolves it to a concrete shape via the §15 cost model
+    req = SuiteRequest.from_json({"patterns": SUITE, "mesh": "auto"})
+    assert req.mesh == "auto"
+    assert req.to_json()["mesh"] == "auto"
+    assert SuiteRequest.from_json(req.to_json()) == req
+    with pytest.raises(ValueError, match="mesh"):
+        SuiteRequest.from_json({"patterns": SUITE, "mesh": "turbo"})
+
+
 def test_parse_mesh():
     from repro.serve.schema import parse_mesh
     assert parse_mesh("8") == 8
     assert parse_mesh("4x2") == (4, 2)
     assert parse_mesh(" 2X4 ") == (2, 4)
+    assert parse_mesh("auto") == "auto"
+    assert parse_mesh(" AUTO ") == "auto"
     for bad in ("4y2", "x", "4x", "4x2x1", "a"):
         with pytest.raises(ValueError, match="mesh"):
             parse_mesh(bad)
@@ -220,6 +233,66 @@ def test_lint_endpoint_audits_warm_cache(served):
     assert report.n_violations == 0, report.summary()
     # the audit is read-only: serving telemetry unchanged
     assert served.cache()["cache"]["size"] == size
+
+
+def test_cost_endpoint_accounts_warm_cache(served):
+    # GET /cost: spattercost over the daemon's LIVE cache (DESIGN.md
+    # §15).  Cold: zero units.  Warm: every cached ExecKey is
+    # byte-accounted and reconciled against its lowered StableHLO.
+    from repro.analysis.cost import CostReport
+    cold = served.cost()
+    assert cold["ok"] and cold["report"]["n_units"] == 0
+    served.run_suite(SUITE, backend="xla", runs=1)
+    size = served.cache()["cache"]["size"]
+    r = served.cost()
+    report = CostReport.from_json(r["report"])     # jax-free schema
+    assert r["ok"] and report.ok
+    assert report.n_units == size                  # every entry costed
+    assert report.n_violations == 0, report.summary()
+    for u in report.units:
+        assert u.io_bytes > 0
+        assert u.lowered_bytes > 0                 # live entries reconcile
+    # read-only, like /lint
+    assert served.cache()["cache"]["size"] == size
+
+
+def test_cost_endpoint_degrades_on_restored_entries(tmp_path):
+    # restored (DiskTier) executables are one opaque exported call: no
+    # lowered signature to reconcile, so GET /cost degrades them to
+    # key-geometry accounting (lowered_bytes = -1) plus the key-only
+    # rules — mirroring /lint's downgrade — and stays clean
+    from repro.analysis.cost import CostReport
+    root = str(tmp_path)
+    with SpatterDaemon(port=0, cache=ExecutorCache(), cache_dir=root) as d:
+        c = SpatterClient(d.url)
+        r1 = c.run_suite(SUITE, runs=1)
+        n_buckets = r1["plan"]["n_buckets"]
+    with SpatterDaemon(port=0, cache=ExecutorCache(), cache_dir=root) as d:
+        c = SpatterClient(d.url)
+        r2 = c.run_suite(SUITE, runs=1)
+        assert r2["cache"]["misses"] == 0          # all restored from disk
+        r = c.cost()
+        report = CostReport.from_json(r["report"])
+        assert r["ok"] and report.ok, report.summary()
+        assert report.meta["restored"] == n_buckets
+        assert report.n_units == n_buckets
+        for u in report.units:
+            assert u.lowered_bytes == -1           # opaque: not reconciled
+            assert u.io_bytes > 0                  # geometry still exact
+
+
+def test_mesh_auto_request_resolves_and_stays_warm(served):
+    # mesh="auto" on the wire: the daemon resolves the placement via the
+    # §15 cost model; on one device that is "single", so the ExecKeys —
+    # and therefore the warm cache and the digests — match an unpinned
+    # request exactly
+    r1 = served.run_suite(SUITE, runs=1)
+    d1 = [t["digest"] for t in r1["stats"]["table"]]
+    r2 = served.run_suite(SUITE, runs=1, mesh="auto")
+    assert r2["ok"]
+    assert r2["plan"]["placement"] == "single"
+    assert r2["cache"]["misses"] == 0              # same ExecKeys as r1
+    assert [t["digest"] for t in r2["stats"]["table"]] == d1
 
 
 def test_second_request_compiles_nothing_and_is_bit_identical(served):
