@@ -5,8 +5,14 @@ each backend and writes one machine-readable record per (pattern, backend):
 measured/modeled GB/s, attributed wall time, plus per-backend compile
 counts (ExecutorCache.misses — exact) and the pallas one-launch-per-bucket
 census (pallas_call primitives in each store/gather bucket executable's
-jaxpr).  CI uploads the file as an artifact so the perf trajectory is
-tracked across PRs; compare against the committed baseline with::
+jaxpr).  Two §16 sections ride along: ``autotune`` (the pallas sweep
+under the legacy fixed tiles vs the deterministic tile search, plus the
+per-geometry tiles chosen) and ``pallas_lane`` (lane-sharded pallas on 8
+fake devices in a child process, bit-identity checked against the
+single-device planner).  The file is read-merge-written — other benches
+own their own sections.  CI uploads it as an artifact so the perf
+trajectory is tracked across PRs; compare against the committed baseline
+with::
 
     PYTHONPATH=src python -m benchmarks.run --quick --only suite
 
@@ -18,7 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import platform
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -27,12 +37,63 @@ import jax.numpy as jnp
 from repro.core import ExecutorCache, SuitePlan, load_suite, run_suite
 from repro.core.plan import _assemble_bucket, _build_executable
 from repro.core.tracing import count_primitives
+from repro.kernels import autotune
 
 from .harness import emit
 
 DEFAULT_SUITE = "suites/demo.json"
 DEFAULT_OUT = "BENCH_suite.json"
 BACKENDS = ("xla", "onehot", "scalar", "pallas")
+
+# §16 lane-sharded pallas sweep: its own process so the forced device
+# count never leaks into this one (same discipline as the sharded bench)
+LANE_SHAPES = ((1, 8), (4, 2))
+_LANE_CHILD = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json, sys, time
+    sys.path.insert(0, %(src)r)
+    from repro.core import ExecutorCache, load_suite, run_suite
+
+    pats = load_suite(%(suite)r)
+    cap = %(cap)d
+    if cap:
+        pats = [dataclasses.replace(p, count=min(p.count, cap))
+                for p in pats]
+    out = {}
+    ref = run_suite(pats, backend="pallas", runs=%(runs)d,
+                    cache=ExecutorCache(), digest=True)
+    d_ref = [r.out_digest for r in ref.results]
+    out["single"] = {"hmean_gbs": ref.hmean_gbs}
+    for b, l in %(shapes)r:
+        cache = ExecutorCache()
+        t0 = time.perf_counter()
+        stats = run_suite(pats, backend="pallas", runs=%(runs)d,
+                          cache=cache, mesh=(b, l), digest=True)
+        out["%%dx%%d" %% (b, l)] = {
+            "hmean_gbs": stats.hmean_gbs,
+            "wall_s": time.perf_counter() - t0,
+            "compiles": cache.stats().misses,
+            "digests_match_single":
+                [r.out_digest for r in stats.results] == d_ref,
+        }
+    print(json.dumps(out))
+    """)
+
+
+def _pallas_lane_sweep(suite: str, runs: int, cap: int) -> dict:
+    """Lane-sharded pallas on 8 fake devices: hmean per shape + the
+    bit-identity check against the single-device planner."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                       "..", "src"))
+    code = _LANE_CHILD % {"src": src, "suite": os.path.abspath(suite),
+                          "cap": cap, "runs": runs,
+                          "shapes": tuple(LANE_SHAPES)}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=540)
+    if r.returncode != 0:
+        raise RuntimeError(f"pallas-lane child failed: {r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def _pallas_launch_census(plan: SuitePlan) -> list[dict]:
@@ -67,11 +128,15 @@ def run(runs: int = 3, *, suite: str = DEFAULT_SUITE,
 
     results = []
     per_backend = {}
+    tiles: dict = {}
     for backend in backends:
         cache = ExecutorCache()
         t0 = time.perf_counter()
-        stats = run_suite(patterns, backend=backend, runs=runs, cache=cache)
+        with autotune.recording() as rec:
+            stats = run_suite(patterns, backend=backend, runs=runs,
+                              cache=cache)
         wall = time.perf_counter() - t0
+        tiles.update(rec)
         per_backend[backend] = {
             "compiles": cache.misses,
             "n_buckets": stats.plan.n_buckets,
@@ -91,6 +156,33 @@ def run(runs: int = 3, *, suite: str = DEFAULT_SUITE,
         emit(f"suite/{backend}", wall * 1e6,
              f"{cache.misses}compiles;hmean={stats.hmean_gbs:.3f}gbs")
 
+    # the before leg of the §16 autotuner: the same pallas sweep under
+    # the legacy fixed tiles (what every PR before the search shipped)
+    before = None
+    if "pallas" in backends:
+        with autotune.disabled():
+            t0 = time.perf_counter()
+            legacy = run_suite(patterns, backend="pallas", runs=runs,
+                               cache=ExecutorCache())
+            legacy_wall = time.perf_counter() - t0
+        before = {"hmean_measured_gbs": legacy.hmean_gbs,
+                  "wall_s": legacy_wall}
+        tuned = per_backend["pallas"]["hmean_measured_gbs"]
+        speedup = (tuned / legacy.hmean_gbs) if legacy.hmean_gbs else -1.0
+        emit("suite/pallas_legacy_tiles", legacy_wall * 1e6,
+             f"hmean={legacy.hmean_gbs:.3e}gbs;tuned_speedup={speedup:.2f}x")
+
+    lane = None
+    if "pallas" in backends:
+        lane = _pallas_lane_sweep(suite, max(1, min(runs, 2)),
+                                  min(count_cap or 128, 128))
+        for shape, row in lane.items():
+            if shape == "single":
+                continue
+            emit(f"suite/pallas_lane_{shape}", row["wall_s"] * 1e6,
+                 f"{row['hmean_gbs']:.3e}gbs;"
+                 f"ident={row['digests_match_single']}")
+
     doc = {
         "meta": {
             "suite": suite,
@@ -105,10 +197,29 @@ def run(runs: int = 3, *, suite: str = DEFAULT_SUITE,
         "backends": per_backend,
         "pallas_bucket_launches": _pallas_launch_census(plan),
         "results": results,
+        # §16: what the deterministic tile search bought on this host —
+        # legacy-tile leg vs the autotuned pallas sweep above — plus the
+        # per-geometry tiles it chose (the wire form DiskTier persists)
+        "autotune": {
+            "before_legacy_tiles": before,
+            "after_hmean_measured_gbs":
+                per_backend.get("pallas", {}).get("hmean_measured_gbs"),
+            "tiles": autotune.to_wire(tiles),
+        },
+        # §16: lane-sharded pallas (8 fake devices, own process) — every
+        # shape must stay bit-identical to the single-device planner
+        "pallas_lane": lane,
     }
     if out_path:                       # None = CSV only, no trajectory write
+        # read-merge-write: other benches (mesh_sweep, serve_concurrency,
+        # ...) own their sections of the trajectory file
+        prev = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                prev = json.load(f)
+        prev.update(doc)
         with open(out_path, "w") as f:
-            json.dump(doc, f, indent=2)
+            json.dump(prev, f, indent=2)
         emit("suite/json", 0.0, out_path)
     return doc
 

@@ -43,8 +43,10 @@ def main(argv=None) -> int:
                     metavar="FILE", help="suites/*.json file (repeatable)")
     ap.add_argument("--mesh", action="append", default=[],
                     metavar="N|BxL|auto",
-                    help="placement cell, e.g. 1x1, 8x1, 4x2, 1x8, or "
-                         "auto (repeatable; default: single-device only)")
+                    help="placement cell, e.g. 1x1, 8x1, 4x2, 1x8, auto "
+                         "(per-bucket cost-model), or auto-suite (one "
+                         "suite-wide shape); repeatable; default: "
+                         "single-device only")
     ap.add_argument("--backend", action="append", default=[],
                     choices=["xla", "onehot", "scalar", "pallas"],
                     help="backend(s) to audit (default: xla + pallas)")

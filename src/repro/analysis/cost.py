@@ -164,8 +164,12 @@ def key_cost(key, *, n_members: int = -1, real_elems: int = -1,
     # keep -> fresh dst-shaped result (cached executables never donate).
     copies = 2 if scatter else 1
     io_b = copies * table_b + index_b + lane_data + keep_b
-    # lane shards replicate every batch-sharded-only operand/result
-    repl_b = copies * table_b * (l_shards - 1)
+    # lane shards replicate every batch-sharded-only operand/result —
+    # except on the pallas backend, whose lane-sharded launches go
+    # through shard_map (DESIGN.md §16): the table is explicitly
+    # device-local there, and no GSPMD all-gather ever materializes
+    repl_b = (0 if key.backend == "pallas"
+              else copies * table_b * (l_shards - 1))
     device_b = io_b + repl_b
     useful = real_elems * e * r if real_elems >= 0 else -1
     pad = lane_data - useful if useful >= 0 else -1
@@ -189,15 +193,19 @@ def key_cost(key, *, n_members: int = -1, real_elems: int = -1,
 # --------------------------------------------------------------------------
 
 def shape_cost(plan, shape=(1, 1), *, elem_bytes: int = 4,
-               row_width: int = 1) -> dict:
+               row_width: int = 1, backend: str | None = None) -> dict:
     """Aggregate predicted traffic of a plan at a ``(batch, lane)``
     shard shape — pure arithmetic, no mesh or devices required.
 
     Matches ``key_cost`` summed over ``enumerate_executables`` at the
-    same placement (a tests/test_properties.py invariant).
+    same placement (a tests/test_properties.py invariant) — including
+    the backend term: pallas launches take the shard_map lane path
+    (DESIGN.md §16), so with ``backend="pallas"`` no replication bytes
+    are charged.
     """
     from repro.core.plan import pad_batch, pad_lanes
     b, l = int(shape[0]), int(shape[1])
+    l_repl = 1 if backend == "pallas" else l
     useful = pad = index_b = table_b = keep_b = repl_b = 0
     for bucket in plan.buckets:
         batch = pad_batch(len(bucket.members), b)
@@ -214,7 +222,7 @@ def shape_cost(plan, shape=(1, 1), *, elem_bytes: int = 4,
             * row_width * elem_bytes
         keep_b += lane_elems * _KEEP_BYTES if scatter else 0
         repl_b += copies * batch * (bucket.spec.footprint + 1) \
-            * row_width * elem_bytes * (l - 1)
+            * row_width * elem_bytes * (l_repl - 1)
     io_b = useful + pad + index_b + table_b + keep_b
     return {"shape": [b, l], "useful_bytes": useful, "pad_bytes": pad,
             "index_bytes": index_b, "table_bytes": table_b,
@@ -234,7 +242,8 @@ def candidate_shapes(n_devices: int) -> list[tuple[int, int]]:
 
 
 def select_shape(plan, *, n_devices: int = 1, elem_bytes: int = 4,
-                 row_width: int = 1) -> tuple[int, int]:
+                 row_width: int = 1,
+                 backend: str | None = None) -> tuple[int, int]:
     """The min-predicted-cost shard shape for a plan.
 
     Minimizes total predicted device traffic (``device_bytes`` — pad
@@ -242,11 +251,14 @@ def select_shape(plan, *, n_devices: int = 1, elem_bytes: int = 4,
     ``TIE_TOL`` of the minimum are traffic-equivalent and the tie breaks
     toward more *batch* shards (free wall-time division on real
     multi-chip hardware, bit-identical results), never toward lane
-    shards (those replicate the table for no traffic win).
+    shards.  ``backend`` feeds the replication term: pallas lane shards
+    move no all-gather bytes (the shard_map path), so lane splits
+    compete on pad waste alone there.
     """
     shapes = candidate_shapes(n_devices)
     costs = {s: shape_cost(plan, s, elem_bytes=elem_bytes,
-                           row_width=row_width)["device_bytes"]
+                           row_width=row_width, backend=backend)
+             ["device_bytes"]
              for s in shapes}
     best = min(costs.values())
     tied = [s for s in shapes if costs[s] <= best * (1 + TIE_TOL)]
@@ -254,8 +266,9 @@ def select_shape(plan, *, n_devices: int = 1, elem_bytes: int = 4,
 
 
 def auto_placement(patterns_or_plan, *, n_devices: int | None = None,
-                   dtype=None, row_width: int = 1):
-    """Resolve ``mesh="auto"`` to a concrete shard shape (or ``None``
+                   dtype=None, row_width: int = 1,
+                   backend: str | None = None):
+    """Resolve an auto mesh to a concrete shard shape (or ``None``
     for single-device — the unplaced ``ExecKey`` placement ``""``).
 
     Returns a plain ``(batch, lane)`` tuple consumable by every
@@ -272,7 +285,7 @@ def auto_placement(patterns_or_plan, *, n_devices: int | None = None,
         n_devices = len(jax.devices())
     eb = _elem_bytes("float32" if dtype is None else dtype)
     shape = select_shape(plan, n_devices=n_devices, elem_bytes=eb,
-                         row_width=row_width)
+                         row_width=row_width, backend=backend)
     return None if shape == (1, 1) else shape
 
 
@@ -469,8 +482,20 @@ def cost_plan(patterns, *, backend: str = "xla", dtype=None,
         calibration = Calibration.from_bench()
     plan = patterns if hasattr(patterns, "buckets") \
         else SuitePlan.build(list(patterns))
-    place = as_placement(placement, mesh_axis)
-    place_str = place.placement if place else "single"
+    if isinstance(placement, str):       # "auto" / "auto-suite"
+        from repro.core.plan import auto_placements
+        placement = auto_placements(plan, placement, mesh_axis=mesh_axis,
+                                    backend=backend, dtype=dtype,
+                                    row_width=row_width)
+    if isinstance(placement, list):      # per-bucket (mesh="auto")
+        place = [as_placement(p, mesh_axis) for p in placement]
+        placements = place
+        place_str = "auto(" + ",".join(
+            p.placement if p else "single" for p in place) + ")"
+    else:
+        place = as_placement(placement, mesh_axis)
+        placements = None
+        place_str = place.placement if place else "single"
     cell = f"{label} @ {place_str} backend={backend}" if label \
         else f"@ {place_str} backend={backend}"
     dtype = dtype or jnp.float32
@@ -488,11 +513,13 @@ def cost_plan(patterns, *, backend: str = "xla", dtype=None,
                               real_elems=real, lowered_bytes=low,
                               calibration=calibration, label=unit.label))
         violations.extend(run_rules(unit, exec_rules))
-    grid = place.grid if place else (1, 1)
+    grid = (1, 1) if placements is not None \
+        else (place.grid if place else (1, 1))
     plan_rules = ("auto-placement-sane",) if rules is None \
         or "auto-placement-sane" in rules else ()
     if plan_rules:
-        plan_unit = PlanUnit(plan=plan, grid=tuple(grid), label=cell)
+        plan_unit = PlanUnit(plan=plan, grid=tuple(grid), label=cell,
+                             placements=placements)
         for r in rules_for("plan", plan_rules):
             violations.extend(r.check(plan_unit))
     return CostReport(units=units, violations=violations,
@@ -517,25 +544,35 @@ def cost_suite_file(path: str, *, mesh=None, backends=("xla", "pallas"),
                     ) -> CostReport:
     """Cost a suite file across backends at one placement.
 
-    ``mesh="auto"`` resolves to the min-predicted-cost shape first (the
-    choice lands in ``meta.auto``), so the report's ExecKeys are exactly
-    what an explicit ``--mesh BxL`` run would compile.
+    ``mesh="auto"`` resolves PER BUCKET inside each backend's cell (the
+    cost model's choice depends on the backend: lane-sharded pallas is
+    not charged replication bytes); ``mesh="auto-suite"`` resolves one
+    suite-wide shape per backend.  The per-backend choices land in
+    ``meta.auto``, and the report's ExecKeys are exactly what explicit
+    ``--mesh BxL`` runs of the chosen shapes would compile.
     """
     from repro.core import load_suite
-    from repro.core.plan import SuitePlan
+    from repro.core.plan import SuitePlan, auto_placements
     patterns = load_suite(path)
     plan = SuitePlan.build(patterns)
-    auto = None
-    if mesh == "auto":
-        mesh = auto_placement(plan, dtype=dtype, row_width=row_width)
-        auto = "single" if mesh is None else f"{mesh[0]}x{mesh[1]}"
+    auto: dict = {}
     report = CostReport()
     for backend in backends:
+        placement = mesh
+        if mesh in ("auto", "auto-suite"):
+            placement = auto_placements(plan, mesh, backend=backend,
+                                        dtype=dtype, row_width=row_width)
+            if isinstance(placement, list):
+                auto[backend] = [p.placement if p else "single"
+                                 for p in placement]
+            else:
+                auto[backend] = (placement.placement if placement
+                                 else "single")
         report = report.merge(cost_plan(
             plan, backend=backend, dtype=dtype, row_width=row_width,
-            mode=mode, placement=mesh, label=path,
+            mode=mode, placement=placement, label=path,
             calibration=calibration, rules=rules))
-    if auto is not None:
+    if auto:
         report.meta["auto"] = {path: auto}
     return report
 

@@ -65,19 +65,36 @@ def lint_plan(patterns, *, backend: str = "xla", mode: str = "store",
               dtype=None, row_width: int = 1, placement=None,
               mesh_axis: str = "data", label: str = "",
               rules=None) -> LintReport:
-    """Audit one suite x placement cell without running anything."""
+    """Audit one suite x placement cell without running anything.
+
+    ``placement`` accepts any ``as_placement`` form, the auto strings
+    (``"auto"`` resolves per bucket against this cell's backend —
+    the cost model's choice is backend-dependent — and
+    ``"auto-suite"`` to one suite-wide shape), or a per-bucket
+    placement list.
+    """
     import jax.numpy as jnp
 
-    from repro.core.plan import (SuitePlan, as_placement,
+    from repro.core.plan import (SuitePlan, as_placement, auto_placements,
                                  enumerate_executables)
     dtype = jnp.dtype(dtype or jnp.float32)
-    placement = as_placement(placement, mesh_axis)
-    grid = placement.grid if placement else (1, 1)
-    place_str = placement.placement if placement else "single"
     patterns = tuple(patterns)
+    plan = SuitePlan.build(patterns)
+    if isinstance(placement, str):
+        placement = auto_placements(plan, placement, mesh_axis=mesh_axis,
+                                    backend=backend, dtype=dtype,
+                                    row_width=row_width)
+    if isinstance(placement, list):
+        placement = [as_placement(p, mesh_axis) for p in placement]
+        grid, placements = (1, 1), placement
+        place_str = "auto(" + ",".join(
+            p.placement if p else "single" for p in placement) + ")"
+    else:
+        placement = as_placement(placement, mesh_axis)
+        grid, placements = (placement.grid if placement else (1, 1)), None
+        place_str = placement.placement if placement else "single"
     label = label or f"suite[{len(patterns)}]"
     cell = f"{label} @ {place_str} backend={backend}"
-    plan = SuitePlan.build(patterns)
 
     def enumerate_again():
         return enumerate_executables(
@@ -90,7 +107,7 @@ def lint_plan(patterns, *, backend: str = "xla", mode: str = "store",
         unit = ExecUnit(key=key, builder=builder, avals=avals)
         violations.extend(run_rules(unit, rules))
     plan_unit = PlanUnit(plan=plan, grid=grid, label=cell,
-                         enumerate=enumerate_again)
+                         enumerate=enumerate_again, placements=placements)
     for r in rules_for("plan", rules):
         violations.extend(r.check(plan_unit))
     return LintReport(
@@ -105,7 +122,12 @@ def lint_plan(patterns, *, backend: str = "xla", mode: str = "store",
 def lint_suite_file(path: str, *, mesh=None, backends=("xla", "pallas"),
                     mode: str = "store", row_width: int = 1,
                     dtype=None, rules=None) -> LintReport:
-    """Audit a suites/*.json file across backends on one placement."""
+    """Audit a suites/*.json file across backends on one placement.
+
+    ``mesh`` may be the strings ``"auto"``/``"auto-suite"``; they
+    resolve inside each backend's cell (the §15 choice depends on the
+    backend — lane-sharded pallas is not charged replication bytes).
+    """
     from repro.core import load_suite
     patterns = load_suite(path)
     report = LintReport()

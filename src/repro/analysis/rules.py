@@ -97,11 +97,17 @@ class ExecUnit:
 @dataclasses.dataclass
 class PlanUnit:
     """A suite-level audit unit: the plan, the placement grid it would
-    launch on, and a zero-arg re-enumeration of its executables."""
+    launch on, and a zero-arg re-enumeration of its executables.
+
+    A ``mesh="auto"`` cell launches on per-bucket placements rather
+    than one grid; ``placements`` then carries the resolved
+    ``Placement | None`` list (bucket order) and ``grid`` is vestigial.
+    """
     plan: object                      # plan.SuitePlan
     grid: tuple[int, int]             # (batch_shards, lane_shards)
     label: str                        # e.g. "suites/demo.json @ 4x2"
     enumerate: Callable[[], list] | None = None   # -> [(key, builder, avals)]
+    placements: list | None = None    # per-bucket [Placement | None]
 
 
 @dataclasses.dataclass
@@ -168,19 +174,38 @@ def _no_sort(unit: ExecUnit) -> list[Violation]:
 
 @rule("single-pallas-call-per-bucket", scope="executable")
 def _single_pallas(unit: ExecUnit) -> list[Violation]:
-    """The pallas backend launches exactly ONE kernel per bucket (PR 3's
-    single-pass store kernel); other backends launch zero."""
+    """The pallas backend launches exactly ONE kernel per bucket PER
+    DEVICE (PR 3's single-pass store kernel); other backends launch
+    zero.  The census walks into shard_map bodies (core.tracing
+    descends every sub-jaxpr), where one ``pallas_call`` equation IS
+    one launch on each mesh device — so on the lane-sharded path the
+    same ``count == 1`` is the per-device launch census.  Lane-sharded
+    pallas keys must additionally run that launch INSIDE the shard_map
+    body: a pallas_call left outside is GSPMD-routed, the replicated
+    fallback the §16 manual path exists to avoid."""
+    from repro.core.plan import placement_grid
     n = unit.counts.get("pallas_call", 0)
     want = 1 if unit.key.backend == "pallas" else 0
-    if n == want:
-        return []
-    return [Violation(
-        rule="single-pallas-call-per-bucket", exec_key=unit.label,
-        message=(f"{n} pallas_call(s) in the jaxpr, expected {want} for "
-                 f"backend={unit.key.backend!r}"
-                 + (" — multi-launch buckets re-pay kernel dispatch per "
-                    "tile pass (the pre-PR 3 masked-add + count + blend "
-                    "split)" if want == 1 else "")))]
+    if n != want:
+        return [Violation(
+            rule="single-pallas-call-per-bucket", exec_key=unit.label,
+            message=(f"{n} pallas_call(s) in the jaxpr, expected {want} "
+                     f"per device for backend={unit.key.backend!r}"
+                     + (" — multi-launch buckets re-pay kernel dispatch "
+                        "per tile pass (the pre-PR 3 masked-add + count "
+                        "+ blend split)" if want == 1 else "")))]
+    if want == 1 and placement_grid(unit.key.placement)[1] > 1:
+        from repro.core.tracing import shard_map_pallas_calls
+        inside = shard_map_pallas_calls(unit.jaxpr)
+        if inside != 1:
+            return [Violation(
+                rule="single-pallas-call-per-bucket", exec_key=unit.label,
+                message=(f"lane-sharded pallas key "
+                         f"{unit.key.placement!r} but {inside} "
+                         f"pallas_call(s) inside shard_map bodies "
+                         f"(expected 1): the launch is GSPMD-routed, "
+                         f"not the §16 manual lane split"))]
+    return []
 
 
 @rule("no-host-callback-or-device-put-in-timed-region", scope="executable")
@@ -276,6 +301,32 @@ def _sharding_consistency(unit: ExecUnit) -> list[Violation]:
             location=f"shardings seen: {sorted(stats['shardings'])[:4]}",
             message=(f"placement {unit.key.placement!r} promises tile "
                      f"{tile} but no lowered operand sharding carries it")))
+    # the §16 manual path: a lane-sharded pallas executable splits its
+    # axes with shard_map, and every shard_map's mesh must be exactly
+    # the named axes the placement string promises — a drifted mesh
+    # (wrong split, renamed axis, stale grid) would still lower and run,
+    # just on the wrong decomposition
+    if unit.key.backend == "pallas" and l > 1:
+        from repro.core.plan import placement_axes
+        from repro.core.tracing import shard_map_meshes
+        want = placement_axes(unit.key.placement)
+        meshes = shard_map_meshes(unit.jaxpr)
+        if not meshes:
+            out.append(Violation(
+                rule="sharding-spec-consistency", exec_key=unit.label,
+                message=(f"lane-sharded pallas key "
+                         f"{unit.key.placement!r} but the jaxpr has no "
+                         f"shard_map — the launch relies on GSPMD "
+                         f"replication, not the §16 manual lane split")))
+        for got in meshes:
+            live = {k: v for k, v in got.items() if v > 1}
+            if live != want:
+                out.append(Violation(
+                    rule="sharding-spec-consistency", exec_key=unit.label,
+                    location=f"shard_map mesh: {got}",
+                    message=(f"shard_map splits axes {live} but the key "
+                             f"placement {unit.key.placement!r} promises "
+                             f"{want}")))
     return out
 
 
@@ -346,8 +397,12 @@ def _pad_waste(unit: PlanUnit) -> list[Violation]:
     budget: pathological padding (one huge-lane pattern batch-padded
     8-wide) silently launches >90% scratch lanes — the signal the
     ROADMAP per-bucket auto-placement item needs surfaced, not buried."""
-    b, l = unit.grid
-    waste = unit.plan.pad_waste(b, l)
+    if unit.placements is not None:           # mesh="auto": per-bucket
+        b, l = "auto", "auto"
+        waste = unit.plan.pad_waste_for(unit.placements)
+    else:
+        b, l = unit.grid
+        waste = unit.plan.pad_waste(b, l)
     if waste <= PAD_WASTE_BUDGET:
         return []
     return [Violation(

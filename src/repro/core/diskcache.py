@@ -45,6 +45,8 @@ from typing import Callable
 import jax
 from jax import export as jax_export   # not an auto-loaded jax attribute
 
+from repro.kernels import autotune
+
 from .plan import ExecKey, placement_grid
 
 MAGIC = b"SPXC1\n"
@@ -134,7 +136,11 @@ class DiskTier:
         if getattr(fn, "restored", False):
             return False                 # came FROM disk: already there
         try:
-            exported = jax_export.export(fn)(*avals)
+            # tracing the executable consults the tile autotuner for
+            # exactly the tiles it bakes in; record them so a restore can
+            # re-seed the memo and skip the search (DESIGN.md §16)
+            with autotune.recording() as tiles:
+                exported = jax_export.export(fn)(*avals)
             payload = bytes(exported.serialize())
         except Exception:
             self._count("store_failures")
@@ -148,6 +154,8 @@ class DiskTier:
             "sha256": hashlib.sha256(payload).hexdigest(),
             "nbytes": len(payload),
         }
+        if tiles:
+            header["tiles"] = autotune.to_wire(tiles)
         if self._mangle is not None:     # injected corruption (post-checksum)
             payload = self._mangle(payload)
         path = self.path_for(key)
@@ -272,6 +280,9 @@ class DiskTier:
         except Exception:
             self._quarantine(path)
             return None
+        # re-seed the tile memo with the choices this entry baked in, so
+        # a warm restart never re-runs the autotune search
+        autotune.seed_wire(header.get("tiles"))
         try:
             os.utime(path)              # LRU recency for the byte budget
         except OSError:

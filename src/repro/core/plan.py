@@ -219,6 +219,18 @@ class SuitePlan:
                        for b in self.buckets)
         return 1.0 - real / max(1, launched)
 
+    def pad_waste_for(self, placements) -> float:
+        """``pad_waste`` under a per-bucket placement list (the
+        ``mesh="auto"`` resolution) — each bucket pads to its own
+        placement's shard multiples; ``None`` entries are unsharded."""
+        real = sum(p.count * p.index_len for p in self.patterns)
+        launched = 0
+        for b, pl in zip(self.buckets, placements):
+            bs, ls = pl.grid if pl is not None else (1, 1)
+            launched += (pad_lanes(b.spec.idx_len, ls)
+                         * pad_batch(len(b.members), bs))
+        return 1.0 - real / max(1, launched)
+
 
 # ---------------------------------------------------------------------------
 # Executor cache
@@ -630,6 +642,51 @@ def _build_executable(backend: str, kind: str, mode: str) -> Callable:
     return jax.jit(_raw_batched_fn(backend, kind, mode))
 
 
+def _lane_body(kind: str, mode: str, lane_axis: str) -> Callable:
+    """Per-device body of a lane-sharded pallas launch (DESIGN.md §16).
+
+    Runs the batch-native Pallas kernel on the LOCAL lane shard — so
+    every device executes the real kernel instead of falling back around
+    an opaque ``pallas_call`` — and combines across the lane axis:
+
+      * gather: no combine; each shard produces its own output lanes.
+      * scatter-add: shards hold disjoint lanes of the same pattern, so
+        partial sums ``psum`` into the full result (floating-point adds
+        reassociate across the shard boundary — add mode's documented
+        ~1-ulp tolerance).
+      * scatter-store: the host keep mask deduped writes BEFORE the lane
+        split, so globally at most one shard writes each row.  The store
+        kernel's ``with_covered`` output says which rows this shard
+        wrote; psum of disjoint contributions is an exact select, and
+        uncovered rows keep ``dst`` — bit-identical to the single-device
+        launch.
+
+    The signature mirrors ``_raw_batched_fn`` exactly, so the lane path
+    launches with the same operand list as every other placement.
+    """
+    from repro.kernels.gather_rows import ops as gather_ops
+    from repro.kernels.scatter_rows import ops as scatter_ops
+
+    if kind == "gather":
+        def fn(src_b, idx_b):
+            return gather_ops.gather_rows_batched(src_b, idx_b)
+    elif mode == "add":
+        def fn(dst_b, idx_b, vals_b, keep_b):
+            del keep_b                       # add mode never dedups
+            part = scatter_ops.scatter_add_rows_batched(
+                idx_b, vals_b, dst_b.shape[1])
+            return dst_b + jax.lax.psum(part, lane_axis)
+    else:
+        def fn(dst_b, idx_b, vals_b, keep_b):
+            safe = jnp.where(keep_b, idx_b, jnp.iinfo(jnp.int32).max)
+            out_l, cov_l = scatter_ops.scatter_store_rows_batched(
+                jnp.zeros_like(dst_b), safe, vals_b, with_covered=True)
+            covered = jax.lax.psum(cov_l, lane_axis)
+            return jnp.where(covered[..., None] > 0,
+                             jax.lax.psum(out_l, lane_axis), dst_b)
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Placement: the 2-D (pattern-batch x lane) distribution layer
 # ---------------------------------------------------------------------------
@@ -741,8 +798,31 @@ class Placement:
         return in_sh, out_sh
 
     def build(self, backend: str, kind: str, mode: str) -> Callable:
-        """Jit the batched bucket op with this placement's shardings."""
+        """Jit the batched bucket op with this placement's shardings.
+
+        A pallas launch with a non-degenerate lane axis routes through
+        ``compat.shard_map_unchecked`` (DESIGN.md §16): GSPMD has no
+        partitioning rule for ``pallas_call``, so the GSPMD jit path
+        would all-gather the lane shards and run the kernel replicated —
+        the manual shard_map body instead runs the kernel on each
+        device's lane shard and combines explicitly
+        (``_lane_body``).  Every other placement keeps the plain GSPMD
+        jit (XLA partitions its ops natively; batch-only pallas shards
+        cleanly along the grid's leading dim).
+        """
         in_sh, out_sh = self.shardings(kind)
+        if (backend == "pallas" and self.lane_axis is not None
+                and self.lane_shards > 1):
+            from repro.runtime.sharding import gs_specs
+
+            from . import compat
+            in_specs, out_spec = gs_specs(kind, batched=True,
+                                          batch_axis=self.batch_axis,
+                                          lane_axis=self.lane_axis)
+            body = compat.shard_map_unchecked(
+                _lane_body(kind, mode, self.lane_axis), mesh=self.mesh,
+                in_specs=tuple(in_specs), out_specs=out_spec)
+            return jax.jit(body, in_shardings=in_sh, out_shardings=out_sh)
         return jax.jit(_raw_batched_fn(backend, kind, mode),
                        in_shardings=in_sh, out_shardings=out_sh)
 
@@ -785,6 +865,52 @@ def as_placement(mesh, mesh_axis: str = "data") -> Placement | None:
     return Placement.create(shape, batch_axis=mesh_axis)
 
 
+def auto_placements(plan: SuitePlan, mesh: str, *, mesh_axis: str = "data",
+                    backend: str = "xla", dtype=None, row_width: int = 1):
+    """Resolve ``mesh="auto"``/``"auto-suite"`` against the cost model.
+
+    ``"auto"`` (the default auto mode) picks a placement PER BUCKET:
+    each bucket's members form a single-bucket sub-plan (they re-bucket
+    to the identical spec) and ``analysis.cost.select_shape`` scores the
+    candidate shapes on that sub-plan alone, so a lane-heavy bucket can
+    take a lane split while a member-heavy sibling in the same suite
+    shards its batch dim.  Returns a per-bucket list for ``make_work``.
+
+    ``"auto-suite"`` is the pre-PR-10 escape hatch: ONE shape for the
+    whole suite (``analysis.cost.auto_placement``), returned as a single
+    Placement (or None for a 1x1 choice).
+
+    Both paths hand the cost model the launch backend: lane-sharded
+    pallas placements are not charged the GSPMD all-gather replication
+    bytes the shard_map path no longer moves (analysis/cost.key_cost).
+    Equal shapes share one Placement object, and because the canonical
+    placement string is the only placement input to ``ExecKey``, a
+    bucket auto-placed at shape (b, l) hits exactly the warm cache
+    entries a hand-placed ``mesh=(b, l)`` run of that bucket built.
+    """
+    from repro.analysis import cost as _cost
+    if mesh == "auto-suite":
+        shape = _cost.auto_placement(plan, dtype=dtype, row_width=row_width,
+                                     backend=backend)
+        return as_placement(shape, mesh_axis)
+    if mesh != "auto":
+        raise ValueError(f"unknown auto mesh mode {mesh!r}; "
+                         f"expected 'auto' or 'auto-suite'")
+    memo: dict = {}
+    out = []
+    for bucket in plan.buckets:
+        sub = SuitePlan(
+            patterns=tuple(plan.patterns[p] for p in bucket.members),
+            buckets=(Bucket(spec=bucket.spec,
+                            members=tuple(range(len(bucket.members)))),))
+        shape = _cost.auto_placement(sub, dtype=dtype, row_width=row_width,
+                                     backend=backend)
+        if shape not in memo:
+            memo[shape] = as_placement(shape, mesh_axis)
+        out.append(memo[shape])
+    return out
+
+
 def placement_grid(placement: str) -> tuple[int, int, int]:
     """Parse a canonical ``ExecKey.placement`` string back to
     ``(batch_shards, lane_shards, n_devices)``; ``""`` is ``(1, 1, 1)``.
@@ -810,6 +936,35 @@ def placement_grid(placement: str) -> tuple[int, int, int]:
         return (int(b_part.split("=", 1)[1]),
                 int(l_part.split("=", 1)[1]), ndev)
     return (int(body.split("=", 1)[1]), 1, ndev)
+
+
+def placement_axes(placement: str) -> dict[str, int]:
+    """Parse a canonical ``ExecKey.placement`` string to its named
+    mesh axes, e.g. ``"data=4xlane=2/8dev"`` -> ``{"data": 4,
+    "lane": 2}``; ``""`` -> ``{}``.
+
+    The named companion of ``placement_grid``: ``Placement.create``
+    builds its Mesh with exactly the non-degenerate axes, so this is
+    what a lowered shard_map's ``mesh.shape`` must equal — the
+    sharding-spec-consistency rule compares the two (DESIGN.md §16).
+    """
+    if not placement:
+        return {}
+    body, sep, dev = placement.rpartition("/")
+    if not sep or not dev.endswith("dev"):
+        raise ValueError(f"not a canonical placement string: {placement!r}")
+    if body.startswith("lane:"):
+        body = body[len("lane:"):]
+        parts = [body]
+    elif "x" in body:
+        parts = body.split("x", 1)
+    else:
+        parts = [body]
+    out = {}
+    for part in parts:
+        name, _, size = part.partition("=")
+        out[name] = int(size)
+    return out
 
 
 def bucket_key(backend: str, spec: BucketSpec, dtype, row_width: int,
@@ -891,22 +1046,35 @@ def enumerate_executables(plan: SuitePlan, *, backend: str = "xla",
     operands at the key's exact batch (``pad_batch`` of the member
     count — ``best_batch`` polymorphic serving can only substitute a
     *larger* warm batch of the same family, which changes no invariant a
-    rule checks).  ``placement`` accepts any ``as_placement`` form.
+    rule checks).  ``placement`` accepts any ``as_placement`` form, the
+    auto strings (``"auto"``/``"auto-suite"``, resolved through
+    ``auto_placements`` exactly as ``run_plan`` resolves them), or a
+    per-bucket placement list matching ``plan.buckets`` in order.
     """
     if backend not in B.BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
     if mode not in SCATTER_MODES:
         raise ValueError(f"unknown mode {mode!r}; "
                          f"expected one of {SCATTER_MODES}")
-    placement = as_placement(placement, mesh_axis)
-    _, l_shards = placement.grid if placement else (1, 1)
+    if isinstance(placement, str):
+        placement = auto_placements(plan, placement, mesh_axis=mesh_axis,
+                                    backend=backend, dtype=dtype,
+                                    row_width=row_width)
+    if isinstance(placement, list):
+        if len(placement) != len(plan.buckets):
+            raise ValueError(f"{len(placement)} placements for "
+                             f"{len(plan.buckets)} buckets")
+        placements = [as_placement(p, mesh_axis) for p in placement]
+    else:
+        placements = [as_placement(placement, mesh_axis)] * len(plan.buckets)
     out = []
-    for bucket in plan.buckets:
+    for bucket, pl_b in zip(plan.buckets, placements):
         spec = bucket.spec
         key = bucket_key(backend, spec, dtype, row_width, mode,
-                         len(bucket.members), placement)
+                         len(bucket.members), pl_b)
+        _, l_shards = pl_b.grid if pl_b else (1, 1)
         lanes = pad_lanes(spec.idx_len, l_shards)
-        out.append((key, bucket_builder(backend, spec, key.mode, placement),
+        out.append((key, bucket_builder(backend, spec, key.mode, pl_b),
                     bucket_avals(spec, key.batch, lanes, dtype, row_width)))
     return out
 
@@ -1148,12 +1316,16 @@ class LaunchResult:
 
 def make_work(plan: SuitePlan, *, backend: str = "xla", dtype=None,
               row_width: int = 1, runs: int = 10, mode: str = "store",
-              seed: int = 0, placement: Placement | None = None,
+              seed: int = 0, placement=None,
               digest: bool = False) -> list[BucketWork]:
     """Decompose a suite plan into one ``BucketWork`` per bucket.
 
     Validates the options once (the same checks ``run_plan`` applies), so
-    a work unit is always launchable as-is.
+    a work unit is always launchable as-is.  ``placement`` is one
+    ``Placement | None`` for every bucket, or a per-bucket sequence of
+    them (``auto_placements``'s per-bucket mode) matching
+    ``plan.buckets`` in order — each work unit carries its own placement
+    either way, so nothing downstream changes.
     """
     if backend not in B.BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
@@ -1161,6 +1333,13 @@ def make_work(plan: SuitePlan, *, backend: str = "xla", dtype=None,
         raise ValueError(f"unknown mode {mode!r}; "
                          f"expected one of {SCATTER_MODES}")
     dtype = jnp.dtype(dtype or jnp.float32)
+    if isinstance(placement, (list, tuple)):
+        if len(placement) != len(plan.buckets):
+            raise ValueError(f"{len(placement)} placements for "
+                             f"{len(plan.buckets)} buckets")
+        placements = list(placement)
+    else:
+        placements = [placement] * len(plan.buckets)
     return [
         BucketWork(spec=bucket.spec,
                    patterns=tuple(plan.patterns[pos]
@@ -1168,8 +1347,8 @@ def make_work(plan: SuitePlan, *, backend: str = "xla", dtype=None,
                    positions=bucket.members, backend=backend,
                    dtype=dtype.name, row_width=row_width, mode=mode,
                    runs=runs, seed=seed, digest=digest,
-                   placement=placement)
-        for bucket in plan.buckets
+                   placement=placements[i])
+        for i, bucket in enumerate(plan.buckets)
     ]
 
 
@@ -1329,9 +1508,21 @@ def run_plan(plan: SuitePlan, *, backend: str = "xla", dtype=None,
     never reach real rows — so equal digests across runs/processes mean
     bit-identical results; the serving layer uses this as its warm-repeat
     identity proof.
+
+    ``mesh="auto"`` places each bucket on the shape the §15 cost model
+    prefers for it (``auto_placements`` per-bucket mode);
+    ``mesh="auto-suite"`` keeps the old one-shape-per-suite choice.
     """
     cache = cache if cache is not None else default_cache()
-    placement = as_placement(mesh, mesh_axis)
+    if isinstance(mesh, str):
+        placement = auto_placements(plan, mesh, mesh_axis=mesh_axis,
+                                    backend=backend, dtype=dtype,
+                                    row_width=row_width)
+    elif isinstance(mesh, list):
+        # explicit per-bucket placements — the hand-placed twin of "auto"
+        placement = [as_placement(m, mesh_axis) for m in mesh]
+    else:
+        placement = as_placement(mesh, mesh_axis)
     works = make_work(plan, backend=backend, dtype=dtype,
                       row_width=row_width, runs=runs, mode=mode, seed=seed,
                       placement=placement, digest=digest)

@@ -17,7 +17,9 @@ compile -> execute design and the padding/scratch-row semantics.
 ``mesh=`` places every bucket launch on a 2-D (pattern-batch x lane)
 device mesh (plan.Placement, DESIGN.md §11) for multi-device suite
 runs; it accepts an int N (batch-only), a ``(b, l)`` tuple, a raw Mesh
-(batch-only over ``mesh_axis``), or a ``Placement``.
+(batch-only over ``mesh_axis``), a ``Placement``, or the strings
+``"auto"`` (per-bucket cost-model placement, DESIGN.md §15/§16) and
+``"auto-suite"`` (one cost-model shape for the whole suite).
 ``mode=`` selects scatter write semantics ("store" last-write-wins —
 the paper's default — or "add" accumulation) on every path.
 """
@@ -183,17 +185,23 @@ def run_suite(patterns: list[Pattern], *, backend: str = "xla",
     if mode not in SCATTER_MODES:           # mirror the metric validation
         raise ValueError(f"unknown mode {mode!r}; "
                          f"expected one of {SCATTER_MODES}")
-    # mesh="auto": resolve through the §15 cost model first — the
-    # selection names a plain (batch, lane) shape, so the ExecKeys (and
-    # digests) are exactly what the same explicit mesh would produce
-    if mesh == "auto":
-        from repro.analysis.cost import auto_placement
-        mesh = auto_placement(patterns, dtype=dtype,
-                              row_width=row_width)
-    # normalize every accepted mesh= form (int, (b, l) tuple, Mesh,
-    # Placement) up front so shape/device-count errors surface here, with
-    # this function's signature in the traceback, not mid-plan
-    mesh = as_placement(mesh, mesh_axis)
+    # mesh="auto" / "auto-suite": deferred to run_plan, which resolves
+    # them through the §15 cost model (per-bucket / one-shape-per-suite
+    # respectively).  The selections name plain (batch, lane) shapes, so
+    # the ExecKeys (and digests) are exactly what the same explicit
+    # meshes would produce.  Every other accepted mesh= form (int,
+    # (b, l) tuple, Mesh, Placement) is normalized up front so
+    # shape/device-count errors surface here, with this function's
+    # signature in the traceback, not mid-plan.
+    if isinstance(mesh, str):
+        if mesh not in ("auto", "auto-suite"):
+            raise ValueError(f"unknown mesh string {mesh!r}; "
+                             f"expected 'auto' or 'auto-suite'")
+    elif isinstance(mesh, list):
+        # explicit per-bucket placements (what "auto" resolves to)
+        mesh = [as_placement(m, mesh_axis) for m in mesh]
+    else:
+        mesh = as_placement(mesh, mesh_axis)
     if mesh is not None and not batch:
         raise ValueError("mesh execution requires the batched planner "
                          "(batch=True)")

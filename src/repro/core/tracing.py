@@ -286,6 +286,43 @@ def find_primitive_eqns(jaxpr, names, *, max_depth: int = MAX_WALK_DEPTH
     return hits
 
 
+def shard_map_meshes(jaxpr, *, max_depth: int = MAX_WALK_DEPTH
+                     ) -> list[dict]:
+    """Axis-name -> size mapping of every ``shard_map`` equation.
+
+    The manual-sharding census the lane-sharded pallas lint reads
+    (DESIGN.md §16): each entry is one shard_map's mesh shape (e.g.
+    ``{"data": 4, "lane": 2}``), in walk order.  Empty list = no
+    shard_map anywhere in the jaxpr.
+    """
+    out = []
+    for eqn, _ in iter_eqns(jaxpr, max_depth=max_depth):
+        if eqn.primitive.name == "shard_map":
+            shape = getattr(eqn.params.get("mesh"), "shape", None)
+            out.append(dict(shape) if shape is not None else {})
+    return out
+
+
+def shard_map_pallas_calls(jaxpr, *, max_depth: int = MAX_WALK_DEPTH
+                           ) -> int:
+    """Count ``pallas_call`` equations INSIDE shard_map bodies.
+
+    Distinguishes the manual lane-sharded launch path (kernel inside the
+    shard_map body: one launch per device) from a GSPMD-routed
+    pallas_call outside any shard_map, which the lane-sharded lint
+    rules must flag on lane-sharded placements.
+    """
+    n = 0
+    for eqn, _ in iter_eqns(jaxpr, max_depth=max_depth):
+        if eqn.primitive.name != "shard_map":
+            continue
+        body = eqn.params.get("jaxpr")
+        if body is not None and hasattr(body, "eqns"):
+            n += count_primitives(body, max_depth=max_depth
+                                  ).get("pallas_call", 0)
+    return n
+
+
 def find_dtype_eqns(jaxpr, dtype_name: str, *,
                     max_depth: int = MAX_WALK_DEPTH) -> list[str]:
     """Equations touching an aval of ``dtype_name`` (e.g. ``float64``)."""

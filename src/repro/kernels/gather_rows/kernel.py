@@ -3,13 +3,13 @@
 Two regimes, mirroring the paper's cache-resident vs memory-resident split
 (DESIGN.md §2):
 
-  * ``dma``  — the table stays in HBM; the index buffer is scalar-prefetched
-    into SMEM and drives the input ``BlockSpec.index_map``, so the *DMA
-    engine itself* performs the gather.  Each grid step covers ``block_i``
-    rows (multi-row blocking): the table operand is bound ``block_i``
-    times, each binding's index_map selecting one gathered row, so the
-    pipeline keeps ``block_i`` row DMAs in flight per step instead of one
-    — the TPU analogue of the HW prefetcher's outstanding-miss depth
+  * ``dma``  — the table stays in HBM (``pltpu.ANY``); the index buffer is
+    scalar-prefetched into SMEM and the kernel issues its own row DMAs
+    against a two-slot VMEM scratch: while row ``r``'s copy drains into
+    the output tile, row ``r+1``'s DMA is already in flight (explicit
+    double buffering, DESIGN.md §16).  Each grid step covers ``block_i``
+    rows, so the pipeline keeps one fetch ahead across the whole block —
+    the TPU analogue of the HW prefetcher's outstanding-miss depth
     studied in paper Fig 4.
   * ``vmem`` — small tables are staged whole into VMEM and gathered with an
     in-register ``take`` over ``block_n`` rows per step (the "cache-resident"
@@ -67,20 +67,46 @@ def gather_rows_vmem(table: jax.Array, idx: jax.Array, *,
     )(idx, table)
 
 
-def _copy_rows_kernel(block_i: int, idx_ref, *refs):
-    # The gather already happened in the DMA (each table binding's index_map
-    # read idx_ref); the body reassembles block_i row-slices into the tile.
-    del idx_ref
-    row_blks, out_blk = refs[:block_i], refs[block_i]
-    for r, blk in enumerate(row_blks):
-        out_blk[0, r, :] = blk[0, 0, :]
+def _dma_rows_kernel(block_i: int, block_d: int,
+                     idx_ref, table_ref, out_blk, scratch, sems):
+    # Explicit double buffer: two scratch slots, two DMA semaphores.  Row
+    # r+1's copy is started before row r's is consumed, so the writeback
+    # of each row overlaps the fetch of the next (prefetch depth 1 — the
+    # slot count bounds it, not the block size).
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    def dma(r, slot):
+        row = idx_ref[b, i * block_i + r]
+        return pltpu.make_async_copy(
+            table_ref.at[b, row, pl.ds(j * block_d, block_d)],
+            scratch.at[slot], sems.at[slot])
+
+    dma(0, 0).start()                                      # warm-up fetch
+
+    def body(r, carry):
+        slot = jax.lax.rem(r, 2)
+
+        @pl.when(r + 1 < block_i)
+        def _prefetch():
+            dma(r + 1, jax.lax.rem(r + 1, 2)).start()
+
+        dma(r, slot).wait()
+        out_blk[0, r, :] = scratch[slot]
+        return carry
+
+    jax.lax.fori_loop(0, block_i, body, 0)
 
 
 def gather_rows_dma(table: jax.Array, idx: jax.Array, *,
                     block_d: int, block_i: int, interpret: bool) -> jax.Array:
     """HBM-resident gather: grid (B, N/block_i, D/block_d), block_i rows/step.
 
-    Caller guarantees n % block_i == 0 and d % block_d == 0 (ops.py pads).
+    The table never enters the automatic pipeline — it is bound in
+    ``pltpu.ANY`` and the kernel gathers rows itself with double-buffered
+    async copies.  Caller guarantees n % block_i == 0 and
+    d % block_d == 0 (ops.py pads).
     """
     bsz, n = idx.shape
     _, v, d = table.shape
@@ -88,21 +114,20 @@ def gather_rows_dma(table: jax.Array, idx: jax.Array, *,
     assert n % block_i == 0, (n, block_i)
     grid = (bsz, n // block_i, d // block_d)
 
-    def row_spec(r):
-        return pl.BlockSpec(
-            (1, 1, block_d),
-            lambda b, i, j, idx_ref, r=r: (b, idx_ref[b, i * block_i + r], j))
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[row_spec(r) for r in range(block_i)],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec((1, block_i, block_d),
                                lambda b, i, j, idx_ref: (b, i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_d), table.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
     )
     return pl.pallas_call(
-        functools.partial(_copy_rows_kernel, block_i),
+        functools.partial(_dma_rows_kernel, block_i, block_d),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, n, d), table.dtype),
         interpret=interpret,
-    )(idx, *([table] * block_i))
+    )(idx, table)

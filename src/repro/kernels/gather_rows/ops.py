@@ -2,8 +2,11 @@
 
 Picks the VMEM-resident regime for small tables and the DMA regime
 otherwise, pads ragged shapes, and defaults to interpret mode off-TPU.
-``gather_rows_batched`` runs a whole pattern batch (a planner bucket) as
-one kernel launch (DESIGN.md §2.2); ``gather_rows`` is its B=1 case.
+Block sizes default to the deterministic per-geometry autotuner
+(``kernels.autotune``); passing any block explicitly bypasses the search
+for that block.  ``gather_rows_batched`` runs a whole pattern batch (a
+planner bucket) as one kernel launch (DESIGN.md §2.2); ``gather_rows``
+is its B=1 case.
 """
 from __future__ import annotations
 
@@ -13,17 +16,14 @@ import jax
 import jax.numpy as jnp
 
 from . import kernel
+from .. import autotune
 
 # VMEM on v5e is ~128 MiB/core but the pipeline needs headroom; stage tables
 # whole only when they take at most this many bytes.
 _VMEM_TABLE_BYTES = 4 * 1024 * 1024
-# vmem regime: rows gathered per grid step.  64 amortizes the per-step
-# overhead over a full (8, 128)-tile-aligned output block (the old default
-# of 8 left 8x more grid steps on the table for nothing).
+# legacy fixed tiles — served when the autotuner is disabled()
+# (autotune.LEGACY mirrors these; a drift test pins them equal)
 _DEFAULT_BLOCK_N = 64
-# dma regime: row DMAs in flight per grid step (multi-row blocking); 8
-# concurrent row fetches keeps the DMA engine busy without exhausting the
-# double-buffered VMEM block budget.
 _DEFAULT_BLOCK_I = 8
 
 
@@ -74,36 +74,50 @@ def _gather_rows_batched(table, idx, mode: str, block_n: int, block_d: int,
 
 def gather_rows_batched(table: jax.Array, idx: jax.Array, *,
                         mode: str = "auto",
-                        block_n: int = _DEFAULT_BLOCK_N,
+                        block_n: int | None = None,
                         block_d: int | None = None,
-                        block_i: int = _DEFAULT_BLOCK_I,
+                        block_i: int | None = None,
                         interpret: bool | None = None) -> jax.Array:
     """Batched gather: (B, V, D) tables, (B, N) idx -> (B, N, D).
 
     One kernel launch for the whole pattern batch (a planner bucket), with
     the index buffers scalar-prefetched once — not a vmap of per-pattern
     launches.  The regime choice sizes VMEM per b-step, so it uses one
-    pattern's table bytes, not the whole stack's.
+    pattern's table bytes, not the whole stack's.  Blocks left ``None``
+    come from the autotuner, keyed on the geometry the kernel actually
+    sees (the local shard under a lane-sharded launch) — a pure function
+    of shapes, so one jit signature per geometry and ``misses`` stays an
+    exact compile count upstream.
     """
     if table.ndim != 3 or idx.ndim != 2 or table.shape[0] != idx.shape[0]:
         raise ValueError(f"expected (B,V,D) table and (B,N) idx, got "
                          f"{table.shape} / {idx.shape}")
     interp = _should_interpret(interpret)
+    bsz, n = idx.shape
+    _, v, d = table.shape
     if mode == "auto":
-        per_pattern_bytes = (table.shape[1] * table.shape[2]
-                             * table.dtype.itemsize)
+        per_pattern_bytes = v * d * table.dtype.itemsize
         mode = "vmem" if per_pattern_bytes <= _VMEM_TABLE_BYTES else "dma"
-    if block_d is None:
-        block_d = _pick_block_d(table.shape[2])
-    block_n = min(block_n, max(1, idx.shape[1]))
-    block_i = min(block_i, max(1, idx.shape[1]))
+    if block_n is None or block_i is None or block_d is None:
+        choice = autotune.choose(autotune.TileKey(
+            op="gather_vmem" if mode == "vmem" else "gather_dma",
+            batch=bsz, lanes=n, rows=v, width=d, dtype=table.dtype.name,
+            platform="interpret" if interp else "tpu"))
+        if block_n is None:
+            block_n = choice.block_n or _DEFAULT_BLOCK_N
+        if block_i is None:
+            block_i = choice.block_i or _DEFAULT_BLOCK_I
+        if block_d is None:
+            block_d = choice.block_d or _pick_block_d(d)
+    block_n = min(block_n, max(1, n))
+    block_i = min(block_i, max(1, n))
     return _gather_rows_batched(table, idx, mode, block_n, block_d, block_i,
                                 interp)
 
 
 def gather_rows(table: jax.Array, idx: jax.Array, *, mode: str = "auto",
-                block_n: int = _DEFAULT_BLOCK_N, block_d: int | None = None,
-                block_i: int = _DEFAULT_BLOCK_I,
+                block_n: int | None = None, block_d: int | None = None,
+                block_i: int | None = None,
                 interpret: bool | None = None) -> jax.Array:
     """Gather rows of ``table`` (V, D) at positions ``idx`` (N,) -> (N, D).
 

@@ -13,6 +13,12 @@ dim), so the accumulator stays resident in VMEM across the whole sweep —
 the analogue of keeping the scatter target cache-resident in the paper's
 CPU backend.  Duplicate indices are handled by construction (they just add).
 
+The payload rows never enter the automatic pipeline: ``vals`` is bound in
+``pltpu.ANY`` and each kernel stages its (block_n, D) chunk into a
+two-slot VMEM scratch with explicit async copies, starting chunk ``c+1``'s
+fetch before contracting chunk ``c`` (double buffering, DESIGN.md §16 —
+the same overlap the gather DMA kernel uses for its row copies).
+
 Store mode is a SINGLE PASS over the same grid (``_scatter_store_kernel``):
 the host-precomputed last-write-wins mask (backends.keep_last_mask,
 DESIGN.md §2.1) routes dropped lanes out of range before launch, so every
@@ -20,6 +26,9 @@ surviving lane is its row's unique write — the kernel initializes each
 output tile from ``dst`` and overwrites exactly the covered rows with the
 one-hot contraction (exact: one nonzero term per row).  This replaces the
 old masked-add + coverage-count + blend *triple* launch with one kernel.
+With ``with_cov`` the same single launch also emits a per-row int32
+coverage map — the lane-sharded combine (core/plan._lane_sharded_fn)
+psums it to decide which rows any shard wrote.
 
 All kernels are batch-NATIVE (DESIGN.md §2.2): the grid leads with the
 pattern-batch dim and the whole (B, N) index buffer is scalar-prefetched
@@ -37,22 +46,37 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _chunk_dma(vals_ref, scratch, sems, b, c, block_n):
+    """Async copy of chunk ``c``'s (block_n, D) payload rows into a slot."""
+    return pltpu.make_async_copy(
+        vals_ref.at[b, pl.ds(c * block_n, block_n), :],
+        scratch.at[jax.lax.rem(c, 2)], sems.at[jax.lax.rem(c, 2)])
+
+
 def _scatter_add_kernel(block_v: int, block_n: int,
-                        idx_ref, vals_blk, out_blk):
+                        idx_ref, vals_ref, out_blk, scratch, sems):
     b = pl.program_id(0)
     vb = pl.program_id(1)
     c = pl.program_id(2)
+    nc = pl.num_programs(2)
 
     @pl.when(c == 0)
     def _init():
         out_blk[...] = jnp.zeros_like(out_blk)
+        _chunk_dma(vals_ref, scratch, sems, b, 0, block_n).start()
 
+    @pl.when(c + 1 < nc)
+    def _prefetch():
+        _chunk_dma(vals_ref, scratch, sems, b, c + 1, block_n).start()
+
+    _chunk_dma(vals_ref, scratch, sems, b, c, block_n).wait()
+    slot = jax.lax.rem(c, 2)
     chunk = idx_ref[b, pl.ds(c * block_n, block_n)]        # (block_n,)
     local = chunk - vb * block_v                           # relative to tile
     rows = jax.lax.broadcasted_iota(jnp.int32, (block_v, block_n), 0)
-    onehot = (rows == local[None, :]).astype(vals_blk.dtype)
+    onehot = (rows == local[None, :]).astype(out_blk.dtype)
     out_blk[...] += jax.lax.dot(
-        onehot, vals_blk[0], precision=jax.lax.Precision.DEFAULT,
+        onehot, scratch[slot], precision=jax.lax.Precision.DEFAULT,
         preferred_element_type=out_blk.dtype)[None]
 
 
@@ -71,11 +95,13 @@ def scatter_add_rows_kernel(idx: jax.Array, vals: jax.Array,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_n, d), lambda b, vb, c, idx_ref: (b, c, 0)),
-        ],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec((1, block_v, d),
                                lambda b, vb, c, idx_ref: (b, vb, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_n, d), vals.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
     )
     return pl.pallas_call(
         functools.partial(_scatter_add_kernel, block_v, block_n),
@@ -85,16 +111,30 @@ def scatter_add_rows_kernel(idx: jax.Array, vals: jax.Array,
     )(idx, vals)
 
 
-def _scatter_store_kernel(block_v: int, block_n: int,
-                          idx_ref, vals_blk, dst_blk, out_blk):
+def _scatter_store_kernel(block_v: int, block_n: int, with_cov: bool,
+                          idx_ref, vals_ref, dst_blk, *rest):
+    if with_cov:
+        out_blk, cov_blk, scratch, sems = rest
+    else:
+        out_blk, scratch, sems = rest
     b = pl.program_id(0)
     vb = pl.program_id(1)
     c = pl.program_id(2)
+    nc = pl.num_programs(2)
 
     @pl.when(c == 0)
     def _init():
         out_blk[...] = dst_blk[...]
+        if with_cov:
+            cov_blk[...] = jnp.zeros_like(cov_blk)
+        _chunk_dma(vals_ref, scratch, sems, b, 0, block_n).start()
 
+    @pl.when(c + 1 < nc)
+    def _prefetch():
+        _chunk_dma(vals_ref, scratch, sems, b, c + 1, block_n).start()
+
+    _chunk_dma(vals_ref, scratch, sems, b, c, block_n).wait()
+    slot = jax.lax.rem(c, 2)
     chunk = idx_ref[b, pl.ds(c * block_n, block_n)]
     local = chunk - vb * block_v
     rows = jax.lax.broadcasted_iota(jnp.int32, (block_v, block_n), 0)
@@ -103,43 +143,61 @@ def _scatter_store_kernel(block_v: int, block_n: int,
     # duplicates out of range), so the contraction has one nonzero term per
     # covered row — an exact select, not a sum
     written = jax.lax.dot(
-        hit.astype(vals_blk.dtype), vals_blk[0],
+        hit.astype(out_blk.dtype), scratch[slot],
         precision=jax.lax.Precision.DEFAULT,
         preferred_element_type=out_blk.dtype)
     covered = hit.max(axis=1)                              # (block_v,) bool
     out_blk[...] = jnp.where(covered[None, :, None], written[None],
                              out_blk[...])
+    if with_cov:
+        cov_blk[...] = jnp.maximum(cov_blk[...],
+                                   covered.astype(jnp.int32)[None])
 
 
 def scatter_store_rows_kernel(idx: jax.Array, vals: jax.Array,
                               dst: jax.Array, *, block_v: int, block_n: int,
-                              interpret: bool) -> jax.Array:
+                              with_cov: bool = False, interpret: bool):
     """Last-write-wins store of ``vals`` (B, N, D) into ``dst`` (B, V_pad, D).
 
     One single-pass launch for the whole pattern batch.  Caller
     guarantees: N % block_n == 0, V_pad % block_v == 0, dropped / padded
     entries of ``idx`` point outside [0, V_pad), and each in-range index
     value occurs at most once per batch row (the host keep mask's
-    contract).
+    contract).  With ``with_cov`` the SAME launch also returns a
+    (B, V_pad) int32 coverage map (1 where this call wrote the row) —
+    still exactly one ``pallas_call``.
     """
     bsz, n, d = vals.shape
     v_padded = dst.shape[1]
     grid = (bsz, v_padded // block_v, n // block_n)
 
+    out_specs = pl.BlockSpec((1, block_v, d),
+                             lambda b, vb, c, idx_ref: (b, vb, 0))
+    out_shape = jax.ShapeDtypeStruct((bsz, v_padded, d), dst.dtype)
+    if with_cov:
+        out_specs = (out_specs,
+                     pl.BlockSpec((1, block_v),
+                                  lambda b, vb, c, idx_ref: (b, vb)))
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((bsz, v_padded), jnp.int32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_n, d), lambda b, vb, c, idx_ref: (b, c, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
             pl.BlockSpec((1, block_v, d),
                          lambda b, vb, c, idx_ref: (b, vb, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_v, d),
-                               lambda b, vb, c, idx_ref: (b, vb, 0)),
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((2, block_n, d), vals.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
     )
     return pl.pallas_call(
-        functools.partial(_scatter_store_kernel, block_v, block_n),
+        functools.partial(_scatter_store_kernel, block_v, block_n, with_cov),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((bsz, v_padded, d), dst.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(idx, vals, dst)

@@ -6,7 +6,9 @@ index buffer scalar-prefetched once (DESIGN.md §2.2); the per-pattern
 entry points are the B=1 case of the same kernels.  Store mode expects
 its index buffer pre-deduped on the host (dropped lanes routed out of
 range — backends.keep_last_mask), so the kernel is a single pass with no
-sort and no coverage-count launch.
+sort and no coverage-count launch.  Block sizes default to the
+deterministic per-geometry autotuner (``kernels.autotune``); passing a
+block explicitly bypasses the search.
 """
 from __future__ import annotations
 
@@ -16,7 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from . import kernel
+from .. import autotune
 
+# legacy fixed tiles — served when the autotuner is disabled()
+# (autotune.LEGACY mirrors these; a drift test pins them equal)
 _DEFAULT_BLOCK_V = 128
 _DEFAULT_BLOCK_N = 128
 
@@ -33,6 +38,22 @@ def _should_interpret(interpret: bool | None) -> bool:
 
 def _clip_blocks(v: int, n: int, block_v: int, block_n: int):
     return min(block_v, max(8, v)), min(block_n, max(8, n))
+
+
+def _pick_blocks(v: int, n: int, bsz: int, d: int, dtype,
+                 block_v: int | None, block_n: int | None,
+                 interpret: bool):
+    """Resolve block sizes: explicit args win, the rest are autotuned."""
+    if block_v is None or block_n is None:
+        choice = autotune.choose(autotune.TileKey(
+            op="scatter", batch=bsz, lanes=n, rows=v, width=d,
+            dtype=jnp.dtype(dtype).name,
+            platform="interpret" if interpret else "tpu"))
+        if block_v is None:
+            block_v = choice.block_v or _DEFAULT_BLOCK_V
+        if block_n is None:
+            block_n = choice.block_n or _DEFAULT_BLOCK_N
+    return _clip_blocks(v, n, block_v, block_n)
 
 
 def _pad_lanes(idx, vals, block_n: int):
@@ -66,8 +87,8 @@ def _scatter_add_batched(idx, vals, v: int, block_v: int, block_n: int,
 
 
 def scatter_add_rows_batched(idx: jax.Array, vals: jax.Array, v: int, *,
-                             block_v: int = _DEFAULT_BLOCK_V,
-                             block_n: int = _DEFAULT_BLOCK_N,
+                             block_v: int | None = None,
+                             block_n: int | None = None,
                              interpret: bool | None = None) -> jax.Array:
     """Batched scatter-add: idx (B, N), vals (B, N, D) -> (B, V, D).
 
@@ -76,14 +97,16 @@ def scatter_add_rows_batched(idx: jax.Array, vals: jax.Array, v: int, *,
     """
     if vals.ndim != 3 or idx.ndim != 2 or idx.shape != vals.shape[:2]:
         raise ValueError(f"bad shapes idx={idx.shape} vals={vals.shape}")
-    block_v, block_n = _clip_blocks(v, idx.shape[1], block_v, block_n)
-    return _scatter_add_batched(idx, vals, v, block_v, block_n,
-                                _should_interpret(interpret))
+    interp = _should_interpret(interpret)
+    bsz, n, d = vals.shape
+    block_v, block_n = _pick_blocks(v, n, bsz, d, vals.dtype,
+                                    block_v, block_n, interp)
+    return _scatter_add_batched(idx, vals, v, block_v, block_n, interp)
 
 
 def scatter_add_rows(idx: jax.Array, vals: jax.Array, v: int, *,
-                     block_v: int = _DEFAULT_BLOCK_V,
-                     block_n: int = _DEFAULT_BLOCK_N,
+                     block_v: int | None = None,
+                     block_n: int | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """Scatter-add ``vals`` (N, D) at row indices ``idx`` (N,) into (V, D).
 
@@ -101,9 +124,10 @@ def scatter_add_rows(idx: jax.Array, vals: jax.Array, v: int, *,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_v", "block_n", "interpret"))
+                   static_argnames=("block_v", "block_n", "with_covered",
+                                    "interpret"))
 def _scatter_store_batched(dst, idx, vals, block_v: int, block_n: int,
-                           interpret: bool):
+                           with_covered: bool, interpret: bool):
     bsz, _, d = vals.shape
     v = dst.shape[1]
     idx, vals = _pad_lanes(idx.astype(jnp.int32), vals, block_n)
@@ -113,35 +137,43 @@ def _scatter_store_batched(dst, idx, vals, block_v: int, block_n: int,
             [dst, jnp.zeros((bsz, pad_v, d), dst.dtype)], axis=1)
     out = kernel.scatter_store_rows_kernel(
         idx, vals, dst, block_v=block_v, block_n=block_n,
-        interpret=interpret)
+        with_cov=with_covered, interpret=interpret)
+    if with_covered:
+        out, cov = out
+        return out[:, :v], cov[:, :v]
     return out[:, :v]
 
 
 def scatter_store_rows_batched(dst: jax.Array, idx: jax.Array,
                                vals: jax.Array, *,
-                               block_v: int = _DEFAULT_BLOCK_V,
-                               block_n: int = _DEFAULT_BLOCK_N,
-                               interpret: bool | None = None) -> jax.Array:
+                               block_v: int | None = None,
+                               block_n: int | None = None,
+                               with_covered: bool = False,
+                               interpret: bool | None = None):
     """Batched store: dst (B, V, D), idx (B, N), vals (B, N, D) -> (B, V, D).
 
     One single-pass kernel launch for the whole pattern batch.  Contract:
     each in-range index value occurs at most once per batch row (the host
     keep mask already dropped duplicate writes by routing them out of
-    range); out-of-range indices are dropped.
+    range); out-of-range indices are dropped.  With ``with_covered`` the
+    same single launch also returns the (B, V) int32 coverage map (1
+    where this call wrote) — the lane-sharded combine's ballot.
     """
     if (vals.ndim != 3 or idx.ndim != 2 or dst.ndim != 3
             or idx.shape != vals.shape[:2] or dst.shape[2] != vals.shape[2]):
         raise ValueError(f"bad shapes dst={dst.shape} idx={idx.shape} "
                          f"vals={vals.shape}")
-    block_v, block_n = _clip_blocks(dst.shape[1], idx.shape[1],
-                                    block_v, block_n)
+    interp = _should_interpret(interpret)
+    bsz, n, d = vals.shape
+    block_v, block_n = _pick_blocks(dst.shape[1], n, bsz, d, dst.dtype,
+                                    block_v, block_n, interp)
     return _scatter_store_batched(dst, idx, vals, block_v, block_n,
-                                  _should_interpret(interpret))
+                                  with_covered, interp)
 
 
 def scatter_store_rows(dst: jax.Array, idx: jax.Array, vals: jax.Array, *,
-                       block_v: int = _DEFAULT_BLOCK_V,
-                       block_n: int = _DEFAULT_BLOCK_N,
+                       block_v: int | None = None,
+                       block_n: int | None = None,
                        interpret: bool | None = None) -> jax.Array:
     """Store ``vals`` (N, D) into ``dst`` (V, D) at rows ``idx`` (N,).
 

@@ -277,9 +277,13 @@ def main(argv=None) -> None:
     ap.add_argument("-b", "--backend", default=None)
     ap.add_argument("-r", "--runs", type=int, default=None)
     ap.add_argument("--mode", default=None, help="scatter mode store|add")
-    ap.add_argument("--mesh", type=parse_mesh, default=None, metavar="N|BxL",
-                    help="shard over N devices (batch-only) or a BxL "
-                         "(batch x lane) 2-D placement, e.g. 4x2")
+    ap.add_argument("--mesh", type=parse_mesh, default=None,
+                    metavar="N|BxL|auto",
+                    help="shard over N devices (batch-only), a BxL "
+                         "(batch x lane) 2-D placement (e.g. 4x2), "
+                         "'auto' (per-bucket cost-model placement — the "
+                         "default for unpinned requests), or "
+                         "'auto-suite' (one cost-model shape suite-wide)")
     ap.add_argument("--row-width", type=int, default=None)
     ap.add_argument("--metric", default=None,
                     help="gbs column: measured|modeled")

@@ -256,24 +256,30 @@ class SpatterDaemon:
             return self._placements[key]
 
     def _resolve_mesh(self, req: SuiteRequest, patterns):
-        """The request's concrete placement, auto-selected when unpinned.
+        """The request's placement, auto-selected when unpinned.
 
-        An explicit ``mesh=N``/``[b, l]`` resolves exactly as before;
-        ``mesh="auto"`` and requests that pass no ``mesh=`` at all go
-        through the §15 cost model (``analysis.cost.auto_placement``):
-        the min-predicted-traffic shape for THIS suite's plan over the
-        visible devices.  The selection only names a shape — placement
-        strings and ExecKeys are exactly what an explicit ``--mesh BxL``
-        request would produce, so warm repeats stay compile-free and
+        An explicit ``mesh=N``/``[b, l]`` resolves exactly as before.
+        ``mesh="auto-suite"`` goes through the §15 cost model for ONE
+        min-predicted-traffic shape for the whole suite (the pre-PR-10
+        auto behavior).  ``mesh="auto"`` — and requests that pass no
+        ``mesh=`` at all — returns the literal string: the run paths
+        resolve it per bucket against the built plan
+        (``plan.auto_placements``, DESIGN.md §16).  Either way the
+        selection only names plain (batch, lane) shapes — placement
+        strings and ExecKeys are exactly what explicit ``--mesh BxL``
+        requests would produce, so warm repeats stay compile-free and
         digests bit-identical.  Single device (or no traffic win from
         sharding) resolves to ``None``, the unplaced fast path.
         """
-        if req.mesh == "auto" or not req.mesh:
+        if req.mesh == "auto-suite":
             from repro.analysis.cost import auto_placement
-            shape = auto_placement(patterns)
+            shape = auto_placement(patterns, backend=req.backend,
+                                   row_width=req.row_width)
             if shape is None:
                 return None
             return self._placement(tuple(shape), req.mesh_axis)
+        if req.mesh == "auto" or not req.mesh:
+            return "auto"
         return self._placement(req.mesh, req.mesh_axis)
 
     def _stream_ref_for(self, req: SuiteRequest):
@@ -342,6 +348,11 @@ class SpatterDaemon:
         t0 = time.perf_counter()
         stream_ref = self._stream_ref_for(req) if req.stream_r else None
         plan = SuitePlan.build(patterns)
+        if isinstance(mesh, str):          # "auto": per-bucket cost model
+            from repro.core.plan import auto_placements
+            mesh = auto_placements(plan, mesh, mesh_axis=req.mesh_axis,
+                                   backend=req.backend,
+                                   row_width=req.row_width)
         works = make_work(plan, backend=req.backend, runs=req.runs,
                           row_width=req.row_width, mode=req.mode,
                           seed=req.seed, placement=mesh, digest=req.digest)
@@ -392,6 +403,25 @@ class SpatterDaemon:
     def _response(self, req: SuiteRequest, stats, mesh, *, hits: int,
                   misses: int, serve: dict | None,
                   elapsed_s: float) -> dict:
+        # the serial path hands the unresolved "auto" string through
+        # (run_suite resolved its own copy); re-resolve here for
+        # reporting — the per-bucket selection is a pure function of
+        # (plan, backend, row_width, devices), so this names exactly the
+        # placements the run used
+        if isinstance(mesh, str):
+            from repro.core.plan import auto_placements
+            mesh = auto_placements(stats.plan, mesh,
+                                   mesh_axis=req.mesh_axis,
+                                   backend=req.backend,
+                                   row_width=req.row_width)
+        if isinstance(mesh, list):
+            pad_waste = stats.plan.pad_waste_for(mesh)
+            placement = [m.placement if m is not None else "single"
+                         for m in mesh]
+        else:
+            pad_waste = stats.plan.pad_waste(
+                *(mesh.grid if mesh is not None else (1, 1)))
+            placement = mesh.placement if mesh is not None else "single"
         return {
             "ok": True,
             "stats": stats.to_json(req.metric),
@@ -409,12 +439,11 @@ class SpatterDaemon:
                 # lower bound when best_batch serves a larger warm
                 # executable (member bandwidth attribution already uses
                 # the actual launched batch, plan.run_plan)
-                "pad_waste": stats.plan.pad_waste(
-                    *(mesh.grid if mesh is not None else (1, 1))),
-                # the placement actually used — for mesh="auto" (and
-                # unpinned requests) this is the cost model's choice
-                "placement": (mesh.placement if mesh is not None
-                              else "single"),
+                "pad_waste": pad_waste,
+                # the placement(s) actually used — for mesh="auto" (and
+                # unpinned requests) a per-bucket list of the cost
+                # model's choices, in bucket order
+                "placement": placement,
             },
             # scheduler telemetry: queued_ms, launches, coalesced_launches
             # (null on the workers=0 baseline path)
@@ -445,13 +474,21 @@ class SpatterDaemon:
         patterns = req.build_patterns()
         mesh = self._resolve_mesh(req, patterns)
         plan = SuitePlan.build(patterns)
+        if isinstance(mesh, str):          # "auto": per-bucket cost model
+            from repro.core.plan import auto_placements
+            mesh = auto_placements(plan, mesh, mesh_axis=req.mesh_axis,
+                                   backend=req.backend,
+                                   row_width=req.row_width)
+        placements = (mesh if isinstance(mesh, list)
+                      else [mesh] * len(plan.buckets))
         units = enumerate_executables(plan, backend=req.backend,
                                       row_width=req.row_width, mode=req.mode,
                                       placement=mesh)
         before = self.cache.stats()
         compiled = 0
-        for bucket, (key, builder, _) in zip(plan.buckets, units):
-            fb = (bucket_builder("xla", bucket.spec, key.mode, mesh)
+        for bucket, pl_b, (key, builder, _) in zip(plan.buckets, placements,
+                                                   units):
+            fb = (bucket_builder("xla", bucket.spec, key.mode, pl_b)
                   if req.backend != "xla" else None)
             fn, served, built, _ = self.cache.serve_poly_info(key, builder,
                                                               fb)
@@ -459,8 +496,8 @@ class SpatterDaemon:
             # first-call at the SERVED batch (best_batch may be larger)
             args = tuple(jnp.zeros(a.shape, a.dtype)
                          for a in key_avals(served))
-            if mesh is not None:
-                args = mesh.place(key.kind, args)
+            if pl_b is not None:
+                args = pl_b.place(key.kind, args)
             jax.block_until_ready(fn(*args))
         delta = self.cache.stats().delta(before)
         with self._state_lock:

@@ -79,22 +79,23 @@ WIRE_METRICS = ("measured", "measured_cpu_gbs", "modeled",
 
 def parse_mesh(spec: str) -> "int | str | tuple[int, int]":
     """CLI mesh spec -> wire value: ``"8"`` -> 8, ``"4x2"`` -> (4, 2),
-    ``"auto"`` -> ``"auto"`` (cost-model placement selection).
+    ``"auto"`` -> ``"auto"`` (per-bucket cost-model placement),
+    ``"auto-suite"`` -> one cost-model shape for the whole suite.
 
     Stays stdlib-only (the jax-free client parses ``--mesh`` with this);
     full validation happens in ``SuiteRequest`` like every other field.
     """
     s = spec.strip().lower()
-    if s == "auto":
-        return "auto"
+    if s in ("auto", "auto-suite"):
+        return s
     try:
         if "x" in s:
             b, l = s.split("x")
             return int(b), int(l)
         return int(s)
     except ValueError:
-        raise ValueError(f"mesh must be N, BxL, or 'auto' (e.g. 8 or "
-                         f"4x2), got {spec!r}") from None
+        raise ValueError(f"mesh must be N, BxL, 'auto', or 'auto-suite' "
+                         f"(e.g. 8 or 4x2), got {spec!r}") from None
 
 
 # the declared index-buffer length is bounded much tighter than lanes:
@@ -147,7 +148,8 @@ class SuiteRequest:
     metric: str = "measured"
     row_width: int = 1
     mesh: int | str | list = 0  # N (batch-only), [b, l] 2-D placement,
-                                # or "auto" (cost-model selection);
+                                # "auto" (per-bucket cost model), or
+                                # "auto-suite" (one suite-wide shape);
                                 # normalized to int | str | tuple
     mesh_axis: str = "data"
     seed: int = 0
@@ -206,16 +208,17 @@ class SuiteRequest:
             raise ValueError(f"deadline_ms must be an int in "
                              f"[0, 86400000], got {self.deadline_ms!r}")
         # mesh: N devices on the pattern-batch axis, [b, l] for a 2-D
-        # (batch x lane) placement, or the literal "auto" (the daemon
-        # resolves it through the §15 cost model).  Validated HERE —
-        # before the daemon's run lock, like everything else — and the
-        # daemon additionally checks b*l against the visible device
-        # count outside the lock.
+        # (batch x lane) placement, "auto" (per-bucket §15 cost-model
+        # selection), or "auto-suite" (one cost-model shape for the
+        # whole suite).  Validated HERE — before the daemon's run lock,
+        # like everything else — and the daemon additionally checks b*l
+        # against the visible device count outside the lock.
         if isinstance(self.mesh, list):
             object.__setattr__(self, "mesh", tuple(self.mesh))
         mesh = self.mesh
         mesh_ok = (isinstance(mesh, int) and not isinstance(mesh, bool)
-                   and 0 <= mesh <= MAX_MESH_DIM) or mesh == "auto"
+                   and 0 <= mesh <= MAX_MESH_DIM) \
+            or mesh in ("auto", "auto-suite")
         if isinstance(mesh, tuple):
             mesh_ok = (len(mesh) == 2 and all(
                 isinstance(s, int) and not isinstance(s, bool)
@@ -223,7 +226,7 @@ class SuiteRequest:
         if not mesh_ok:
             raise ValueError(f"mesh must be an int >= 0, a [batch, lane] "
                              f"pair of ints >= 1 (dims <= {MAX_MESH_DIM}), "
-                             f"or 'auto', got {self.mesh!r}")
+                             f"'auto', or 'auto-suite', got {self.mesh!r}")
         if not isinstance(self.seed, int) or isinstance(self.seed, bool) \
                 or self.seed < 0:
             raise ValueError(f"seed must be an int >= 0, got {self.seed!r}")

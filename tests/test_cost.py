@@ -98,6 +98,31 @@ def test_lane_shards_replicate_the_table():
     assert split["device_bytes"] > single["device_bytes"]
 
 
+def test_lane_sharded_pallas_charges_no_replication():
+    # §16: the pallas lane path is a manual shard_map — the table is
+    # device-local by construction, so the GSPMD all-gather term the
+    # other backends pay never materializes
+    for kind, mode in (("gather", ""), ("scatter", "store")):
+        key = ExecKey(backend="pallas", kind=kind, idx_len=64, footprint=16,
+                      dtype="float32", row_width=1, mode=mode, batch=2,
+                      placement="lane:lane=8/8dev")
+        twin = dataclasses.replace(key, backend="xla")
+        uc, uc_x = C.key_cost(key), C.key_cost(twin)
+        assert uc.replicated_bytes == 0
+        assert uc_x.replicated_bytes > 0
+        # everything except the replication term stays backend-invariant
+        assert uc.io_bytes == uc_x.io_bytes
+        assert uc.device_bytes == uc.io_bytes
+    # and the selection model therefore ranks lane splits differently
+    # per backend: shape_cost must be told whose launch it is pricing
+    plan = _small_plan()
+    split_x = C.shape_cost(plan, (1, 8), backend="xla")
+    split_p = C.shape_cost(plan, (1, 8), backend="pallas")
+    assert split_x["replicated_bytes"] > 0
+    assert split_p["replicated_bytes"] == 0
+    assert split_p["device_bytes"] < split_x["device_bytes"]
+
+
 def test_shape_cost_matches_key_cost_sum():
     plan = _small_plan()
     agg = C.shape_cost(plan, (1, 1))
@@ -270,8 +295,19 @@ def test_cost_plan_calibrated_predictions():
 def test_cost_suite_file_auto_records_choice():
     report = C.cost_suite_file(DEMO, mesh="auto", backends=("xla",))
     assert report.ok, report.summary()
-    assert report.meta["auto"] == {DEMO: "single"}
+    # per-bucket auto on one device: every bucket resolves to "single"
+    choices = report.meta["auto"][DEMO]["xla"]
+    assert isinstance(choices, list) and choices
+    assert all(c == "single" for c in choices)
     # auto resolved to single-device: unplaced ExecKeys
+    assert all(u.placement == "" for u in report.units)
+
+
+def test_cost_suite_file_auto_suite_records_choice():
+    report = C.cost_suite_file(DEMO, mesh="auto-suite", backends=("xla",))
+    assert report.ok, report.summary()
+    # one suite-wide choice (the pre-PR-10 auto): a single string
+    assert report.meta["auto"][DEMO]["xla"] == "single"
     assert all(u.placement == "" for u in report.units)
 
 

@@ -69,6 +69,24 @@ def test_rule_fires_single_pallas_call_per_bucket():
     assert "expected 1" in hits[0].message
 
 
+def test_rule_fires_lane_pallas_launch_outside_shard_map():
+    # exactly one launch, but at TOP level of a lane-sharded key: the
+    # count census passes and the §16 shard_map census must catch the
+    # GSPMD-routed fallback (no real devices needed — the rule reads
+    # the jaxpr, not the mesh)
+    fn = jax.jit(_raw_batched_fn("pallas", "gather", ""))
+    table = jnp.zeros((2, 9, 1))
+    idx = jnp.zeros((2, 8), jnp.int32)
+    unit = unit_for(fn, (table, idx), backend="pallas", kind="gather",
+                    placement="lane:lane=2/2dev")
+    hits = _fired(run_rules(unit, ["single-pallas-call-per-bucket"]),
+                  "single-pallas-call-per-bucket")
+    assert "GSPMD-routed" in hits[0].message
+    # the same executable under an honest single-device key: clean
+    ok = unit_for(fn, (table, idx), backend="pallas", kind="gather")
+    assert run_rules(ok, ["single-pallas-call-per-bucket"]) == []
+
+
 def test_rule_fires_no_host_callback():
     def cb(x):
         return np.asarray(x)
@@ -535,6 +553,42 @@ MATRIX_8DEV = textwrap.dedent("""\
     for mesh in ((8, 1), (4, 2), (1, 8)):
         r = lint_suite_file(%(demo)r, mesh=mesh)
         assert r.ok and r.n_violations == 0, r.summary()
+
+    # seeded §16 violations: the rule halves that walk INTO shard_map
+    # bodies, which need a real lane mesh to trace
+    import jax.numpy as jnp
+    from repro.analysis.lint import run_rules, unit_for
+    from repro.core import make_pattern
+    from repro.core.plan import SuitePlan, enumerate_executables
+
+    plan = SuitePlan.build([make_pattern("UNIFORM:8:1", kind="gather",
+                                         delta=8, count=64, name="g")])
+    key, builder, avals = next(iter(enumerate_executables(
+        plan, backend="pallas", dtype=jnp.float32, mode="store",
+        placement=Placement.create((1, 8)))))
+    lane_fn = builder()
+
+    # (1) double launch: two shard_map'd kernels per bucket — the count
+    # census sees both because the walk descends into shard_map bodies
+    double = jax.jit(lambda *a: lane_fn(*a) + lane_fn(*a))
+    unit = unit_for(double, avals, backend="pallas", kind="gather",
+                    placement=key.placement)
+    viol = run_rules(unit, ["single-pallas-call-per-bucket"])
+    assert any("2 pallas_call" in v.message for v in viol), viol
+
+    # (2) mesh drift: the executable shard_maps over {lane: 8} but the
+    # key placement promises a 4x2 split — same device count, so only
+    # the shard_map-mesh census can tell them apart
+    lying = unit_for(lane_fn, avals, backend="pallas", kind="gather",
+                     placement="data=4xlane=2/8dev")
+    viol = run_rules(lying, ["sharding-spec-consistency"])
+    assert any("shard_map splits axes" in v.message for v in viol), viol
+    # honest key on the same executable: the shard_map census is clean
+    honest = unit_for(lane_fn, avals, backend="pallas", kind="gather",
+                      placement=key.placement)
+    assert not any("shard_map" in v.message
+                   for v in run_rules(honest,
+                                      ["sharding-spec-consistency"]))
 
     # seeded pad-waste violation through both CLI front-ends: exit 1
     bad = [{"name": "skinny", "kernel": "Gather",

@@ -369,11 +369,15 @@ ACCEPTANCE_2D = textwrap.dedent("""\
     # count caps per backend: bit-identity is count-independent, and the
     # suites' full counts are an xla regime here (CI smokes them via the
     # CLI) — onehot materializes an (N, F) one-hot per pattern, scalar is
-    # a per-lane loop, and a lane-sharded pallas_call is opaque to the
-    # partitioner (GSPMD runs it replicated, ~n_dev x the work in
-    # interpret mode — correct, just slow; see DESIGN.md §11), so those
-    # three run the same suite FILES at small counts
+    # a per-lane loop, and pallas runs every grid step through the
+    # interpreter off-TPU, so those three run the same suite FILES at
+    # small counts.  A lane-sharded pallas launch routes through the §16
+    # manual shard_map (each device runs the kernel on its local shard —
+    # the old GSPMD-replicated caveat is retired), so pallas exercises
+    # lane axes here too.
     CAPS = {"xla": 4096, "pallas": 128, "scalar": 256, "onehot": 256}
+    SHAPES = {"xla": ((4, 2), (2, 4)), "pallas": ((4, 2), (1, 8)),
+              "scalar": ((4, 2),), "onehot": ((4, 2),)}
 
     def capped(path, cap):
         return [dataclasses.replace(p, count=min(p.count, cap))
@@ -387,7 +391,7 @@ ACCEPTANCE_2D = textwrap.dedent("""\
                             cache=ExecutorCache(), digest=True)
             d_ref = [r.out_digest for r in ref.results]
             cache = ExecutorCache()
-            for shape in ((4, 2), (2, 4)) if backend == "xla" else ((4, 2),):
+            for shape in SHAPES[backend]:
                 got = run_suite(pats, backend=backend, runs=1, cache=cache,
                                 mesh=shape, digest=True)
                 assert [r.out_digest for r in got.results] == d_ref, (
@@ -399,6 +403,55 @@ ACCEPTANCE_2D = textwrap.dedent("""\
             assert cache.stats().misses == m, (name, backend)
             assert [r.out_digest for r in again.results] == d_ref
         print(name, "OK")
+
+    # §16 launch census: the lane-sharded pallas executable carries its
+    # single pallas_call INSIDE a shard_map over the lane mesh — the
+    # kernel really runs on every device, nothing falls back to a
+    # GSPMD-partitioned (or replicated) top-level launch
+    import jax.numpy as jnp
+    from repro.core.plan import SuitePlan, enumerate_executables
+    from repro.core.tracing import (count_primitives, shard_map_meshes,
+                                    shard_map_pallas_calls)
+    pats = capped(%(suites)r + "/demo.json", 128)
+    plan = SuitePlan.build(pats)
+    for shape in ((1, 8), (4, 2)):
+        pl = Placement.create(shape)
+        for key, builder, avals in enumerate_executables(
+                plan, backend="pallas", dtype=jnp.float32, mode="store",
+                placement=pl):
+            jx = jax.make_jaxpr(builder())(*avals)
+            # exactly one launch, and it lives INSIDE the shard_map body
+            # (count_primitives walks the whole jaxpr, so total == inside
+            # means no top-level GSPMD-routed launch remains)
+            assert count_primitives(jx).get("pallas_call", 0) == 1, shape
+            assert shard_map_pallas_calls(jx) == 1, (shape, key)
+            meshes = shard_map_meshes(jx)
+            assert any(m.get("lane") == shape[1] for m in meshes), (
+                shape, meshes)
+    print("census OK")
+
+    # §16 auto placement: per-bucket "auto" equals its hand-placed twins
+    # — same ExecKeys (the twin run compiles nothing on the same cache),
+    # same digests
+    from repro.core.plan import auto_placements
+    for backend in ("xla", "pallas"):
+        pats = capped(%(suites)r + "/demo.json", CAPS[backend])
+        plan = SuitePlan.build(pats)
+        ref = run_suite(pats, backend=backend, runs=1,
+                        cache=ExecutorCache(), digest=True)
+        d_ref = [r.out_digest for r in ref.results]
+        cache = ExecutorCache()
+        got = run_suite(pats, backend=backend, runs=1, cache=cache,
+                        mesh="auto", digest=True)
+        assert [r.out_digest for r in got.results] == d_ref, backend
+        twins = auto_placements(plan, "auto", backend=backend)
+        assert len(twins) == plan.n_buckets
+        m = cache.stats().misses
+        again = run_suite(pats, backend=backend, runs=1, cache=cache,
+                          mesh=twins, digest=True)
+        assert cache.stats().misses == m, backend     # identical ExecKeys
+        assert [r.out_digest for r in again.results] == d_ref, backend
+    print("auto twin OK")
 
     # non-pow2 lane axis: pad_lanes pads the launched lane dim to a shard
     # multiple; results still bit-identical

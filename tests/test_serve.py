@@ -282,16 +282,30 @@ def test_cost_endpoint_degrades_on_restored_entries(tmp_path):
 
 
 def test_mesh_auto_request_resolves_and_stays_warm(served):
-    # mesh="auto" on the wire: the daemon resolves the placement via the
-    # §15 cost model; on one device that is "single", so the ExecKeys —
-    # and therefore the warm cache and the digests — match an unpinned
-    # request exactly
+    # mesh="auto" on the wire: the daemon resolves a placement per bucket
+    # via the §15 cost model; on one device that is "single" everywhere,
+    # so the ExecKeys — and therefore the warm cache and the digests —
+    # match an unpinned request exactly
     r1 = served.run_suite(SUITE, runs=1)
     d1 = [t["digest"] for t in r1["stats"]["table"]]
     r2 = served.run_suite(SUITE, runs=1, mesh="auto")
     assert r2["ok"]
-    assert r2["plan"]["placement"] == "single"
+    placement = r2["plan"]["placement"]
+    assert isinstance(placement, list) and set(placement) == {"single"}
+    assert len(placement) == r2["plan"]["n_buckets"]
     assert r2["cache"]["misses"] == 0              # same ExecKeys as r1
+    assert [t["digest"] for t in r2["stats"]["table"]] == d1
+
+
+def test_mesh_auto_suite_request_picks_one_shape(served):
+    # the escape hatch: mesh="auto-suite" keeps the pre-PR-10 behaviour
+    # of one placement for the whole suite, reported as a plain string
+    r1 = served.run_suite(SUITE, runs=1)
+    d1 = [t["digest"] for t in r1["stats"]["table"]]
+    r2 = served.run_suite(SUITE, runs=1, mesh="auto-suite")
+    assert r2["ok"]
+    assert r2["plan"]["placement"] == "single"
+    assert r2["cache"]["misses"] == 0
     assert [t["digest"] for t in r2["stats"]["table"]] == d1
 
 
